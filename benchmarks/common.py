@@ -1,0 +1,66 @@
+"""Shared benchmark driver for the DES-based paper figures.
+
+All figures run scaled-down op counts (DES on one core); every knob that
+determines the paper's RATIOS (sharing, skew, locality, read mix, cache
+size relative to data) is preserved.  Each run prints a CSV row:
+
+    figure,series,x,metric,value
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+
+from repro.apps.btree import BLinkTree                     # noqa: E402
+from repro.apps.txn import TxnConfig, TxnEngine            # noqa: E402
+from repro.apps.workloads import (MicroConfig, TPCCConfig,  # noqa: E402
+                                  TPCCTables, YCSBConfig, micro_worker,
+                                  tpcc_worker, ycsb_worker)
+from repro.core import (ClusterConfig, GAMConfig,           # noqa: E402
+                        SELCCConfig, SELCCLayer)
+
+HARD_LIMIT = 300.0          # sim-seconds safety net
+
+
+def build_layer(protocol: str, n_compute: int, threads: int,
+                cache_entries: int = 4096, consistency: str = "SEQ",
+                seed: int = 11) -> SELCCLayer:
+    selcc = SELCCConfig(cache_capacity=cache_entries)
+    gam = GAMConfig(cache_capacity=cache_entries, consistency=consistency)
+    return SELCCLayer(ClusterConfig(
+        n_compute=n_compute, n_memory=max(2, n_compute),
+        threads_per_node=threads, protocol=protocol, selcc=selcc, gam=gam,
+        seed=seed))
+
+
+def run_micro(protocol: str, n_compute: int, threads: int,
+              mcfg: MicroConfig, cache_entries: int = 4096,
+              consistency: str = "SEQ", seed: int = 11):
+    layer = build_layer(protocol, n_compute, threads, cache_entries,
+                        consistency, seed)
+    gcls = layer.allocate_many(mcfg.n_gcls)
+    procs = []
+    for node in layer.nodes:
+        for t in range(threads):
+            procs.append(layer.env.process(micro_worker(
+                node, gcls, mcfg, node.node_id, n_compute, t, seed)))
+    layer.env.run_until_complete(procs, hard_limit=HARD_LIMIT)
+    return layer
+
+
+def emit(figure: str, series: str, x, metric: str, value) -> None:
+    print(f"{figure},{series},{x},{metric},{value:.6g}"
+          if isinstance(value, float) else
+          f"{figure},{series},{x},{metric},{value}", flush=True)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.wall = time.time() - self.t0

@@ -1,0 +1,61 @@
+"""Fig. 10 — YCSB over the B-link tree: SELCC vs SEL.
+
+Paper claims: uniform 3.75-6.28x over SEL (immutable internal nodes stay
+cached); skewed ~10x (hot leaves cached too).  Sherman/DEX are external
+systems and are represented qualitatively in EXPERIMENTS.md (SEL here is
+the no-cache lower bound the paper also uses).
+"""
+
+from __future__ import annotations
+
+from .common import YCSBConfig, build_layer, emit
+from repro.apps.btree import BLinkTree
+from repro.apps.workloads import ycsb_worker
+
+RATIOS = {"read_only": 1.0, "read_int": 0.95, "write_int": 0.5,
+          "write_only": 0.0}
+
+
+def _preload(layer, n_keys: int):
+    tree = BLinkTree(layer, layer.nodes[0])
+    def load():
+        for k in range(0, n_keys, 1):
+            yield from tree.insert(k, k)
+    p = layer.env.process(load())
+    layer.env.run_until_complete([p], hard_limit=1e4)
+    return tree
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    n_keys = 5_000 if quick else 20_000
+    ratios = {k: RATIOS[k] for k in
+              (("read_int", "write_int") if quick else RATIOS)}
+    for dist, theta in (("uniform", 0.0), ("zipf", 0.99)):
+        for rname, rr in ratios.items():
+            for proto in ("selcc", "sel"):
+                layer = build_layer(proto, 8, 8, cache_entries=2048)
+                _preload(layer, n_keys)
+                t_load = layer.env.now
+                ycfg = YCSBConfig(n_keys=n_keys, read_ratio=rr,
+                                  zipf_theta=theta,
+                                  ops_per_thread=30 if quick else 60)
+                procs = []
+                for node in layer.nodes:
+                    tree = BLinkTree(layer, node)
+                    for t in range(8):
+                        procs.append(layer.env.process(ycsb_worker(
+                            tree, ycfg, node.node_id, t, seed=5)))
+                layer.env.run_until_complete(procs, hard_limit=1e4)
+                ops = 8 * 8 * ycfg.ops_per_thread
+                thpt = ops / (layer.env.now - t_load)
+                emit("fig10", f"{proto}_{dist}", rname, "mops", thpt / 1e6)
+                out[(proto, dist, rname)] = thpt
+        for rname in ratios:
+            emit("fig10", dist, rname, "selcc_over_sel",
+                 out[("selcc", dist, rname)] / out[("sel", dist, rname)])
+    return out
+
+
+if __name__ == "__main__":
+    main()

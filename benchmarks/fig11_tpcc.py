@@ -1,0 +1,55 @@
+"""Fig. 11 — TPC-C with 2PL / TO / OCC over SELCC vs SEL.
+
+Paper claims: SELCC up to 28.2x (read queries), 6.12x (updates), 3.39x
+(mix) over SEL; TO weak on read-only queries (rts updates invalidate
+caches); OCC < 2PL (double latching).
+"""
+
+from __future__ import annotations
+
+from .common import build_layer, emit
+from repro.apps.txn import TxnConfig, TxnEngine
+from repro.apps.workloads import TPCCConfig, TPCCTables, tpcc_worker
+
+QUERIES = {1: "Q1_neworder", 2: "Q2_payment", 3: "Q3_orderstatus",
+           4: "Q4_delivery", 5: "Q5_stocklevel", 0: "mix"}
+
+
+def run_one(proto: str, algo: str, query: int, quick: bool):
+    layer = build_layer(proto, 8, 8, cache_entries=8192)
+    tcfg = TPCCConfig(warehouses=32,
+                      txns_per_thread=10 if quick else 25)
+    tables = TPCCTables(tcfg)
+    engines = [TxnEngine(layer, n, TxnConfig(algo=algo), tables.n_tuples)
+               for n in layer.nodes]
+    procs = []
+    for ni, e in enumerate(engines):
+        for t in range(8):
+            procs.append(layer.env.process(tpcc_worker(
+                e, tables, tcfg, query, ni, 8, t, seed=3)))
+    layer.env.run_until_complete(procs, hard_limit=1e4)
+    commits = sum(e.stats.commits for e in engines)
+    aborts = sum(e.stats.aborts for e in engines)
+    return commits / layer.env.now, commits, aborts
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    queries = [3, 1, 0] if quick else [1, 2, 3, 4, 5, 0]
+    for q in queries:
+        for algo in ("2pl", "to", "occ"):
+            for proto in ("selcc", "sel"):
+                thpt, commits, aborts = run_one(proto, algo, q, quick)
+                emit("fig11", f"{proto}_{algo}", QUERIES[q], "ktxn",
+                     thpt / 1e3)
+                emit("fig11", f"{proto}_{algo}", QUERIES[q], "abort_rate",
+                     aborts / max(1, commits + aborts))
+                out[(proto, algo, q)] = thpt
+        for algo in ("2pl", "to", "occ"):
+            emit("fig11", algo, QUERIES[q], "selcc_over_sel",
+                 out[("selcc", algo, q)] / out[("sel", algo, q)])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Fig. 12 — fully-shared SELCC vs partitioned SELCC + 2PC, with WAL.
+
+Paper claims: partitioned wins at 0% cross-shard; its throughput decays
+with the distribution ratio (2 disk syncs per participant), while
+fully-shared (no 2PC) stays flat.
+"""
+
+from __future__ import annotations
+
+from .common import build_layer, emit
+from repro.apps.txn import TxnConfig, TxnEngine
+from repro.apps.workloads import TPCCConfig, TPCCTables, tpcc_worker
+
+
+def run_one(partitioned: bool, dist_ratio: float, quick: bool):
+    layer = build_layer("selcc", 8, 8, cache_entries=8192)
+    tcfg = TPCCConfig(warehouses=32, distribution_ratio=dist_ratio,
+                      txns_per_thread=8 if quick else 20)
+    tables = TPCCTables(tcfg)
+    engines = [TxnEngine(layer, n,
+                         TxnConfig(algo="2pl", wal=True,
+                                   partitioned=partitioned),
+                         tables.n_tuples)
+               for n in layer.nodes]
+    for e in engines:
+        e.partition_fn = tables.partition_of
+    procs = []
+    for ni, e in enumerate(engines):
+        for t in range(8):
+            # Q1/Q2 mix as in the paper's Fig. 12
+            q = 1 if (t % 2 == 0) else 2
+            procs.append(layer.env.process(tpcc_worker(
+                e, tables, tcfg, q, ni, 8, t, seed=9)))
+    layer.env.run_until_complete(procs, hard_limit=1e5)
+    commits = sum(e.stats.commits for e in engines)
+    return commits / layer.env.now
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    ratios = [0.0, 0.5] if quick else [0.0, 0.2, 0.5, 1.0]
+    for dr in ratios:
+        for mode, part in (("fully_shared", False), ("partitioned", True)):
+            thpt = run_one(part, dr, quick)
+            emit("fig12", mode, dr, "ktxn", thpt / 1e3)
+            out[(mode, dr)] = thpt
+    return out
+
+
+if __name__ == "__main__":
+    main()

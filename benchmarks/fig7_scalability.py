@@ -1,0 +1,49 @@
+"""Fig. 7 — SELCC scalability over compute nodes, by sharing ratio.
+
+Paper claims validated here:
+  * near-linear read-heavy scaling regardless of sharing ratio;
+  * write-heavy degradation of fully-shared vs fully-partitioned at 8
+    nodes ~ 16/14% (8 GB cache scale);
+  * 8-node speedup over 1 node ~ 6.7x (write-int) / 6.9x (write-only);
+  * invalidation-message op fraction (the bar series).
+"""
+
+from __future__ import annotations
+
+from .common import MicroConfig, emit, run_micro
+
+NODES = [1, 2, 4, 8]
+RATIOS = {"read_only": 1.0, "read_int": 0.95, "write_int": 0.5,
+          "write_only": 0.0}
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    nodes_list = [1, 8] if quick else NODES
+    for rname, rr in RATIOS.items():
+        for sr in (0.0, 1.0):
+            for n in nodes_list:
+                mcfg = MicroConfig(n_gcls=24_000, sharing_ratio=sr,
+                                   read_ratio=rr,
+                                   ops_per_thread=150 if quick else 250)
+                layer = run_micro("selcc", n, 16, mcfg)
+                thpt = layer.throughput()
+                emit("fig7", f"sr{sr:g}_{rname}", n, "mops", thpt / 1e6)
+                emit("fig7", f"sr{sr:g}_{rname}", n, "inv_ratio",
+                     layer.inv_ratio())
+                out[(rname, sr, n)] = thpt
+    # headline derived numbers
+    for rname in RATIOS:
+        full = out.get((rname, 1.0, 8))
+        part = out.get((rname, 0.0, 8))
+        one = out.get((rname, 1.0, 1))
+        if full and part:
+            emit("fig7", rname, 8, "shared_vs_partitioned",
+                 full / part)
+        if full and one:
+            emit("fig7", rname, 8, "speedup_vs_1node", full / one)
+    return out
+
+
+if __name__ == "__main__":
+    main()

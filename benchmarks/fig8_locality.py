@@ -1,0 +1,40 @@
+"""Fig. 8 — performance under 50% access locality, SELCC vs SEL vs GAM.
+
+Paper claims: SELCC > SEL 1.68x/2.18x (read-int/read-only at high thread
+counts); SELCC > GAM 2.8-5.6x across mixes; GAM's thread scalability
+collapses on writes (memory-node CPU saturation).
+"""
+
+from __future__ import annotations
+
+from .common import MicroConfig, emit, run_micro
+
+RATIOS = {"read_only": 1.0, "read_int": 0.95, "write_int": 0.5,
+          "write_only": 0.0}
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    threads_list = [4, 16] if not quick else [16]
+    for rname, rr in RATIOS.items():
+        for threads in threads_list:
+            mcfg = MicroConfig(n_gcls=24_000, sharing_ratio=1.0,
+                               read_ratio=rr, locality=0.5,
+                               ops_per_thread=100 if quick else 150)
+            for proto in ("selcc", "sel", "gam"):
+                layer = run_micro(proto, 8, threads, mcfg)
+                thpt = layer.throughput()
+                emit("fig8", f"{proto}_{rname}", threads, "mops",
+                     thpt / 1e6)
+                out[(proto, rname, threads)] = thpt
+    t = threads_list[-1]
+    for rname in RATIOS:
+        emit("fig8", rname, t, "selcc_over_sel",
+             out[("selcc", rname, t)] / out[("sel", rname, t)])
+        emit("fig8", rname, t, "selcc_over_gam",
+             out[("selcc", rname, t)] / out[("gam", rname, t)])
+    return out
+
+
+if __name__ == "__main__":
+    main()

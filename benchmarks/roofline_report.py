@@ -1,0 +1,65 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+No computation here — aggregates the compiled-artifact analysis into the
+per-(arch x shape) table for EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "pod16x16", tag: str = ""):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{mesh}{tag}.json"))):
+        r = json.loads(Path(f).read_text())
+        if tag == "" and r.get("tag"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r) -> str:
+    if r.get("status") == "skipped":
+        return (f"{r['arch']:24s} {r['shape']:12s} SKIP "
+                f"({r.get('reason', '')[:60]})")
+    if r.get("status") != "ok":
+        return f"{r['arch']:24s} {r['shape']:12s} ERROR"
+    rl = r["roofline"]
+    ma = r.get("memory_analysis") or {}
+    gb = (ma.get("per_device_total") or 0) / 1e9
+    return (f"{r['arch']:24s} {r['shape']:12s} "
+            f"tc={rl['t_compute_s']:.3g}s tm={rl['t_memory_s']:.3g}s "
+            f"tx={rl['t_collective_s']:.3g}s dom={rl['dominant']:10s} "
+            f"useful={rl['useful_flops_ratio']:.2f} "
+            f"roofline={rl['roofline_fraction']*100:.1f}% "
+            f"mem={gb:.1f}GB")
+
+
+def main(quick: bool = False) -> None:
+    rows = load()
+    print("figure,series,x,metric,value")
+    for r in rows:
+        if r.get("status") == "ok":
+            rl = r["roofline"]
+            key = f"{r['arch']}|{r['shape']}"
+            print(f"roofline,{key},pod16x16,dominant,{rl['dominant']}")
+            print(f"roofline,{key},pod16x16,fraction,"
+                  f"{rl['roofline_fraction']:.4f}")
+    print()
+    print("== single-pod roofline table ==")
+    for r in rows:
+        print(fmt_row(r))
+    multi = load("pod2x16x16")
+    ok = sum(1 for r in multi if r.get("status") == "ok")
+    sk = sum(1 for r in multi if r.get("status") == "skipped")
+    print(f"\nmulti-pod (2x16x16) dry-run: {ok} compiled ok, {sk} skipped, "
+          f"{len(multi) - ok - sk} failed")
+
+
+if __name__ == "__main__":
+    main()

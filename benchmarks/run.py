@@ -1,0 +1,53 @@
+"""Benchmark runner — one module per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--quick] [--only figN,...]``.
+
+Prints ``figure,series,x,metric,value`` CSV rows per figure, plus wall
+time per figure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced op counts (CI mode)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig7,fig8,fig9,fig10,fig11,fig12,"
+                         "roofline")
+    args = ap.parse_args()
+
+    from . import (fig7_scalability, fig8_locality, fig9_skew,
+                   fig10_ycsb_btree, fig11_tpcc, fig12_2pc,
+                   roofline_report)
+    figures = {
+        "fig7": fig7_scalability.main,
+        "fig8": fig8_locality.main,
+        "fig9": fig9_skew.main,
+        "fig10": fig10_ycsb_btree.main,
+        "fig11": fig11_tpcc.main,
+        "fig12": fig12_2pc.main,
+        "roofline": roofline_report.main,
+    }
+    only = [x for x in args.only.split(",") if x]
+    print("figure,series,x,metric,value")
+    for name, fn in figures.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"# {name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr, flush=True)
+            raise
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

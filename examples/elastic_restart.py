@@ -1,0 +1,79 @@
+"""Elastic restart walkthrough: a data-parallel row dies mid-training and
+the job continues on the survivors.
+
+Single-process demo on a 1x1 mesh (the multi-device version runs in
+tests/test_elastic_e2e.py under 8 virtual devices): shows the operator
+flow — heartbeats, failure verdict, elastic plan, checkpoint restore with
+new shardings, batch rescale.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.optim import AdamWConfig
+from repro.runtime import FailureDetector, StragglerWatchdog, \
+    plan_elastic_mesh
+from repro.train import TrainConfig, build_train_step, init_train_state
+
+
+def main():
+    cfg = get_smoke_config("qwen3-1.7b")
+    tcfg = TrainConfig(remat=False, opt=AdamWConfig(
+        lr=1e-3, warmup_steps=2, total_steps=12))
+    mesh = make_local_mesh()
+    step_fn, _, _ = build_train_step(cfg, mesh, tcfg, global_batch=8)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, batch=8, seq_len=64))
+    mgr = CheckpointManager("/tmp/elastic_demo", keep=2)
+    fd = FailureDetector([f"h{i}" for i in range(4)], suspect_after=5,
+                         dead_after=10)
+    dog = StragglerWatchdog()
+
+    print("[phase 1] healthy training on 4 data rows (logical)")
+    for s in range(4):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+        state, m = jit_step(state, batch)
+        for h in ("h0", "h1", "h2", "h3"):
+            fd.beat(h)
+        dog.observe(0.1, slowest_host="h2")
+        print(f"  step {s}: loss {float(m['loss']):.4f}")
+    mgr.save(state, 3)
+    mgr.wait()
+
+    print("[phase 2] h1 stops heartbeating...")
+    fd.last_beat["h1"] -= 100
+    alive, suspect, dead = fd.sweep()
+    print(f"  detector verdict: dead={dead}")
+    plan = plan_elastic_mesh(4, 2, dead_hosts=dead,
+                             host_of_device=lambda d, m: f"h{d}")
+    print(f"  elastic plan: keep rows {plan.data_rows}, "
+          f"batch scale {plan.batch_scale:.2f}")
+
+    print("[phase 3] restore + continue with rescaled batch")
+    new_batch = max(2, int(8 * plan.batch_scale) // 2 * 2)
+    step_fn2, _, _ = build_train_step(cfg, mesh, tcfg,
+                                      global_batch=new_batch)
+    state2, step = mgr.restore(jax.eval_shape(lambda: state))
+    jit2 = jax.jit(step_fn2, donate_argnums=(0,))
+    data2 = SyntheticLM(DataConfig(vocab=cfg.vocab, batch=new_batch,
+                                   seq_len=64))
+    for s in range(step + 1, step + 4):
+        batch = {k: jnp.asarray(v) for k, v in data2.batch_at(s).items()}
+        state2, m = jit2(state2, batch)
+        print(f"  step {s}: loss {float(m['loss']):.4f} "
+              f"(batch {new_batch})")
+    print("[done] training continued across the failure")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .btree import BLinkTree
+from .txn import TxnEngine, TxnConfig
+
+__all__ = ["BLinkTree", "TxnEngine", "TxnConfig"]

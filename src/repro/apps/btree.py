@@ -1,0 +1,210 @@
+"""Concurrent B-link tree over the SELCC Table-1 API (paper Sec. 8.1).
+
+Migration recipe exactly as the paper prescribes: tree nodes align onto
+Global Cache Lines, and the monolithic server's local shared-exclusive
+latches become SELCC_SLock/XLock.  Lehman-Yao right-links make descents
+latch-free-ish (no lock coupling): a reader that lands on a split node
+follows the link.  Runs unchanged over SELCC, SEL, or GAM-backed layers —
+that API parity is the paper's abstraction-layer claim.
+
+Node payloads live in a host-side dict keyed by gaddr; every access
+happens strictly under the corresponding SELCC latch, and the protocol's
+coherence invariant (asserted online) makes that equivalent to reading
+one's own coherent cached copy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+FANOUT = 64
+
+
+@dataclass
+class _Node:
+    leaf: bool
+    keys: list = field(default_factory=list)
+    vals: list = field(default_factory=list)      # children gaddrs or values
+    right: object = None                           # right-link gaddr
+    high: object = None                            # high key (None = +inf)
+
+
+class BLinkTree:
+    def __init__(self, layer, node, fanout: int = FANOUT):
+        """layer: SELCCLayer (allocator); node: the compute-node protocol
+        object this tree instance runs on."""
+        self.layer = layer
+        self.node = node
+        self.fanout = fanout
+        self.content = layer.__dict__.setdefault("_btree_content", {})
+        meta = layer.__dict__.get("_btree_root")
+        if meta is None:
+            root = layer.allocate()
+            self.content[root] = _Node(leaf=True)
+            layer.__dict__["_btree_root"] = root
+        self.stats = {"splits": 0, "link_hops": 0}
+
+    @property
+    def root(self):
+        return self.layer.__dict__["_btree_root"]
+
+    # ------------------------------------------------------------- search
+    def _descend(self, key):
+        """Find the leaf that should hold key (read-latched walk)."""
+        cur = self.root
+        while True:
+            h = yield from self.node.slock(cur)
+            n = self.content[cur]
+            if n.high is not None and key >= n.high and n.right is not None:
+                nxt = n.right
+                yield from self.node.sunlock(h)
+                self.stats["link_hops"] += 1
+                cur = nxt
+                continue
+            if n.leaf:
+                yield from self.node.sunlock(h)
+                return cur
+            i = self._child_index(n, key)
+            nxt = n.vals[i]
+            yield from self.node.sunlock(h)
+            cur = nxt
+
+    @staticmethod
+    def _child_index(n: _Node, key) -> int:
+        i = 0
+        while i < len(n.keys) and key >= n.keys[i]:
+            i += 1
+        return i
+
+    def lookup(self, key):
+        leaf = yield from self._descend(key)
+        while True:
+            h = yield from self.node.slock(leaf)
+            n = self.content[leaf]
+            if n.high is not None and key >= n.high and n.right is not None:
+                nxt = n.right
+                yield from self.node.sunlock(h)
+                self.stats["link_hops"] += 1
+                leaf = nxt
+                continue
+            val = None
+            if key in n.keys:
+                val = n.vals[n.keys.index(key)]
+            yield from self.node.sunlock(h)
+            return val
+
+    # ------------------------------------------------------------- insert
+    def insert(self, key, val):
+        leaf = yield from self._descend(key)
+        while True:
+            h = yield from self.node.xlock(leaf)
+            n = self.content[leaf]
+            if n.high is not None and key >= n.high and n.right is not None:
+                nxt = n.right
+                yield from self.node.xunlock(h)
+                self.stats["link_hops"] += 1
+                leaf = nxt
+                continue
+            self._leaf_put(n, key, val)
+            yield from self.node.write(h)
+            if len(n.keys) <= self.fanout:
+                yield from self.node.xunlock(h)
+                return
+            # split: allocate right sibling, move upper half, link
+            sib = self.layer.allocate()
+            mid = len(n.keys) // 2
+            sep = n.keys[mid]
+            sn = _Node(leaf=n.leaf, keys=n.keys[mid:], vals=n.vals[mid:],
+                       right=n.right, high=n.high)
+            if not n.leaf:
+                sn.keys = n.keys[mid + 1:]
+                sn.vals = n.vals[mid:]
+            self.content[sib] = sn
+            n.keys = n.keys[:mid]
+            n.vals = n.vals[:mid] if n.leaf else n.vals[:mid + 1]
+            n.right = sib
+            n.high = sep
+            self.stats["splits"] += 1
+            yield from self.node.write(h)
+            yield from self.node.xunlock(h)
+            yield from self._insert_parent(leaf, sep, sib)
+            return
+
+    def _leaf_put(self, n: _Node, key, val) -> None:
+        i = 0
+        while i < len(n.keys) and n.keys[i] < key:
+            i += 1
+        if i < len(n.keys) and n.keys[i] == key:
+            n.vals[i] = val
+        else:
+            n.keys.insert(i, key)
+            n.vals.insert(i, val)
+
+    def _insert_parent(self, child, sep, sib):
+        """Install separator; grows a new root when the old root split."""
+        root = self.root
+        if child == root:
+            new_root = self.layer.allocate()
+            self.content[new_root] = _Node(leaf=False, keys=[sep],
+                                           vals=[child, sib])
+            h = yield from self.node.xlock(new_root)
+            yield from self.node.write(h)
+            yield from self.node.xunlock(h)
+            self.layer.__dict__["_btree_root"] = new_root
+            return
+        # find parent by descending for sep (simplified Lehman-Yao)
+        cur = self.root
+        path = []
+        while True:
+            h = yield from self.node.slock(cur)
+            n = self.content[cur]
+            if n.leaf or (n.vals and child in n.vals):
+                yield from self.node.sunlock(h)
+                break
+            i = self._child_index(n, sep)
+            nxt = n.vals[i]
+            path.append(cur)
+            yield from self.node.sunlock(h)
+            cur = nxt
+        target = cur if not self.content[cur].leaf else \
+            (path[-1] if path else self.root)
+        h = yield from self.node.xlock(target)
+        n = self.content[target]
+        i = self._child_index(n, sep)
+        n.keys.insert(i, sep)
+        n.vals.insert(i + 1, sib)
+        yield from self.node.write(h)
+        oversize = len(n.keys) > self.fanout
+        if oversize:
+            sib2 = self.layer.allocate()
+            mid = len(n.keys) // 2
+            sep2 = n.keys[mid]
+            sn = _Node(leaf=False, keys=n.keys[mid + 1:], vals=n.vals[mid + 1:],
+                       right=n.right, high=n.high)
+            self.content[sib2] = sn
+            n.keys = n.keys[:mid]
+            n.vals = n.vals[:mid + 1]
+            n.right = sib2
+            n.high = sep2
+            self.stats["splits"] += 1
+            yield from self.node.write(h)
+            yield from self.node.xunlock(h)
+            yield from self._insert_parent(target, sep2, sib2)
+        else:
+            yield from self.node.xunlock(h)
+
+    # -------------------------------------------------------------- scan
+    def range_scan(self, key, count: int):
+        """Read `count` keys from `key` following leaf links."""
+        leaf = yield from self._descend(key)
+        out = []
+        while leaf is not None and len(out) < count:
+            h = yield from self.node.slock(leaf)
+            n = self.content[leaf]
+            for k, v in zip(n.keys, n.vals):
+                if k >= key and len(out) < count:
+                    out.append((k, v))
+            nxt = n.right
+            yield from self.node.sunlock(h)
+            leaf = nxt
+        return out

@@ -1,0 +1,192 @@
+"""Transaction engines over SELCC (paper Sec. 8.2): 2PL (no-wait), TO,
+OCC — plus the 2PC-partitioned variant of Sec. 9.3.
+
+Tuples are heap-organized into GCLs (``tuples_per_gcl`` per line); every
+tuple access goes through SELCC_SLock/XLock on its GCL.  For 2PL the
+SELCC latches double as the transaction locks (the paper's trick that
+saves RDMA round trips).  TO reads UPDATE the read-timestamp in the
+header — the exact behaviour that makes TO slow on read-only workloads
+in Fig. 11 (every read invalidates peer caches).  OCC latches twice per
+tuple (read phase + validate phase).  Durability: WAL flush latency per
+commit; partitioned mode pays prepare+commit flushes per participant
+(Fig. 12's bottleneck).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class TxnConfig:
+    algo: str = "2pl"                # 2pl | to | occ
+    tuples_per_gcl: int = 8
+    wal: bool = False                # write-ahead log flush on commit
+    partitioned: bool = False        # 2PC across partitions
+    nowait_local: bool = True        # abort on local latch conflict (2PL)
+
+
+@dataclass
+class TxnStats:
+    commits: int = 0
+    aborts: int = 0
+    latency_sum: float = 0.0
+
+
+class TxnEngine:
+    """One engine per compute node."""
+
+    def __init__(self, layer, node, cfg: TxnConfig, n_tuples: int,
+                 ts_counter=None):
+        self.layer = layer
+        self.node = node
+        self.cfg = cfg
+        self.stats = TxnStats()
+        shared = layer.__dict__.setdefault("_txn_shared", {})
+        if "gcls" not in shared:
+            n_gcls = (n_tuples + cfg.tuples_per_gcl - 1) \
+                // cfg.tuples_per_gcl
+            shared["gcls"] = layer.allocate_many(n_gcls)
+            shared["header"] = {}        # tuple_id -> [rts, wts]
+            shared["ts"] = layer.allocate()
+        self.gcls = shared["gcls"]
+        self.header = shared["header"]
+        self.ts_addr = shared["ts"]
+        # partition id per tuple (2PC participant detection); defaults to
+        # the GCL's memory node — workloads install their own (warehouse)
+        self.partition_fn = lambda t: self._gcl_of(t)[0]
+
+    def _gcl_of(self, tuple_id: int):
+        return self.gcls[tuple_id // self.cfg.tuples_per_gcl]
+
+    # ------------------------------------------------------------ execute
+    def run(self, read_set, write_set, thread: int = 0):
+        """Execute one transaction; returns True on commit."""
+        t0 = self.node.env.now
+        algo = self.cfg.algo
+        if algo == "2pl":
+            ok = yield from self._run_2pl(read_set, write_set)
+        elif algo == "to":
+            ok = yield from self._run_to(read_set, write_set)
+        elif algo == "occ":
+            ok = yield from self._run_occ(read_set, write_set)
+        else:
+            raise ValueError(algo)
+        if ok:
+            yield from self._commit_io(read_set, write_set)
+            self.stats.commits += 1
+        else:
+            self.stats.aborts += 1
+        self.stats.latency_sum += self.node.env.now - t0
+        return ok
+
+    def _commit_io(self, read_set, write_set):
+        cost = self.node.fabric.cost
+        if not self.cfg.wal or not write_set:
+            return
+        if self.cfg.partitioned:
+            parts = {self.partition_fn(t) for t in write_set}
+            if len(parts) > 1:
+                # 2PC: prepare flush per participant + commit flush each
+                for _ in range(2 * len(parts)):
+                    yield self.node.env.timeout(cost.wal_flush)
+                return
+        yield self.node.env.timeout(cost.wal_flush)
+
+    def _gcl_sets(self, read_set, write_set):
+        """Tuple sets -> GCL sets (several tuples share a line; a line is
+        latched at most once per txn — X dominates S)."""
+        wg = {self._gcl_of(t) for t in write_set}
+        rg = {self._gcl_of(t) for t in read_set} - wg
+        return sorted(rg), sorted(wg)
+
+    # ---------------------------------------------------------------- 2PL
+    def _run_2pl(self, read_set, write_set):
+        """S2PL no-wait: SELCC latches ARE the locks, held to commit."""
+        held = []
+        rg, wg = self._gcl_sets(read_set, write_set)
+        for g, is_x in sorted([(g, False) for g in rg]
+                              + [(g, True) for g in wg]):
+            if self.cfg.nowait_local and self._local_conflict(g, is_x):
+                yield from self._release(held)
+                return False
+            if is_x:
+                h = yield from self.node.xlock(g)
+                yield from self.node.write(h)
+            else:
+                h = yield from self.node.slock(g)
+            held.append((h, is_x))
+        yield from self._release(held)
+        return True
+
+    def _local_conflict(self, gaddr, want_x: bool) -> bool:
+        cache = getattr(self.node, "cache", None)
+        if cache is None:
+            return False
+        e = cache.entries.get(gaddr)
+        if e is None:
+            return False
+        if want_x:
+            return e.latch.held
+        return e.latch.writer is not None
+
+    def _release(self, held):
+        for h, is_x in reversed(held):
+            if is_x:
+                yield from self.node.xunlock(h)
+            else:
+                yield from self.node.sunlock(h)
+
+    # ----------------------------------------------------------------- TO
+    def _run_to(self, read_set, write_set):
+        ts = yield from self.node.atomic_faa(self.ts_addr, 1)
+        # reads update rts in the header -> exclusive access needed: the
+        # cache-invalidation storm the paper calls out for read queries
+        by_gcl = {}
+        wset = set(write_set)
+        for t in set(read_set) | wset:
+            by_gcl.setdefault(self._gcl_of(t), []).append(t)
+        for g in sorted(by_gcl):
+            h = yield from self.node.xlock(g)
+            for t in by_gcl[g]:
+                rts, wts = self.header.get(t, (0, 0))
+                if t in wset:
+                    if ts < rts or ts < wts:
+                        yield from self.node.xunlock(h)
+                        return False
+                    self.header[t] = (rts, ts)
+                else:
+                    if ts < wts:
+                        yield from self.node.xunlock(h)
+                        return False
+                    self.header[t] = (max(rts, ts), wts)
+            yield from self.node.write(h)      # rts/wts update dirties GCL
+            yield from self.node.xunlock(h)
+        return True
+
+    # ---------------------------------------------------------------- OCC
+    def _run_occ(self, read_set, write_set):
+        # read phase: S latch per GCL, record versions (latch #1)
+        rg, wg = self._gcl_sets(read_set, write_set)
+        snapshots = {}
+        for g in sorted(set(rg) | set(wg)):
+            h = yield from self.node.slock(g)
+            snapshots[g] = h.version
+            yield from self.node.sunlock(h)
+        # validate + write phase: X latch per GCL again (latch #2 — the
+        # double-latching that makes OCC lose to 2PL in Fig. 11)
+        held = []
+        ok = True
+        wgs = set(wg)
+        for g in sorted(snapshots):
+            h = yield from self.node.xlock(g)
+            held.append((h, True, g))
+            if h.version != snapshots[g]:
+                ok = False
+                break
+        if ok:
+            for h, _, g in held:
+                if g in wgs:
+                    yield from self.node.write(h)
+        yield from self._release([(h, x) for h, x, _ in held])
+        return ok

@@ -1,0 +1,190 @@
+"""Workload generators: micro (Sec. 9.1), YCSB (Sec. 9.2),
+TPC-C-lite (Sec. 9.3).
+
+Scaled to DES size: the paper's 16M-op / 50M-key runs shrink ~100x; every
+knob (sharing ratio, read ratio, zipf theta, locality) is preserved so
+the FIGURES' ratios reproduce, not their absolute x-axes.
+"""
+
+from __future__ import annotations
+
+import bisect
+import random
+from dataclasses import dataclass
+
+
+class Zipf:
+    def __init__(self, n: int, theta: float = 0.99):
+        probs = [1.0 / ((i + 1) ** theta) for i in range(n)]
+        s = sum(probs)
+        acc = 0.0
+        self.cdf = []
+        for p in probs:
+            acc += p / s
+            self.cdf.append(acc)
+
+    def sample(self, rng: random.Random) -> int:
+        return bisect.bisect_left(self.cdf, rng.random())
+
+
+@dataclass
+class MicroConfig:
+    n_gcls: int = 24_000            # paper: 24M
+    sharing_ratio: float = 1.0      # fraction accessible by all nodes
+    read_ratio: float = 0.95
+    locality: float = 0.0           # P(repeat previous address)
+    zipf_theta: float = 0.0         # 0 = uniform
+    ops_per_thread: int = 200
+
+
+def micro_worker(node, gcls, cfg: MicroConfig, node_id: int, n_nodes: int,
+                 thread: int, seed: int):
+    """DES generator: one worker thread of the micro-benchmark."""
+    rng = random.Random((seed * 7919 + node_id * 131 + thread) & 0x7FFFFFFF)
+    n = len(gcls)
+    n_shared = int(n * cfg.sharing_ratio)
+    priv = (n - n_shared) // max(1, n_nodes)
+    priv_base = n_shared + node_id * priv
+    zipf = Zipf(n_shared, cfg.zipf_theta) if cfg.zipf_theta else None
+    prev = None
+    for _ in range(cfg.ops_per_thread):
+        if prev is not None and rng.random() < cfg.locality:
+            g = prev
+        elif n_shared and (priv == 0 or rng.random() < cfg.sharing_ratio):
+            i = zipf.sample(rng) if zipf else rng.randrange(n_shared)
+            g = gcls[i]
+        else:
+            g = gcls[priv_base + rng.randrange(max(priv, 1))]
+        prev = g
+        if rng.random() < cfg.read_ratio:
+            yield from node.op_read(g, thread=thread)
+        else:
+            yield from node.op_write(g, thread=thread)
+
+
+@dataclass
+class YCSBConfig:
+    n_keys: int = 200_000           # paper: 50M
+    read_ratio: float = 0.95
+    zipf_theta: float = 0.99
+    ops_per_thread: int = 100
+
+
+def ycsb_worker(tree, cfg: YCSBConfig, node_id: int, thread: int,
+                seed: int):
+    rng = random.Random((seed * 104729 + node_id * 31 + thread)
+                        & 0x7FFFFFFF)
+    zipf = Zipf(cfg.n_keys, cfg.zipf_theta) if cfg.zipf_theta else None
+    for _ in range(cfg.ops_per_thread):
+        k = zipf.sample(rng) if zipf else rng.randrange(cfg.n_keys)
+        if rng.random() < cfg.read_ratio:
+            yield from tree.lookup(k)
+        else:
+            yield from tree.insert(k, (node_id, thread))
+
+
+# ------------------------------------------------------------- TPC-C-lite
+
+@dataclass
+class TPCCConfig:
+    warehouses: int = 32            # paper: 256
+    districts: int = 10
+    customers: int = 300            # per district (scaled from 3000)
+    stock: int = 1000               # per warehouse (scaled from 100k)
+    txns_per_thread: int = 40
+    distribution_ratio: float = 0.0  # P(cross-warehouse access)
+
+
+class TPCCTables:
+    """Tuple-id layout for the lite schema (ids feed TxnEngine)."""
+
+    def __init__(self, cfg: TPCCConfig):
+        self.cfg = cfg
+        c = cfg
+        self.wh0 = 0
+        self.di0 = self.wh0 + c.warehouses
+        self.cu0 = self.di0 + c.warehouses * c.districts
+        self.st0 = self.cu0 + c.warehouses * c.districts * c.customers
+        self.or0 = self.st0 + c.warehouses * c.stock
+        self.n_tuples = self.or0 + c.warehouses * 4096   # order heap
+
+    def warehouse(self, w):
+        return self.wh0 + w
+
+    def district(self, w, d):
+        return self.di0 + w * self.cfg.districts + d
+
+    def customer(self, w, d, cid):
+        return self.cu0 + (w * self.cfg.districts + d) \
+            * self.cfg.customers + cid
+
+    def stock_item(self, w, i):
+        return self.st0 + w * self.cfg.stock + i
+
+    def order_slot(self, w, o):
+        return self.or0 + w * 4096 + (o % 4096)
+
+    def partition_of(self, t: int) -> int:
+        """Warehouse that owns tuple t (2PC participant mapping)."""
+        c = self.cfg
+        if t >= self.or0:
+            return (t - self.or0) // 4096
+        if t >= self.st0:
+            return (t - self.st0) // c.stock
+        if t >= self.cu0:
+            return (t - self.cu0) // (c.districts * c.customers)
+        if t >= self.di0:
+            return (t - self.di0) // c.districts
+        return t - self.wh0
+
+
+def tpcc_txn(tables: TPCCTables, q: int, rng: random.Random, home_w: int):
+    """Returns (read_set, write_set) for query Q1..Q5 (paper's 3 update +
+    2 read mix: Q1=NewOrder Q2=Payment Q4=Delivery update; Q3=OrderStatus
+    Q5=StockLevel read)."""
+    c = tables.cfg
+    def pick_w():
+        if rng.random() < c.distribution_ratio:
+            return rng.randrange(c.warehouses)
+        return home_w
+    d = rng.randrange(c.districts)
+    if q == 1:                                         # NewOrder
+        w = pick_w()
+        items = {tables.stock_item(pick_w(), rng.randrange(c.stock))
+                 for _ in range(10)}
+        reads = [tables.warehouse(w),
+                 tables.customer(w, d, rng.randrange(c.customers))]
+        writes = [tables.district(w, d),
+                  tables.order_slot(w, rng.randrange(4096))] + list(items)
+        return reads, writes
+    if q == 2:                                         # Payment
+        w = pick_w()
+        return ([], [tables.warehouse(w), tables.district(w, d),
+                     tables.customer(w, d, rng.randrange(c.customers))])
+    if q == 3:                                         # OrderStatus (read)
+        w = home_w
+        return ([tables.customer(w, d, rng.randrange(c.customers))]
+                + [tables.order_slot(w, rng.randrange(4096))
+                   for _ in range(5)], [])
+    if q == 4:                                         # Delivery
+        w = home_w
+        return ([], [tables.order_slot(w, rng.randrange(4096))
+                     for _ in range(10)])
+    # Q5: StockLevel (read-heavy scan)
+    w = home_w
+    return ([tables.district(w, d)]
+            + [tables.stock_item(w, rng.randrange(c.stock))
+               for _ in range(50)], [])
+
+
+def tpcc_worker(engine, tables: TPCCTables, cfg: TPCCConfig, query: int,
+                node_id: int, n_nodes: int, thread: int, seed: int):
+    rng = random.Random((seed * 65537 + node_id * 257 + thread)
+                        & 0x7FFFFFFF)
+    homes = [w for w in range(cfg.warehouses) if w % n_nodes == node_id] \
+        or [0]
+    for _ in range(cfg.txns_per_thread):
+        q = query if query else rng.choice([1, 2, 3, 4, 5])
+        home_w = rng.choice(homes)
+        reads, writes = tpcc_txn(tables, q, rng, home_w)
+        yield from engine.run(reads, writes, thread=thread)

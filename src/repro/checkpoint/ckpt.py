@@ -1,0 +1,191 @@
+"""Fault-tolerant checkpointing: sharded, async, integrity-checked.
+
+Layout (one directory per step, atomically published)::
+
+    <dir>/step_000123.tmp/...      while writing
+    <dir>/step_000123/
+        manifest.json              tree structure, shapes, dtypes, crc32s
+        leaf_00000.npy ...         one file per pytree leaf
+
+Design points for 1000+ nodes (documented here, emulated single-process):
+* every host writes only ITS device shards (here: the full array stands
+  in for the shard union); the manifest lists per-leaf checksums so a
+  torn write is detected at restore;
+* publishing is an atomic rename — a crash mid-write never corrupts the
+  latest checkpoint;
+* saves are ASYNC: arrays are snapshotted to host memory on the step
+  thread, serialization happens on a background thread (training
+  continues); ``wait()`` joins before the next save or exit;
+* restore picks the newest VALID step (skips torn/corrupt ones) and can
+  reshard onto a different mesh (elastic restart after node loss).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import zlib
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't round-trip bf16/fp8 through .npy — store raw bytes + dtype
+_EXTENDED = {"bfloat16": ml_dtypes.bfloat16,
+             "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+             "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _to_storable(arr: np.ndarray):
+    if arr.dtype.name in _EXTENDED or arr.dtype.kind == "V":
+        return arr.view(np.uint8), arr.dtype.name
+    return arr, arr.dtype.name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str):
+    if dtype_name in _EXTENDED:
+        return arr.view(_EXTENDED[dtype_name])
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(tree, step: int, directory: str | Path, async_: bool = False):
+    """Returns a join handle (threading.Thread) when async_ else None."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    # snapshot to host (cheap on CPU; device->host copy on TPU)
+    host_leaves = [np.asarray(x) for x in leaves]
+    treedef_str = str(treedef)
+
+    def _write():
+        tmp = directory / f"step_{step:06d}.tmp"
+        final = directory / f"step_{step:06d}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        manifest = {"step": step, "treedef": treedef_str, "leaves": []}
+        for i, arr in enumerate(host_leaves):
+            fname = f"leaf_{i:05d}.npy"
+            storable, dtype_name = _to_storable(arr)
+            np.save(tmp / fname, storable)
+            manifest["leaves"].append({
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": dtype_name,
+                "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+            })
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            import shutil
+            shutil.rmtree(final)
+        tmp.rename(final)                      # atomic publish
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def verify_manifest(step_dir: Path) -> bool:
+    mf = step_dir / "manifest.json"
+    if not mf.exists():
+        return False
+    try:
+        manifest = json.loads(mf.read_text())
+        for leaf in manifest["leaves"]:
+            arr = _from_storable(np.load(step_dir / leaf["file"]),
+                                 leaf["dtype"]).reshape(leaf["shape"])
+            if (zlib.crc32(arr.tobytes()) & 0xFFFFFFFF) != leaf["crc32"]:
+                return False
+        return True
+    except Exception:  # noqa: BLE001 — any corruption = invalid
+        return False
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted((int(p.name.split("_")[1]) for p in directory.iterdir()
+                    if p.is_dir() and p.name.startswith("step_")
+                    and not p.name.endswith(".tmp")), reverse=True)
+    for s in steps:
+        if verify_manifest(directory / f"step_{s:06d}"):
+            return s
+    return None
+
+
+def restore(tree_like, directory: str | Path, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like``.  ``shardings``: a
+    matching pytree of NamedShardings for elastic placement on a (possibly
+    different) mesh."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint under {directory}")
+    step_dir = directory / f"step_{step:06d}"
+    if not verify_manifest(step_dir):
+        raise IOError(f"checkpoint {step_dir} failed integrity check")
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    leaves, treedef = _flatten(tree_like)
+    assert len(leaves) == len(manifest["leaves"]), \
+        "checkpoint/tree structure mismatch"
+    out = []
+    shard_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        if shardings is not None else [None] * len(leaves))
+    for leaf_info, ref, sh in zip(manifest["leaves"], leaves,
+                                  shard_leaves):
+        arr = _from_storable(np.load(step_dir / leaf_info["file"]),
+                             leaf_info["dtype"]).reshape(leaf_info["shape"])
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), step
+
+
+class CheckpointManager:
+    """Keeps N newest checkpoints, async by default, join-safe."""
+
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_: bool = True):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_ = async_
+        self._pending: threading.Thread | None = None
+
+    def save(self, tree, step: int) -> None:
+        self.wait()
+        self._pending = save(tree, step, self.directory,
+                             async_=self.async_)
+        if not self.async_:
+            self._gc()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+            self._gc()
+
+    def restore(self, tree_like, shardings=None):
+        self.wait()
+        return restore(tree_like, self.directory, shardings=shardings)
+
+    def _gc(self) -> None:
+        steps = sorted((int(p.name.split("_")[1])
+                        for p in self.directory.iterdir()
+                        if p.is_dir() and p.name.startswith("step_")
+                        and not p.name.endswith(".tmp")), reverse=True)
+        for s in steps[self.keep:]:
+            import shutil
+            shutil.rmtree(self.directory / f"step_{s:06d}",
+                          ignore_errors=True)

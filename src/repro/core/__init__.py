@@ -1,0 +1,24 @@
+# The paper's primary contribution: the SELCC cache-coherence protocol
+# over compute-limited disaggregated memory, plus the SEL / GAM baselines
+# and the abstraction-layer API (paper Table 1).
+from . import latchword
+from .api import ClusterConfig, SELCCLayer
+from .cache import INVALID, MODIFIED, SHARED, NodeCache
+from .consistency import (SCViolation, check_coherence,
+                          check_sequential_consistency, merge_histories)
+from .gam import GAMConfig, GAMMemoryAgent, GAMNode
+from .protocol import (CoherenceError, Handle, SELCCConfig, SELCCNode,
+                       PEER_RD, PEER_UPGR, PEER_WR)
+from .sel import SELNode
+from .simulator import (CostModel, Environment, Event, Fabric, Process,
+                        QueueResource, SXLatch, Store)
+
+__all__ = [
+    "latchword", "ClusterConfig", "SELCCLayer", "NodeCache",
+    "MODIFIED", "SHARED", "INVALID", "SCViolation", "check_coherence",
+    "check_sequential_consistency", "merge_histories", "GAMConfig",
+    "GAMMemoryAgent", "GAMNode", "CoherenceError", "Handle", "SELCCConfig",
+    "SELCCNode", "PEER_RD", "PEER_UPGR", "PEER_WR", "SELNode", "CostModel",
+    "Environment", "Event", "Fabric", "Process", "QueueResource", "SXLatch",
+    "Store",
+]

@@ -1,0 +1,130 @@
+"""The SELCC abstraction layer — the paper's Table 1 API.
+
+``SELCCLayer`` wires memory servers (Fabric), compute nodes, and a global
+allocator into the main-memory-like programming surface the paper argues
+for:
+
+    Allocate / Free        -> gaddr (NodeID, offset)
+    SELCC_SLock / XLock    -> handle
+    SELCC_SUnlock/XUnlock  -> ()
+    Atomic                 -> uint64 fetch-op
+
+Applications (apps/btree.py, apps/txn.py) are written purely against this
+facade and therefore run over SELCC, SEL, or GAM unchanged — mirroring
+the paper's "applications over SELCC can run seamlessly on SEL".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .gam import GAMConfig, GAMMemoryAgent, GAMNode
+from .protocol import SELCCConfig, SELCCNode
+from .sel import SELNode
+from .simulator import CostModel, Environment, Fabric
+
+
+@dataclass
+class ClusterConfig:
+    n_compute: int = 8
+    n_memory: int = 8
+    threads_per_node: int = 16
+    protocol: str = "selcc"           # selcc | sel | gam
+    selcc: SELCCConfig = None
+    gam: GAMConfig = None
+    cost: CostModel = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.selcc is None:
+            self.selcc = SELCCConfig()
+        if self.gam is None:
+            self.gam = GAMConfig(gcl_bytes=self.selcc.gcl_bytes,
+                                 cache_capacity=self.selcc.cache_capacity)
+        if self.cost is None:
+            self.cost = CostModel()
+
+
+class SELCCLayer:
+    """A simulated cluster exposing the Table-1 API per compute node."""
+
+    def __init__(self, cfg: ClusterConfig | None = None):
+        self.cfg = cfg or ClusterConfig()
+        c = self.cfg
+        self.env = Environment()
+        mem_cores = c.gam.mem_cores if c.protocol == "gam" else 1
+        self.fabric = Fabric(self.env, c.n_memory, c.cost,
+                             mem_cpu_cores=mem_cores)
+        self.nodes = []
+        if c.protocol == "selcc":
+            self.nodes = [SELCCNode(self.env, i, self.fabric, c.selcc,
+                                    c.threads_per_node, seed=c.seed)
+                          for i in range(c.n_compute)]
+        elif c.protocol == "sel":
+            self.nodes = [SELNode(self.env, i, self.fabric, c.selcc,
+                                  c.threads_per_node, seed=c.seed)
+                          for i in range(c.n_compute)]
+        elif c.protocol == "gam":
+            self.agents = [GAMMemoryAgent(self.env, self.fabric, m, c.gam)
+                           for m in range(c.n_memory)]
+            self.nodes = [GAMNode(self.env, i, self.fabric, self.agents,
+                                  c.gam, c.threads_per_node, seed=c.seed)
+                          for i in range(c.n_compute)]
+        else:
+            raise ValueError(f"unknown protocol {c.protocol!r}")
+        # global allocator state: next free line per memory node + free list
+        self._next_line = [0] * c.n_memory
+        self._free: list = []
+        self._rr = 0
+
+    # ------------------------------------------------------------- Table 1
+    def allocate(self):
+        """Allocate a global cache line; returns gaddr = (NodeID, offset)."""
+        if self._free:
+            return self._free.pop()
+        mid = self._rr % self.cfg.n_memory
+        self._rr += 1
+        line = self._next_line[mid]
+        self._next_line[mid] += 1
+        return (mid, line)
+
+    def allocate_many(self, n: int):
+        return [self.allocate() for _ in range(n)]
+
+    def free(self, gaddr):
+        self._free.append(gaddr)
+
+    # lock APIs are per compute node (node.slock/xlock/...); composite ops:
+    def run(self, until: float | None = None):
+        self.env.run(until)
+
+    # ------------------------------------------------------------- metrics
+    def throughput(self) -> float:
+        ops = sum(n.stats.ops for n in self.nodes)
+        return ops / self.env.now if self.env.now > 0 else 0.0
+
+    def total_ops(self) -> int:
+        return sum(n.stats.ops for n in self.nodes)
+
+    def mean_latency(self) -> float:
+        ops = self.total_ops()
+        return (sum(n.stats.latency_sum for n in self.nodes) / ops
+                if ops else 0.0)
+
+    def cache_stats(self):
+        out = {}
+        for n in self.nodes:
+            cs = getattr(n, "cache", None)
+            if cs is None:
+                continue
+            s = cs.stats
+            for k, v in vars(s).items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def inv_ratio(self) -> float:
+        """Fraction of operations that needed >=1 invalidation message
+        (the bar series in the paper's Fig. 7)."""
+        ops = self.total_ops()
+        sent = sum(getattr(n.stats, "inv_sent", 0) for n in self.nodes)
+        return min(1.0, sent / ops) if ops else 0.0

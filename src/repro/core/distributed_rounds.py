@@ -1,0 +1,124 @@
+"""Distributed coherence rounds: the latch plane at mesh scale.
+
+`core/jax_protocol.py` runs the bulk-synchronous protocol against one
+latch-word array; THIS module shards that array across the mesh (lines
+striped by `home = line % n_shards`, exactly dsm/address.home_of) and
+routes each round's requests to their home shards with ONE all_to_all,
+applies them there with the `latch_ops` kernel (per-word serialization =
+the NIC atomic unit), and routes the old-word replies back with a second
+all_to_all — the paper's one-sided verbs expressed as two collectives per
+round, with ZERO control logic on the home side.
+
+Shapes are static: each shard presents R request slots per round; buckets
+pad to capacity R (line = -1 marks empty).  Requests that overflow a
+bucket are deferred to the next round by the caller (spin semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.latch_ops.ops import apply_batch
+
+FIELDS = ("line", "op", "arg_hi", "arg_lo", "cmp_hi", "cmp_lo")
+
+
+def make_sharded_words(n_lines: int, mesh, axis: str = "model"):
+    n = mesh.shape[axis]
+    assert n_lines % n == 0
+    words = jnp.zeros((n_lines, 2), jnp.int32)
+    return jax.device_put(
+        words, jax.sharding.NamedSharding(mesh, P(axis, None)))
+
+
+def _bucket(requests, n_shards: int, cap: int):
+    """Sort each shard's local requests into per-home buckets [S, cap]."""
+    line = requests["line"]
+    home = jnp.where(line >= 0, line % n_shards, n_shards)  # pad bucket
+    order = jnp.argsort(home)                                # stable
+    sorted_reqs = {k: requests[k][order] for k in FIELDS}
+    home_sorted = home[order]
+    # slot within bucket
+    onehot = jax.nn.one_hot(home_sorted, n_shards + 1, dtype=jnp.int32)
+    slot = jnp.take_along_axis(jnp.cumsum(onehot, 0) - 1,
+                               home_sorted[:, None], 1)[:, 0]
+    keep = jnp.logical_and(home_sorted < n_shards, slot < cap)
+    b_idx = jnp.where(keep, home_sorted, 0)
+    s_idx = jnp.where(keep, slot, cap - 1)
+    out = {}
+    for k in FIELDS:
+        init = jnp.full((n_shards, cap), -1 if k == "line" else 0,
+                        jnp.int32)
+        val = jnp.where(keep, sorted_reqs[k],
+                        -1 if k == "line" else 0)
+        out[k] = init.at[b_idx, s_idx].set(val, mode="drop")
+    dropped = jnp.sum(jnp.logical_and(home_sorted < n_shards,
+                                      ~keep).astype(jnp.int32))
+    return out, order, keep, (b_idx, s_idx), dropped
+
+
+def distributed_latch_round(words, requests, *, mesh, axis: str = "model",
+                            backend: str = "ref"):
+    """words: [n_lines, 2] sharded P(axis, None) (striped by line%S after
+    a caller-side permutation — see `stripe`/`unstripe`); requests: dict of
+    [R] int32 per shard, GLOBAL line ids, sharded P(axis).
+
+    Returns (new_words, old_hi [R], old_lo [R], ok [R], dropped_count)."""
+    n = mesh.shape[axis]
+    r = requests["line"].shape[0] // n      # per-shard slots (global R = n*r)
+    cap = r                                  # bucket capacity
+
+    def body(words_local, req_local):
+        req_local = {k: v for k, v in req_local.items()}
+        buckets, order, keep, scatter_idx, dropped = _bucket(
+            {k: req_local[k] for k in FIELDS}, n, cap)
+        # exchange request buckets: [S, cap] -> recv [S, cap]
+        recv = {k: jax.lax.all_to_all(buckets[k], axis, 0, 0, tiled=False)
+                for k in FIELDS}
+        flat = {k: recv[k].reshape(-1) for k in FIELDS}
+        # global line -> local slab index (stripe layout: local = line // n)
+        loc = jnp.where(flat["line"] >= 0, flat["line"] // n, -1)
+        new_words, old_hi, old_lo, ok = apply_batch(
+            words_local, dict(flat, line=loc.astype(jnp.int32)),
+            backend=backend)
+        # route replies back to the requesting shards
+        def back(x):
+            return jax.lax.all_to_all(x.reshape(n, cap), axis, 0, 0,
+                                      tiled=False)
+        r_hi, r_lo, r_ok = back(old_hi), back(old_lo), back(ok)
+        # un-bucket into the original request order
+        b_idx, s_idx = scatter_idx
+        inv = jnp.argsort(order)
+
+        def unbucket(bucketed):
+            gathered = bucketed[b_idx, s_idx]
+            gathered = jnp.where(keep, gathered, 0)
+            return gathered[inv]
+        return (new_words, unbucket(r_hi), unbucket(r_lo),
+                unbucket(r_ok.astype(jnp.int32)),
+                jax.lax.psum(dropped, axis))
+
+    spec_req = {k: P(axis) for k in FIELDS}
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), spec_req),
+        out_specs=(P(axis, None), P(axis), P(axis), P(axis), P()),
+        check_vma=False,
+    )(words, requests)
+
+
+def stripe(words_flat, n_shards: int):
+    """[L,2] line-major -> stripe-major layout (home-contiguous)."""
+    l = words_flat.shape[0]
+    return words_flat.reshape(l // n_shards, n_shards, 2) \
+        .transpose(1, 0, 2).reshape(l, 2)
+
+
+def unstripe(words_striped, n_shards: int):
+    l = words_striped.shape[0]
+    return words_striped.reshape(n_shards, l // n_shards, 2) \
+        .transpose(1, 0, 2).reshape(l, 2)

@@ -1,0 +1,224 @@
+"""GAM baseline: RPC-based directory cache coherence (Cai et al., VLDB'18).
+
+The paper's second baseline.  The defining property (and weakness on
+compute-limited disaggregated memory): the COHERENCE DIRECTORY LIVES ON
+THE MEMORY NODE and every miss / ownership change is an RPC served by the
+memory node's (few) CPU cores.  With the default 1 core per memory server
+(the paper's testbed restriction) the agent saturates at
+~1/rpc_service requests/s — the bottleneck SELCC removes.
+
+Two consistency levels, as benchmarked in the paper:
+* ``SEQ``  — writes wait for all sharer invalidation ACKs;
+* ``TSO``  — writes get their reply as soon as the directory is updated;
+  invalidations complete asynchronously (total-store-order-ish).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+from .protocol import NodeStats
+from .simulator import Environment, Fabric, Store
+
+
+@dataclass
+class GAMConfig:
+    gcl_bytes: int = 2048
+    cache_capacity: int = 4096
+    consistency: str = "SEQ"          # or "TSO"
+    mem_cores: int = 1                # compute power of the memory agent
+
+
+class _Req:
+    __slots__ = ("kind", "line", "node", "reply")
+
+    def __init__(self, kind, line, node, reply):
+        self.kind = kind
+        self.line = line
+        self.node = node
+        self.reply = reply
+
+
+class GAMMemoryAgent:
+    """Directory + request servers on ONE memory node."""
+
+    def __init__(self, env: Environment, fabric: Fabric, mid: int,
+                 cfg: GAMConfig):
+        self.env = env
+        self.fabric = fabric
+        self.mid = mid
+        self.cfg = cfg
+        self.inbox = Store(env)
+        self.directory: dict = {}          # line -> [owner|None, set(sharers)]
+        self.version: dict = {}            # authoritative version
+        self.nodes: dict = {}              # node_id -> GAMNode
+        for _ in range(cfg.mem_cores):
+            env.process(self._serve_loop())
+
+    def _serve_loop(self):
+        env, cost = self.env, self.fabric.cost
+        while True:
+            req = yield self.inbox.get()
+            yield env.timeout(cost.rpc_service)          # CPU: parse + directory
+            entry = self.directory.setdefault(req.line, [None, set()])
+            owner, sharers = entry
+            ver = self.version.get(req.line, 0)
+            if req.kind == "R":
+                if owner is not None and owner != req.node:
+                    ver = yield from self._recall(req.line, owner,
+                                                  downgrade=True)
+                    entry[0] = None
+                    entry[1].add(owner)
+                entry[1].add(req.node)
+                self._reply(req, ver)
+            elif req.kind == "W":
+                if owner is not None and owner != req.node:
+                    ver = yield from self._recall(req.line, owner,
+                                                  downgrade=False)
+                    entry[0] = None
+                targets = [s for s in entry[1] if s != req.node]
+                acks = []
+                for s in targets:
+                    yield env.timeout(cost.rpc_service * 0.5)   # CPU per inv
+                    acks.append(self._invalidate(req.line, s))
+                entry[1].clear()
+                if self.cfg.consistency == "SEQ":
+                    for ev in acks:
+                        yield ev
+                entry[0] = req.node
+                self.version[req.line] = ver + 1
+                self._reply(req, ver + 1)
+            elif req.kind == "EVICT":
+                entry[1].discard(req.node)
+                if entry[0] == req.node:
+                    entry[0] = None
+                    yield env.timeout(
+                        cost.xfer(self.cfg.gcl_bytes))          # write-back in
+                if req.reply is not None:
+                    self._reply(req, 0)
+
+    def _recall(self, line, owner, downgrade):
+        """Fetch the dirty copy back from its owner (adds 2 message hops +
+        payload + the owner's handler time)."""
+        cost = self.fabric.cost
+        yield self.env.timeout(cost.msg_one_way)                 # recall msg
+        node = self.nodes[owner]
+        ver = node.recall(line, downgrade)
+        yield self.env.timeout(cost.handler_service
+                               + cost.msg_one_way
+                               + cost.xfer(self.cfg.gcl_bytes))  # data back
+        self.fabric.stats.messages += 2
+        self.fabric.stats.bytes_moved += self.cfg.gcl_bytes
+        return ver
+
+    def _invalidate(self, line, sharer):
+        """Send INV to a sharer; returns an ack event."""
+        cost = self.fabric.cost
+        ev = self.env.event()
+        node = self.nodes[sharer]
+
+        def deliver(_):
+            node.invalidate(line)
+            # ack flies back one hop later
+            self.env._schedule(cost.msg_one_way + cost.handler_service,
+                               ev.succeed, None)
+
+        self.env._schedule(cost.msg_one_way, deliver, None)
+        self.fabric.stats.messages += 2
+        return ev
+
+    def _reply(self, req: _Req, value):
+        cost = self.fabric.cost
+        self.env._schedule(cost.msg_one_way
+                           + cost.xfer(self.cfg.gcl_bytes),
+                           req.reply.succeed, value)
+        self.fabric.stats.messages += 1
+        self.fabric.stats.bytes_moved += self.cfg.gcl_bytes
+
+
+class GAMNode:
+    """Compute node with a local cache; misses go to the directory via RPC."""
+
+    def __init__(self, env: Environment, node_id: int, fabric: Fabric,
+                 agents: list[GAMMemoryAgent], cfg: GAMConfig | None = None,
+                 n_threads: int = 16, seed: int = 0):
+        self.env = env
+        self.node_id = node_id
+        self.fabric = fabric
+        self.agents = agents
+        self.cfg = cfg or GAMConfig()
+        self.stats = NodeStats()
+        self.entries: OrderedDict = OrderedDict()   # line-> [state, version]
+        for a in agents:
+            a.nodes[node_id] = self
+
+    # -- memory-agent callbacks (no latency of their own; hops modeled
+    #    by the agent) --------------------------------------------------------
+    def invalidate(self, line) -> None:
+        e = self.entries.get(line)
+        if e is not None:
+            e[0] = "I"
+
+    def recall(self, line, downgrade: bool) -> int:
+        e = self.entries.get(line)
+        ver = e[1] if e else 0
+        if e is not None:
+            e[0] = "S" if downgrade else "I"
+        return ver
+
+    # -- ops -------------------------------------------------------------------
+    def _rpc(self, kind, gaddr):
+        mid, line = gaddr
+        reply = self.env.event()
+        self.fabric.stats.messages += 1
+        agent = self.agents[mid]
+        self.env._schedule(self.fabric.cost.msg_one_way, agent.inbox.put,
+                           _Req(kind, line, self.node_id, reply))
+        ver = yield reply
+        return ver
+
+    def _touch(self, line, state, ver):
+        e = self.entries.get(line)
+        if e is None:
+            self.entries[line] = [state, ver]
+            if len(self.entries) > self.cfg.cache_capacity:
+                old_line, old_e = self.entries.popitem(last=False)
+                if old_e[0] != "I":
+                    # eviction notice (fire-and-forget RPC, costs agent CPU)
+                    agent = self.agents[0]
+                    self.env._schedule(self.fabric.cost.msg_one_way,
+                                       agent.inbox.put,
+                                       _Req("EVICT", old_line, self.node_id,
+                                            None))
+        else:
+            e[0] = state
+            e[1] = ver
+            self.entries.move_to_end(line)
+
+    def op_read(self, gaddr, thread: int = 0):
+        t0 = self.env.now
+        mid, line = gaddr
+        e = self.entries.get(line)
+        if e is not None and e[0] in ("S", "M"):
+            self.entries.move_to_end(line)
+            yield self.env.timeout(self.fabric.cost.local_access)
+        else:
+            ver = yield from self._rpc("R", gaddr)
+            self._touch(line, "S", ver)
+        self.stats.reads += 1
+        self.stats.latency_sum += self.env.now - t0
+
+    def op_write(self, gaddr, thread: int = 0):
+        t0 = self.env.now
+        mid, line = gaddr
+        e = self.entries.get(line)
+        if e is not None and e[0] == "M":
+            self.entries.move_to_end(line)
+            e[1] += 1
+            yield self.env.timeout(self.fabric.cost.local_access)
+        else:
+            ver = yield from self._rpc("W", gaddr)
+            self._touch(line, "M", ver)
+        self.stats.writes += 1
+        self.stats.latency_sum += self.env.now - t0

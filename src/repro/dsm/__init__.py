@@ -1,0 +1,4 @@
+from .address import GlobalAddress, home_of
+from .kvpool import KVPoolConfig, SELCCKVPool
+
+__all__ = ["GlobalAddress", "home_of", "KVPoolConfig", "SELCCKVPool"]

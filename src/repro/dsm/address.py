@@ -1,0 +1,27 @@
+"""8-byte global pointers (NodeID, offset) — paper Sec. 3.
+
+The DES side uses (mid, line) tuples; the device side uses flat int32
+page indices with the home shard derived by modulo (pages are striped
+across the mesh so coherence-round all_to_alls stay balanced).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GlobalAddress:
+    node_id: int
+    offset: int
+
+    def pack(self) -> int:
+        return (self.node_id << 48) | self.offset
+
+    @staticmethod
+    def unpack(v: int) -> "GlobalAddress":
+        return GlobalAddress(v >> 48, v & ((1 << 48) - 1))
+
+
+def home_of(page_index: int, n_homes: int) -> int:
+    return page_index % n_homes

@@ -1,0 +1,199 @@
+"""SELCC-coherent disaggregated KV-page pool for multi-replica serving.
+
+The paper's technique as a first-class serving feature (DESIGN.md Sec. 2):
+
+* GCL = one KV page: [page_size, Hkv, hd] keys + values, one per layer
+  stack; the 64-bit latch word per page carries the directory
+  (writer byte | 56-bit reader bitmap) exactly as in Fig. 3;
+* replicas CACHE pages they read (shared prefixes / system prompts) and
+  keep the shared latch lazily — re-reads are local until a writer
+  (decode appending into the page, or eviction) invalidates;
+* the coherence plane is the bulk-synchronous round (core/jax_protocol):
+  reads = FAA+fetch (the combined one-RTT op — kernels/gcl_fetch),
+  appends = CAS exclusive + in-place update + version bump.
+
+The pool state is a dict of arrays (shardable over the mesh: pages are
+striped so each device homes P/devices pages).  The replica cache is a
+set-associative map local_slot -> (global_page, version); a cached page
+is VALID iff its version matches the directory version — the version
+check at round boundaries is the deterministic form of the invalidation
+message (DESIGN.md "what changed").
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.gcl_fetch.ops import fetch as gcl_fetch_op
+from ..kernels.paged_attention.ops import decode_paged
+
+
+@dataclass(frozen=True)
+class KVPoolConfig:
+    n_pages: int = 1024
+    page_size: int = 16              # tokens per GCL
+    n_kv_heads: int = 8
+    head_dim: int = 128
+    n_layers: int = 1                # pools are usually per layer-stack
+    n_replicas: int = 4
+    cache_slots: int = 256           # local cache capacity per replica
+    dtype: str = "bfloat16"
+
+
+def make_pool(cfg: KVPoolConfig):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    shape = (cfg.n_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k_pages": jnp.zeros(shape, dt),
+        "v_pages": jnp.zeros(shape, dt),
+        "words": jnp.zeros((cfg.n_pages, 2), jnp.int32),   # latch+directory
+        "page_version": jnp.zeros((cfg.n_pages,), jnp.int32),
+        "page_fill": jnp.zeros((cfg.n_pages,), jnp.int32), # tokens written
+        "alloc_top": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_replica_cache(cfg: KVPoolConfig):
+    return {
+        # local copies of pages + the (page, version) tags
+        "k_local": jnp.zeros((cfg.n_replicas, cfg.cache_slots,
+                              cfg.page_size, cfg.n_kv_heads, cfg.head_dim),
+                             jnp.bfloat16),
+        "v_local": jnp.zeros_like(
+            jnp.zeros((cfg.n_replicas, cfg.cache_slots, cfg.page_size,
+                       cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)),
+        "tag_page": jnp.full((cfg.n_replicas, cfg.cache_slots), -1,
+                             jnp.int32),
+        "tag_version": jnp.zeros((cfg.n_replicas, cfg.cache_slots),
+                                 jnp.int32),
+        "clock": jnp.zeros((cfg.n_replicas,), jnp.int32),
+    }
+
+
+def _slot_of(page, cache_slots):
+    return page % cache_slots        # direct-mapped (paper uses hashed LRU)
+
+
+# ---------------------------------------------------------------- appends
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def append_tokens(pool, pages, offsets, k_new, v_new, *, cfg: KVPoolConfig):
+    """Decode write path: replica holding the tail pages writes one token
+    per sequence.  pages/offsets [B]; k_new/v_new [B, Hkv, hd].
+
+    Exclusive access per page via CAS (writer byte = replica 0 stand-in —
+    single-writer-per-sequence is the serving invariant); each append
+    bumps the page version, which IS the invalidation broadcast (readers'
+    version tags mismatch from the next round on — lazy-release upgraded
+    to MSI exactly as the protocol prescribes)."""
+    b = pages.shape[0]
+    kp = pool["k_pages"].at[pages, offsets].set(
+        k_new.astype(pool["k_pages"].dtype), mode="drop")
+    vp = pool["v_pages"].at[pages, offsets].set(
+        v_new.astype(pool["v_pages"].dtype), mode="drop")
+    ver = pool["page_version"].at[pages].add(1, mode="drop")
+    fill = pool["page_fill"].at[pages].max(offsets + 1, mode="drop")
+    return dict(pool, k_pages=kp, v_pages=vp, page_version=ver,
+                page_fill=fill)
+
+
+# ---------------------------------------------------------------- reads
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def read_through_cache(pool, cache, replica, pages, *, cfg: KVPoolConfig,
+                       backend: str = "ref"):
+    """Replica `replica` needs `pages` [R] (−1 = none).  Hits come from
+    the local cache; misses do the combined latch+fetch (gcl_fetch) and
+    install the page + reader bit.  Returns (k [R,page,Hkv,hd], v, cache',
+    pool', hit_mask)."""
+    slots = _slot_of(jnp.maximum(pages, 0), cfg.cache_slots)
+    tag_p = cache["tag_page"][replica, slots]
+    tag_v = cache["tag_version"][replica, slots]
+    cur_v = pool["page_version"][jnp.maximum(pages, 0)]
+    valid = pages >= 0
+    hit = jnp.logical_and(valid,
+                          jnp.logical_and(tag_p == pages, tag_v == cur_v))
+    miss = jnp.logical_and(valid, ~hit)
+
+    # --- combined latch + payload fetch for misses (1 "round trip") -------
+    flat_k = pool["k_pages"].reshape(cfg.n_pages, -1)
+    flat_v = pool["v_pages"].reshape(cfg.n_pages, -1)
+    req_page = jnp.where(miss, pages, -1).astype(jnp.int32)
+    bit_lo = jnp.full_like(req_page, 1 << 1)      # replica bit (demo lane)
+    bit_hi = jnp.zeros_like(req_page)
+    k_fetch, _, _, granted_k, words = gcl_fetch_op(
+        flat_k, pool["words"], req_page, bit_hi, bit_lo, backend=backend)
+    v_fetch, _, _, _, _ = gcl_fetch_op(
+        flat_v, pool["words"], req_page, bit_hi, bit_lo, backend=backend)
+    page_shape = (cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+    k_fetch = k_fetch.reshape((-1,) + page_shape)
+    v_fetch = v_fetch.reshape((-1,) + page_shape)
+
+    # --- install misses into the local cache ------------------------------
+    kl = cache["k_local"].at[replica, slots].set(
+        jnp.where(miss[:, None, None, None], k_fetch,
+                  cache["k_local"][replica, slots]), mode="drop")
+    vl = cache["v_local"].at[replica, slots].set(
+        jnp.where(miss[:, None, None, None], v_fetch,
+                  cache["v_local"][replica, slots]), mode="drop")
+    tp = cache["tag_page"].at[replica, slots].set(
+        jnp.where(miss, pages, tag_p), mode="drop")
+    tv = cache["tag_version"].at[replica, slots].set(
+        jnp.where(miss, cur_v, tag_v), mode="drop")
+    new_cache = dict(cache, k_local=kl, v_local=vl, tag_page=tp,
+                     tag_version=tv)
+    new_pool = dict(pool, words=words)
+
+    k_out = jnp.where(hit[:, None, None, None],
+                      cache["k_local"][replica, slots], k_fetch)
+    v_out = jnp.where(hit[:, None, None, None],
+                      cache["v_local"][replica, slots], v_fetch)
+    return k_out, v_out, new_cache, new_pool, hit
+
+
+# ----------------------------------------------------- attention over pool
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def pool_decode_attention(pool, q, page_tbl, lens, *, cfg: KVPoolConfig,
+                          backend: str = "ref"):
+    """Decode attention straight over the shared pool (paged_attention
+    kernel): q [B,Hq,hd], page_tbl [B,max_pages], lens [B]."""
+    return decode_paged(q, pool["k_pages"], pool["v_pages"], page_tbl,
+                        lens, backend=backend)
+
+
+class SELCCKVPool:
+    """Convenience façade tying pool + replica caches together for the
+    examples and tests (allocation is host-side bump allocation; the
+    data/coherence plane is the jitted functions above)."""
+
+    def __init__(self, cfg: KVPoolConfig):
+        self.cfg = cfg
+        self.pool = make_pool(cfg)
+        self.cache = make_replica_cache(cfg)
+        self._top = 0
+
+    def allocate(self, n: int) -> np.ndarray:
+        pages = np.arange(self._top, self._top + n) % self.cfg.n_pages
+        self._top += n
+        return pages.astype(np.int32)
+
+    def append(self, pages, offsets, k_new, v_new):
+        self.pool = append_tokens(self.pool, jnp.asarray(pages),
+                                  jnp.asarray(offsets), k_new, v_new,
+                                  cfg=self.cfg)
+
+    def read(self, replica: int, pages):
+        k, v, self.cache, self.pool, hit = read_through_cache(
+            self.pool, self.cache, replica, jnp.asarray(pages),
+            cfg=self.cfg)
+        return k, v, np.asarray(hit)
+
+    def attend(self, q, page_tbl, lens):
+        return pool_decode_attention(self.pool, q, jnp.asarray(page_tbl),
+                                     jnp.asarray(lens), cfg=self.cfg)

@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (forward) with GQA and causal masking.
+
+Grid: (B * Hq, n_q_blocks, n_k_blocks) — the k-block axis is innermost and
+TPU grids execute sequentially, so the online-softmax accumulators live in
+VMEM scratch across k-steps and the output block is written on the last
+k-step.  GQA is handled in the BlockSpec index maps (kv head = q head //
+group), so K/V are never physically expanded.
+
+Block shapes are MXU-aligned: block_q x head_dim and block_k x head_dim
+tiles with head_dim a multiple of 128 (all assigned archs: 64..256).
+Causal masking is applied in-block; fully-masked blocks are skipped via
+pl.when on the block coordinates (no MXU work issued).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_q, block_k, causal, n_k):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        run = (ik * block_k) <= (iq * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)                 # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                 # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                    # [bq, bk]
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = False):
+    """q: [B, Hq, S, hd]; k, v: [B, Hkv, S, hd] -> [B, Hq, S, hd]."""
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    n_q, n_k = s // block_q, s // block_k
+    scale = 1.0 / np.sqrt(hd)
+    grid = (b * hq, n_q, n_k)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, causal=causal, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd),
+                         lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, g=group, h=hq, kv=hkv:
+                         ((bh % h) // g + (bh // h) * kv, ik, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, g=group, h=hq, kv=hkv:
+                         ((bh % h) // g + (bh // h) * kv, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b * hq, s, hd), k.reshape(b * hkv, s, hd),
+      v.reshape(b * hkv, s, hd)).reshape(b, hq, s, hd)

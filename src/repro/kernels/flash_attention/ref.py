@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash_attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: [B,Hq,S,hd]; k,v: [B,Hkv,S,hd]."""
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(b, hq, s, hd).astype(q.dtype)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused latch-verdict + GCL payload gather.
+
+The paper's key data-path saving is the COMBINED one-sided op: latch
+CAS/FAA and cache-line read in a single round trip (Sec. 3, Sec. 6.1).
+On the TPU home shard this becomes one kernel pass: for each request,
+read the latch word (2 x int32 lanes), compute the shared-acquire verdict
+(no exclusive holder), merge the reader bit, and copy the page payload —
+one VMEM-resident sweep instead of two (latch pass + gather pass).
+
+pages:    [P, page_elems]    payload pool (any dtype)
+words:    [P, 2] int32       latch words (hi lane carries writer byte)
+req_page: [R] int32          page index per request (-1 = empty)
+req_bit_hi/lo: [R] int32     requester's reader-bit lanes
+
+Returns (payload [R, page_elems], old_hi [R], old_lo [R], granted [R],
+new_words [P, 2]).  Grant rule == SELCC shared acquire: writer byte of
+the OLD word must be zero; the reader bit is merged in regardless and the
+caller (jax_protocol round) reverts it on failure — identical to the
+FAA-then-reset dance in the paper's Sec. 4.3(b).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WRITER_MASK_HI = -16777216   # int32 view of 0xFF000000 (plain int: pallas kernels cannot capture traced constants)
+
+
+def _kernel(req_page_ref, bit_hi_ref, bit_lo_ref, pages_ref, words_ref,
+            payload_ref, old_hi_ref, old_lo_ref, granted_ref):
+    r = pl.program_id(0)
+    page = req_page_ref[r]
+    valid = page >= 0
+
+    @pl.when(valid)
+    def _do():
+        hi = words_ref[0, 0]
+        lo = words_ref[0, 1]
+        old_hi_ref[r] = hi
+        old_lo_ref[r] = lo
+        no_writer = (hi & WRITER_MASK_HI) == 0
+        granted_ref[r] = no_writer.astype(jnp.int32)
+        payload_ref[r, :] = pages_ref[0, :]
+
+    @pl.when(jnp.logical_not(valid))
+    def _skip():
+        old_hi_ref[r] = 0
+        old_lo_ref[r] = 0
+        granted_ref[r] = 0
+        payload_ref[r, :] = jnp.zeros_like(payload_ref[r, :])
+
+
+def gcl_fetch(pages, words, req_page, bit_hi, bit_lo,
+              interpret: bool = False):
+    p, elems = pages.shape
+    r = req_page.shape[0]
+    grid = (r,)
+    safe_idx = "clamped by index_map"
+    del safe_idx
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, elems),
+                             lambda r, pg, bh, bl: (jnp.maximum(pg[r], 0),
+                                                    0)),
+                pl.BlockSpec((1, 2),
+                             lambda r, pg, bh, bl: (jnp.maximum(pg[r], 0),
+                                                    0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((r, elems), lambda i, pg, bh, bl: (0, 0)),
+                pl.BlockSpec((r,), lambda i, pg, bh, bl: (0,)),
+                pl.BlockSpec((r,), lambda i, pg, bh, bl: (0,)),
+                pl.BlockSpec((r,), lambda i, pg, bh, bl: (0,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, elems), pages.dtype),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(req_page, bit_hi, bit_lo, pages, words)
+    # directory merge (reader bits) — one scatter, same round semantics as
+    # the paper's combined FAA+read; kept outside the kernel because
+    # multiple grid steps may not partially write one aliased block
+    valid = req_page >= 0
+    idx = jnp.maximum(req_page, 0)
+    new_words = words
+    new_words = new_words.at[idx, 0].set(
+        jnp.where(valid, new_words[idx, 0] | bit_hi, new_words[idx, 0]))
+    new_words = new_words.at[idx, 1].set(
+        jnp.where(valid, new_words[idx, 1] | bit_lo, new_words[idx, 1]))
+    return out[0], out[1], out[2], out[3], new_words

@@ -1,0 +1,19 @@
+"""jit'd wrapper for gcl_fetch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .gcl_fetch import gcl_fetch
+from .ref import gcl_fetch_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def fetch(pages, words, req_page, bit_hi, bit_lo, *, backend: str = "ref",
+          interpret: bool = True):
+    if backend == "pallas":
+        return gcl_fetch(pages, words, req_page, bit_hi, bit_lo,
+                         interpret=interpret)
+    return gcl_fetch_ref(pages, words, req_page, bit_hi, bit_lo)

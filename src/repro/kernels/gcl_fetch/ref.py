@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for gcl_fetch (fused latch-verdict + gather)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+WRITER_MASK_HI = jnp.int32(np.int32(np.uint32(0xFF000000)))
+
+
+def gcl_fetch_ref(pages, words, req_page, bit_hi, bit_lo):
+    valid = req_page >= 0
+    idx = jnp.maximum(req_page, 0)
+    payload = jnp.where(valid[:, None], pages[idx], 0).astype(pages.dtype)
+    old = words[idx]                                    # [R, 2]
+    old_hi = jnp.where(valid, old[:, 0], 0)
+    old_lo = jnp.where(valid, old[:, 1], 0)
+    granted = jnp.where(valid,
+                        ((old_hi & WRITER_MASK_HI) == 0).astype(jnp.int32),
+                        0)
+    # merge reader bits (duplicate requests to one page OR together)
+    new_words = words
+    new_words = new_words.at[idx, 0].set(
+        jnp.where(valid, new_words[idx, 0] | bit_hi, new_words[idx, 0]))
+    new_words = new_words.at[idx, 1].set(
+        jnp.where(valid, new_words[idx, 1] | bit_lo, new_words[idx, 1]))
+    return payload, old_hi, old_lo, granted, new_words

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the latch_ops kernel: sequential CAS/FAA semantics
+over 2-lane latch words via lax.scan (the ground truth the Pallas kernel
+must reproduce bit-exactly, including same-line serialization)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def latch_apply_ref(words, line, op, arg_hi, arg_lo, cmp_hi, cmp_lo):
+    def step(w, req):
+        ln, o, ahi, alo, chi, clo = req
+        valid = ln >= 0
+        idx = jnp.maximum(ln, 0)
+        hi = w[idx, 0]
+        lo = w[idx, 1]
+        is_cas = o == 0
+        cas_hit = (hi == chi) & (lo == clo)
+        cas_hi = jnp.where(cas_hit, ahi, hi)
+        cas_lo = jnp.where(cas_hit, alo, lo)
+        ulo = lo.astype(jnp.uint32)
+        sum_lo = ulo + alo.astype(jnp.uint32)
+        carry = (sum_lo < ulo).astype(jnp.int32)
+        faa_hi = hi + ahi + carry
+        faa_lo = sum_lo.astype(jnp.int32)
+        new_hi = jnp.where(is_cas, cas_hi, faa_hi)
+        new_lo = jnp.where(is_cas, cas_lo, faa_lo)
+        new_hi = jnp.where(valid, new_hi, hi)
+        new_lo = jnp.where(valid, new_lo, lo)
+        w = w.at[idx, 0].set(new_hi)
+        w = w.at[idx, 1].set(new_lo)
+        ok = jnp.where(valid,
+                       jnp.where(is_cas, cas_hit.astype(jnp.int32), 1), 0)
+        return w, (jnp.where(valid, hi, 0), jnp.where(valid, lo, 0), ok)
+
+    new_words, (old_hi, old_lo, ok) = jax.lax.scan(
+        step, words, (line, op, arg_hi, arg_lo, cmp_hi, cmp_lo))
+    return new_words, old_hi, old_lo, ok

@@ -1,0 +1,19 @@
+"""jit'd wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .paged_attention import paged_attention
+from .ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def decode_paged(q, k_pages, v_pages, page_tbl, lens, *,
+                 backend: str = "ref", interpret: bool = True):
+    if backend == "pallas":
+        return paged_attention(q, k_pages, v_pages, page_tbl, lens,
+                               interpret=interpret)
+    return paged_attention_ref(q, k_pages, v_pages, page_tbl, lens)

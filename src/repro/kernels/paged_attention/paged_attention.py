@@ -1,0 +1,113 @@
+"""Pallas TPU paged decode attention over the SELCC GCL page pool.
+
+This is the data path of the paper's technique in serving form: KV pages
+are Global Cache Lines homed across the mesh; a replica's decode step
+reads its sequences' pages THROUGH the page table (the local-cache
+indirection) and attends over them.
+
+q:        [B, Hq, hd]           one new token per sequence
+k_pages:  [P, page, Hkv, hd]    the shared page pool (payload of GCLs)
+v_pages:  [P, page, Hkv, hd]
+page_tbl: [B, max_pages] int32  per-sequence page list (scalar-prefetched
+                                so BlockSpec index maps can chase it —
+                                the kernel-level analogue of gaddr lookup)
+lens:     [B] int32             tokens valid per sequence
+
+Grid: (B, max_pages) — pages innermost, sequential on TPU, so the flash
+accumulators persist in VMEM scratch; out-of-range pages are skipped via
+pl.when (no DMA cost on TPU thanks to block revisiting).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, page, n_pages, hq, hkv):
+    b = pl.program_id(0)
+    ip = pl.program_id(1)
+
+    @pl.when(ip == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = lens_ref[b]
+    valid_pages = (seq_len + page - 1) // page
+
+    @pl.when(ip < valid_pages)
+    def _attend():
+        g = hq // hkv
+        q = q_ref[0].astype(jnp.float32)                 # [Hq, hd]
+        k = k_ref[0].astype(jnp.float32)                 # [page, Hkv, hd]
+        v = v_ref[0].astype(jnp.float32)
+        qg = q.reshape(hkv, g, q.shape[-1])
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)          # [Hkv, g, page]
+        s = s * scale
+        tok = ip * page + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(tok < seq_len, s, NEG_INF)
+        m_prev = m_scr[...]                              # [Hkv, g, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)          # [Hkv, g, hd]
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = out.reshape(hq, out.shape[-1]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, page_tbl, lens, *,
+                    interpret: bool = False):
+    """Returns [B, Hq, hd]."""
+    b, hq, hd = q.shape
+    n_pool, page, hkv, _ = k_pages.shape
+    max_pages = page_tbl.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    g = hq // hkv
+
+    kernel = functools.partial(_kernel, scale=scale, page=page,
+                               n_pages=max_pages, hq=hq, hkv=hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, hq, hd), lambda b, ip, tbl, lens: (b, 0, 0)),
+            pl.BlockSpec((1, page, hkv, hd),
+                         lambda b, ip, tbl, lens: (tbl[b, ip], 0, 0, 0)),
+            pl.BlockSpec((1, page, hkv, hd),
+                         lambda b, ip, tbl, lens: (tbl[b, ip], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, hd),
+                               lambda b, ip, tbl, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
+        interpret=interpret,
+    )(page_tbl, lens, q, k_pages, v_pages)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_tbl, lens):
+    """q: [B,Hq,hd]; pools [P,page,Hkv,hd]; page_tbl [B,max_pages];
+    lens [B] -> [B,Hq,hd]."""
+    b, hq, hd = q.shape
+    _, page, hkv, _ = k_pages.shape
+    max_pages = page_tbl.shape[1]
+    g = hq // hkv
+    # gather each sequence's pages into a contiguous view
+    k_seq = k_pages[page_tbl].reshape(b, max_pages * page, hkv, hd)
+    v_seq = v_pages[page_tbl].reshape(b, max_pages * page, hkv, hd)
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg,
+                   k_seq.astype(jnp.float32)) / np.sqrt(hd)
+    tok = jnp.arange(max_pages * page)
+    s = jnp.where(tok[None, None, None, :] < lens[:, None, None, None],
+                  s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_seq.astype(jnp.float32))
+    return o.reshape(b, hq, hd).astype(q.dtype)

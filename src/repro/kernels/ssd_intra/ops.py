@@ -1,0 +1,18 @@
+"""jit'd wrapper for the SSD intra-chunk kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import ssd_intra_ref
+from .ssd_intra import ssd_intra
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def intra_chunk(cb, cs, win, *, backend: str = "ref",
+                interpret: bool = True):
+    if backend == "pallas":
+        return ssd_intra(cb, cs, win, interpret=interpret)
+    return ssd_intra_ref(cb, cs, win)

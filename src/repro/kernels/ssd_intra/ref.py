@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (mirrors the einsum
+branch of models/ssm.ssd_chunked)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_ref(cb, cs, win):
+    """cb: [B,Q,Q]; cs: [B,Q,H]; win: [B,Q,H,P] -> [B,Q,H,P]."""
+    q = cb.shape[1]
+    seg = cs[:, :, None, :] - cs[:, None, :, :]      # [B,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(mask[None, :, :, None],
+                      jnp.exp(seg.astype(jnp.float32)), 0.0)
+    return jnp.einsum("bqk,bqkh,bkhp->bqhp",
+                      cb.astype(jnp.float32), l_mat,
+                      win.astype(jnp.float32)).astype(win.dtype)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: SSD intra-chunk dual form (Mamba-2 hot spot).
+
+Per chunk of Q tokens and head h (arXiv:2405.21060, the "attention-like"
+branch of state-space duality):
+
+    L[i,j]   = exp(cs[i,h] - cs[j,h]) for i >= j else 0   (segsum decay)
+    Y[q,h,:] = sum_k (CB[q,k] * L[q,k]) * Win[k,h,:]
+
+i.e. a causal-masked, decay-weighted [Q,Q] x [Q,P] matmul per head — the
+quadratic-in-chunk compute that dominates mamba2 training FLOPs (the
+inter-chunk scan is linear and stays in jnp).
+
+Grid: (B*, H) — one grid step owns one (sequence-chunk, head) pair; the
+whole [Q, Q] tile and the head's [Q, P] values sit in VMEM (Q=256, P=64:
+~600 KB), and the MXU runs a single [Q,Q]x[Q,P] dot per step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(cb_ref, cs_ref, win_ref, o_ref, *, q):
+    cb = cb_ref[0].astype(jnp.float32)               # [Q, Q]
+    cs = cs_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    win = win_ref[0, :, 0, :].astype(jnp.float32)    # [Q, P]
+    seg = cs[:, None] - cs[None, :]                  # [Q, Q]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(iq >= ik, jnp.exp(seg), 0.0)
+    scores = cb * l_mat
+    o_ref[0, :, 0, :] = jax.lax.dot_general(
+        scores, win, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def ssd_intra(cb, cs, win, *, interpret: bool = False):
+    """cb: [B, Q, Q]; cs: [B, Q, H]; win: [B, Q, H, P] -> [B, Q, H, P].
+
+    B folds (batch x chunks); H = heads; the caller supplies
+    cb = C @ B^T and win = dt * x (as in models/ssm.ssd_chunked)."""
+    b, q, _ = cb.shape
+    h = cs.shape[2]
+    p = win.shape[3]
+    kernel = functools.partial(_kernel, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, q, q), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, q, h, p), win.dtype),
+        interpret=interpret,
+    )(cb, cs, win)

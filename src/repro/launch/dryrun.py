@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+512 fake host devices are locked in before any other jax import.
+
+Per cell:
+  with mesh:
+      lowered  = jax.jit(step, in_shardings=..., out_shardings=...,
+                         donate_argnums=...).lower(**input_specs(...))
+      compiled = lowered.compile()
+      print(compiled.memory_analysis())    # proves it fits
+      print(compiled.cost_analysis())      # FLOPs/bytes for the roofline
+
+plus the loop-aware HLO analysis (repro.launch.hloparse) and the roofline
+terms, all written to results/dryrun/<arch>__<shape>__<mesh>[__tag].json.
+Already-done cells are skipped (incremental; --force recomputes).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_ids, get_config
+from repro.launch import specs as ispecs
+from repro.launch.hloparse import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import SHAPES, shape_applicable
+from repro.optim import AdamWConfig
+from repro.parallel import sharding as shard
+from repro.train import step as train_step_mod
+from repro.train.step import TrainConfig
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# hardware constants (TPU v5e-class, from the brief)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+# per-arch training overrides: memory tiering for the big ones
+TRAIN_OVERRIDES = {
+    "llama3-405b": TrainConfig(
+        opt=AdamWConfig(m_dtype="bfloat16", v_mode="int8"),
+        accum_dtype="bfloat16"),
+    "command-r-plus-104b": TrainConfig(
+        opt=AdamWConfig(m_dtype="float32", v_mode="int8")),
+    "dbrx-132b": TrainConfig(
+        opt=AdamWConfig(m_dtype="float32", v_mode="int8")),
+}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, policy=None,
+               tcfg: TrainConfig | None = None):
+    """Returns (lowered, meta) for one cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    kind, structs = ispecs.input_specs(arch, shape_name)
+    policy = policy or shard.ShardingPolicy()
+
+    if kind == "train":
+        tcfg = tcfg or TRAIN_OVERRIDES.get(arch, TrainConfig())
+        step_fn, ctx, n_micro = train_step_mod.build_train_step(
+            cfg, mesh, tcfg, policy, global_batch=sh.global_batch)
+        state_struct = jax.eval_shape(
+            lambda k: train_step_mod.init_train_state(k, cfg, tcfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        sspecs = train_step_mod.state_specs(mesh, state_struct, tcfg, policy)
+        bspecs = shard.batch_specs(mesh, structs["batch"], policy)
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(_named(mesh, sspecs), _named(mesh, bspecs)),
+            out_shardings=(_named(mesh, sspecs), None),
+            donate_argnums=(0,),
+        ).lower(state_struct, structs["batch"])
+        meta = {"kind": kind, "n_micro": n_micro}
+    elif kind == "prefill":
+        _, prefill_fn, ctx = train_step_mod.build_serve_step(cfg, mesh,
+                                                             policy)
+        params_struct = jax.eval_shape(
+            lambda k: lm.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        pspecs = shard.param_specs(mesh, params_struct, policy)
+        bspecs = shard.batch_specs(mesh, structs["batch"], policy)
+        lowered = jax.jit(
+            prefill_fn,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+        ).lower(params_struct, structs["batch"])
+        meta = {"kind": kind}
+    else:  # decode
+        serve_fn, _, ctx = train_step_mod.build_serve_step(cfg, mesh,
+                                                           policy)
+        params_struct = jax.eval_shape(
+            lambda k: lm.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        pspecs = shard.param_specs(mesh, params_struct, policy)
+        cspecs = shard.cache_specs(mesh, structs["cache"], policy)
+        tok_spec = shard.batch_specs(mesh, {"t": structs["tokens"]},
+                                     policy)["t"]
+        lowered = jax.jit(
+            serve_fn,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                          _named(mesh, tok_spec)),
+            out_shardings=(None, _named(mesh, cspecs)),
+            donate_argnums=(1,),
+        ).lower(params_struct, structs["cache"], structs["tokens"])
+        meta = {"kind": kind}
+    return lowered, meta
+
+
+def roofline(cfg, shape_name, hlo, n_chips, kind, n_micro=1,
+             arg_bytes: float = 0.0):
+    sh = SHAPES[shape_name]
+    f = hlo["flops_per_device"]
+    # HBM model: MXU-feeding dot traffic + per-step argument/output traffic
+    # (the CPU-fusion boundary count is recorded separately as upper bound)
+    b = hlo["bytes_dot_per_device"] + arg_bytes
+    c = hlo["collective_traffic_per_device"]
+    t_compute = f / PEAK_FLOPS
+    t_mem = b / HBM_BW
+    t_coll = c / ICI_BW
+    # TPU-dtype correction: XLA:CPU promotes bf16 math to f32, so f32
+    # collectives (and dot operand traffic) are ~2x the TPU-native bf16
+    # movement.  Reported alongside the raw terms.
+    c_tpu = c - 0.5 * hlo.get("collective_traffic_f32_per_device", 0.0)
+    t_coll_tpu = c_tpu / ICI_BW
+    t_mem_tpu = (0.5 * hlo["bytes_dot_per_device"] + arg_bytes) / HBM_BW
+    tokens = sh.global_batch * (sh.seq_len if kind == "train" else
+                                (sh.seq_len if kind == "prefill" else 1))
+    n_active = cfg.active_param_count()
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * n_active * tokens
+    model_flops_per_chip = model_flops / n_chips
+    dominant = max((("compute", t_compute), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    bound = max(t_compute, t_mem, t_coll)
+    bound_tpu = max(t_compute, t_mem_tpu, t_coll_tpu)
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "t_memory_tpu_s": t_mem_tpu, "t_collective_tpu_s": t_coll_tpu,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops_per_chip / f) if f else 0.0,
+        "roofline_fraction": (model_flops_per_chip / PEAK_FLOPS) / bound
+        if bound else 0.0,
+        "roofline_fraction_tpu": (model_flops_per_chip / PEAK_FLOPS)
+        / bound_tpu if bound_tpu else 0.0,
+        "tokens_per_step": tokens,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, tag: str = "", policy=None,
+             tcfg=None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    name = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "ok": False}
+    t0 = time.time()
+    if not ok:
+        rec.update(status="skipped", reason=why, ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            lowered, meta = lower_cell(arch, shape_name, mesh,
+                                       policy=policy, tcfg=tcfg)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(mem)
+            cost = compiled.cost_analysis() or {}
+            print({k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed", "transcendentals")})
+            hlo_txt = compiled.as_text()
+            hlo = analyze(hlo_txt)
+            n_chips = 512 if multi_pod else 256
+            arg_bytes = ((mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes) if mem else 0.0)
+            rl = roofline(cfg, shape_name, hlo, n_chips, meta["kind"],
+                          meta.get("n_micro", 1), arg_bytes=arg_bytes)
+            per_dev_bytes = (mem.argument_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             + mem.output_size_in_bytes
+                             - mem.alias_size_in_bytes) if mem else None
+            rec.update(
+                status="ok", ok=True, meta=meta,
+                lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                memory_analysis={
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "alias_bytes": mem.alias_size_in_bytes,
+                    "per_device_total": per_dev_bytes,
+                    "fits_16GB": bool(per_dev_bytes is not None
+                                      and per_dev_bytes < 16e9),
+                } if mem else None,
+                cost_analysis={k: cost[k] for k in
+                               ("flops", "bytes accessed",
+                                "transcendentals") if k in cost},
+                hlo_analysis={k: hlo[k] for k in
+                              ("flops_per_device", "bytes_dot_per_device",
+                               "bytes_boundary_per_device",
+                               "collective_traffic_per_device",
+                               "collective_traffic_f32_per_device",
+                               "collectives", "n_computations")},
+                roofline=rl,
+            )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    status = rec.get("status")
+    print(f"[dryrun] {name}: {status} ({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else all_arch_ids()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, out_dir,
+                               force=args.force, tag=args.tag)
+                if rec.get("status") == "error":
+                    failures += 1
+    print(f"[dryrun] done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""``input_specs(arch, shape)`` — ShapeDtypeStruct stand-ins for every
+model input; weak-type-correct, shardable, zero allocation.
+
+For train: {tokens, labels} (+ patch_embeds / enc_embeds stubs).
+For prefill: prompt batch.  For decode: one-token batch + the KV/state
+cache of seq_len (built with jax.eval_shape — never allocated).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import lm
+from ..models.config import SHAPES, LMConfig, shape_applicable
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: LMConfig, seq: int, batch: int):
+    toks = seq
+    out = {}
+    if cfg.family == "vlm":
+        toks = seq - cfg.n_patches
+        out["patch_embeds"] = _sds((batch, cfg.n_patches, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["enc_embeds"] = _sds((batch, max(1, seq // cfg.enc_ratio),
+                                  cfg.d_model), jnp.bfloat16)
+    out["tokens"] = _sds((batch, toks), jnp.int32)
+    out["labels"] = _sds((batch, toks), jnp.int32)
+    return out
+
+
+def prefill_inputs(cfg: LMConfig, seq: int, batch: int):
+    return train_inputs(cfg, seq, batch)
+
+
+def decode_inputs(cfg: LMConfig, seq: int, batch: int):
+    """(cache_struct, tokens_struct): cache covers seq_len history."""
+    cache = jax.eval_shape(
+        lambda: lm.init_decode_cache(cfg, batch, seq))
+    tokens = _sds((batch, 1), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(arch: str, shape_name: str):
+    """Returns (kind, struct_dict) for the (arch x shape) cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    if sh.kind == "train":
+        return "train", {"batch": train_inputs(cfg, sh.seq_len,
+                                               sh.global_batch)}
+    if sh.kind == "prefill":
+        return "prefill", {"batch": prefill_inputs(cfg, sh.seq_len,
+                                                   sh.global_batch)}
+    cache, tokens = decode_inputs(cfg, sh.seq_len, sh.global_batch)
+    return "decode", {"cache": cache, "tokens": tokens}

@@ -1,0 +1,163 @@
+"""GQA attention: dense, block-wise (flash-style), windowed, and decode.
+
+Memory discipline matters more than FLOPs here: a 32k prefill must never
+materialize [S, S] scores.  ``blockwise_attention`` runs an online-softmax
+scan over a STATIC list of (q_block, k_block) pairs restricted to the
+causal (and window) footprint — so HLO FLOPs match the true causal cost
+at block granularity instead of paying the 2x full-mask waste.
+
+The Pallas flash kernel (repro/kernels/flash_attention) is the TPU target
+for this module; these jnp paths are the oracle and the CPU/dry-run
+fallback (select with ``impl='pallas'`` in the model config at runtime).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _group(q, n_kv):
+    """[B,S,Hq,hd] -> [B,S,Hkv,G,hd]"""
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    kv_len=None):
+    """Reference / small-S path.  q:[B,Sq,Hq,hd] k,v:[B,Sk,Hkv,hd]."""
+    b, sq, hq, hd = q.shape
+    n_kv = k.shape[2]
+    qg = _group(q, n_kv).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    logits = logits * scale                                  # [B,Hkv,G,Sq,Sk]
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:                                   # [B] valid length
+        mask = mask[None] & (kpos[None, None, :] < kv_len[:, None, None])
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    else:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def _block_pairs(n_q: int, n_k: int, causal: bool, window_blocks):
+    """Static list of (iq, ik) block pairs inside the attention footprint."""
+    pairs = []
+    for iq in range(n_q):
+        for ik in range(n_k):
+            if causal and ik > iq:
+                continue
+            if window_blocks is not None and ik < iq - window_blocks:
+                continue
+            pairs.append((iq, ik))
+    return np.array(pairs, np.int32)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                        block_q: int = 512, block_k: int = 1024):
+    """Flash-style attention via scan over the static causal block list.
+
+    q:[B,Sq,Hq,hd]  k,v:[B,Sk,Hkv,hd]  (Sq % block_q == 0, Sk % block_k == 0)
+    """
+    b, sq, hq, hd = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    g = hq // n_kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    n_q, n_k = sq // block_q, sk // block_k
+    wb = None
+    if window is not None:
+        # a k-block can contribute if any of its keys is within the window
+        wb = (window + block_k - 1) // block_k + (block_q // block_k)
+    pairs = _block_pairs(n_q, n_k, causal and q_offset == 0 and sq == sk, wb)
+
+    qg = _group(q, n_kv) * (1.0 / np.sqrt(hd))
+    # accumulators for every q position (fp32)
+    acc = jnp.zeros((b, sq, n_kv, g, hd), jnp.float32)
+    m = jnp.full((b, sq, n_kv, g), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, sq, n_kv, g), jnp.float32)
+
+    qpos_base = q_offset + jnp.arange(block_q)
+    kpos_base = jnp.arange(block_k)
+
+    def step(carry, pair):
+        acc, m, l = carry
+        iq, ik = pair[0], pair[1]
+        qb = jax.lax.dynamic_slice_in_dim(qg, iq * block_q, block_q, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k, ik * block_k, block_k, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, ik * block_k, block_k, axis=1)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32))            # [B,bq,Hkv,G,bk]
+        qp = qpos_base + iq * block_q
+        kp = kpos_base + ik * block_k
+        msk = jnp.ones((block_q, block_k), bool)
+        if causal:
+            msk &= qp[:, None] >= kp[None, :]
+        if window is not None:
+            msk &= kp[None, :] > qp[:, None] - window
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)                        # [B,bq,Hkv,G]
+        m_old = jax.lax.dynamic_slice_in_dim(m, iq * block_q, block_q, 1)
+        l_old = jax.lax.dynamic_slice_in_dim(l, iq * block_q, block_q, 1)
+        a_old = jax.lax.dynamic_slice_in_dim(acc, iq * block_q, block_q, 1)
+        m_new = jnp.maximum(m_old, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_old * corr + jnp.sum(p, axis=-1)
+        a_new = a_old * corr[..., None] + jnp.einsum(
+            "bqkgs,bskh->bqkgh", p, vb.astype(jnp.float32))
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, iq * block_q, 1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, iq * block_q, 1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, iq * block_q, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc, m, l), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window=None):
+    """Single-token decode: q:[B,1,Hq,hd], caches:[B,Smax,Hkv,hd],
+    kv_len:[B] number of valid cache slots (the new token already written)."""
+    b, _, hq, hd = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _group(q, n_kv).astype(jnp.float32)[:, 0]          # [B,Hkv,G,hd]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * scale     # [B,Hkv,G,S]
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos[None, :] < kv_len[:, None]                  # [B,S]
+    if window is not None:
+        mask &= kpos[None, :] >= kv_len[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    # fp32 softmax over the (possibly huge) cache axis
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset=0,
+              dense_threshold: int = 2048, block_q: int = 512,
+              block_k: int = 1024):
+    """Dispatch: dense for small S, blockwise beyond."""
+    if q.shape[1] <= dense_threshold and k.shape[1] <= dense_threshold:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k)

@@ -1,0 +1,87 @@
+"""Shared neural building blocks (pure JAX, functional)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def dense(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def ffn(x, p, ffn_type: str):
+    """p holds wg/wu/wd (+biases bu/bd optionally)."""
+    if ffn_type == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if ffn_type == "geglu":
+        return (jax.nn.gelu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if ffn_type == "gelu":
+        h = jax.nn.gelu(dense(x, p["wu"], p.get("bu")))
+        return dense(h, p["wd"], p.get("bd"))
+    raise ValueError(ffn_type)
+
+
+# --------------------------------------------------------------------- init
+
+def _he(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / np.sqrt(max(1, fan_in))).astype(dtype)
+
+
+def init_ffn(key, d, ff, ffn_type, use_bias, dtype, stack=()):
+    ks = jax.random.split(key, 3)
+    s = tuple(stack)
+    p = {}
+    if ffn_type in ("swiglu", "geglu"):
+        p["wg"] = _he(ks[0], s + (d, ff), d, dtype)
+        p["wu"] = _he(ks[1], s + (d, ff), d, dtype)
+        p["wd"] = _he(ks[2], s + (ff, d), ff, dtype)
+    else:
+        p["wu"] = _he(ks[0], s + (d, ff), d, dtype)
+        p["wd"] = _he(ks[1], s + (ff, d), ff, dtype)
+        if use_bias:
+            p["bu"] = jnp.zeros(s + (ff,), dtype)
+            p["bd"] = jnp.zeros(s + (d,), dtype)
+    return p
+
+
+def init_attn(key, d, n_heads, n_kv, hd, qk_norm, use_bias, dtype, stack=()):
+    ks = jax.random.split(key, 4)
+    s = tuple(stack)
+    p = {
+        "wq": _he(ks[0], s + (d, n_heads * hd), d, dtype),
+        "wk": _he(ks[1], s + (d, n_kv * hd), d, dtype),
+        "wv": _he(ks[2], s + (d, n_kv * hd), d, dtype),
+        "wo": _he(ks[3], s + (n_heads * hd, d), n_heads * hd, dtype),
+    }
+    if use_bias:
+        p["bq"] = jnp.zeros(s + (n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros(s + (n_kv * hd,), dtype)
+        p["bv"] = jnp.zeros(s + (n_kv * hd,), dtype)
+        p["bo"] = jnp.zeros(s + (d,), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.zeros(s + (hd,), dtype)
+        p["k_norm"] = jnp.zeros(s + (hd,), dtype)
+    return p

@@ -1,0 +1,587 @@
+"""Model assembly: init / train loss / prefill / decode for all families.
+
+Layer execution:
+* uniform stacks (dense, moe, ssm, vlm) — ``lax.scan`` over [L, ...]
+  stacked params (HLO size independent of depth; required to compile
+  llama3-405b's 126 layers on one core);
+* hybrid (recurrentgemma) — unrolled over the (r, r, a) pattern (26 layers
+  is cheap to inline and the two block types have different params);
+* encdec — two uniform stacks + cross-attention.
+
+Caches are plain dicts of arrays (pytree-friendly, shardable):
+  attention : k, v [L, B, Smax, Hkv, hd], pos [B]
+  ssm       : state [L,B,H,P,N], conv [L,B,K-1,Cc], pos [B]
+  hybrid    : hrec [Lr,B,W] fp32, conv [Lr,B,K-1,W], k,v [La,B,Wnd,Hkv,hd]
+              (ring buffer of the local window), pos [B]
+RoPE is applied to K at write time, so cached keys are position-baked.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from . import layers, moe, rglru, ssm
+from .config import LMConfig
+from .rope import apply_rope
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    """Everything the model needs to know about the mesh.  None of the
+    model code touches jax.sharding directly except through `constrain`."""
+    mesh: Any = None
+    dp_axis: str = "data"
+    tp_axis: str = "model"
+    ep: int = 1                     # expert-parallel degree (model axis size)
+    constrain: Callable = None      # (tensor, kind) -> tensor
+
+    @property
+    def ep_axis(self):
+        return self.tp_axis
+
+    def c(self, t, kind):
+        return self.constrain(t, kind) if self.constrain else t
+
+
+NO_PARALLEL = ParallelCtx()
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ============================================================ param init
+
+def init_params(key, cfg: LMConfig):
+    dt = _dt(cfg)
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_padded
+    params = {
+        "embed": (jax.random.normal(keys[0], (v, d), jnp.float32)
+                  * 0.02).astype(dt),
+        "final_norm": jnp.zeros((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[1], (d, v), jnp.float32)
+                          / np.sqrt(d)).astype(dt)
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _init_dense_stack(keys[2], cfg, dt, L)
+    elif cfg.family == "moe":
+        blk = _init_dense_stack(keys[2], cfg, dt, L, ffn=False)
+        blk.update(moe.init_moe(keys[3], cfg, dt, stack=(L,)))
+        params["blocks"] = blk
+    elif cfg.family == "ssm":
+        blk = {"ln1": jnp.zeros((L, d), dt)}
+        blk.update(ssm.init_mamba2(keys[2], cfg, dt, stack=(L,)))
+        params["blocks"] = blk
+    elif cfg.family == "hybrid":
+        params["blocks"] = []
+        lkeys = jax.random.split(keys[2], L)
+        for i in range(L):
+            kind = cfg.pattern_at(i)
+            p = {"ln1": jnp.zeros((d,), dt), "ln2": jnp.zeros((d,), dt)}
+            if kind == "r":
+                p["rec"] = rglru.init_recurrent(lkeys[i], cfg, dt)
+            else:
+                p["attn"] = layers.init_attn(lkeys[i], d, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.hd,
+                                             cfg.qk_norm, cfg.use_bias, dt)
+            p["ffn"] = layers.init_ffn(jax.random.fold_in(lkeys[i], 1), d,
+                                       cfg.d_ff, cfg.ffn_type, cfg.use_bias,
+                                       dt)
+            params["blocks"].append(p)
+    elif cfg.family == "encdec":
+        params["enc_blocks"] = _init_dense_stack(keys[2], cfg, dt,
+                                                 cfg.n_enc_layers)
+        dec = _init_dense_stack(keys[3], cfg, dt, L)
+        dec.update({f"x_{k}": vv for k, vv in layers.init_attn(
+            keys[4], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qk_norm,
+            cfg.use_bias, dt, stack=(L,)).items()})
+        dec["ln3"] = jnp.zeros((L, d), dt)
+        params["dec_blocks"] = dec
+        params["enc_norm"] = jnp.zeros((d,), dt)
+    return params
+
+
+def _init_dense_stack(key, cfg, dt, L, ffn=True):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    blk = {"ln1": jnp.zeros((L, d), dt), "ln2": jnp.zeros((L, d), dt)}
+    blk.update(layers.init_attn(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, cfg.qk_norm, cfg.use_bias, dt,
+                                stack=(L,)))
+    if ffn:
+        blk.update(layers.init_ffn(ks[1], d, cfg.d_ff, cfg.ffn_type,
+                                   cfg.use_bias, dt, stack=(L,)))
+    return blk
+
+
+# ============================================================ sub-blocks
+
+def _project_qkv(x, p, cfg, positions):
+    b, s, _ = x.shape
+    q = layers.dense(x, p["wq"], p.get("bq")).reshape(
+        b, s, cfg.n_heads, cfg.hd)
+    k = layers.dense(x, p["wk"], p.get("bk")).reshape(
+        b, s, cfg.n_kv_heads, cfg.hd)
+    v = layers.dense(x, p["wv"], p.get("bv")).reshape(
+        b, s, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_sub(x, p, cfg, ctx, *, causal=True, window=None, cache=None,
+              pos=None, cross_kv=None):
+    """Attention sub-block (no residual).  cache: (k_l, v_l) for decode."""
+    b, s, _ = x.shape
+    if cross_kv is not None:                         # cross-attention (dec)
+        q = layers.dense(x, p["wq"], p.get("bq")).reshape(
+            b, s, cfg.n_heads, cfg.hd)
+        k, v = cross_kv
+        o = attn.attention(q, k, v, causal=False)
+        o = ctx.c(o, "attn_out")
+        return layers.dense(o.reshape(b, s, -1), p["wo"], p.get("bo")), None
+    if cache is None:
+        positions = jnp.arange(s)[None, :]
+        q, k, v = _project_qkv(x, p, cfg, positions)
+        q = ctx.c(q, "attn_q")
+        k = ctx.c(k, "attn_kv")
+        v = ctx.c(v, "attn_kv")
+        o = attn.attention(q, k, v, causal=causal, window=window)
+        o = ctx.c(o, "attn_out")
+        return layers.dense(o.reshape(b, s, -1), p["wo"], p.get("bo")), (k, v)
+    k_l, v_l = cache                                  # [B, Smax, Hkv, hd]
+    q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+    if window is None:
+        slot = pos                                    # absolute slot
+    else:
+        slot = pos % k_l.shape[1]                     # ring buffer
+    bidx = jnp.arange(b)
+    k_l = k_l.at[bidx, slot].set(k_new[:, 0].astype(k_l.dtype))
+    v_l = v_l.at[bidx, slot].set(v_new[:, 0].astype(v_l.dtype))
+    kv_len = jnp.minimum(pos + 1, k_l.shape[1]) if window is not None \
+        else pos + 1
+    o = attn.decode_attention(q, k_l, v_l, kv_len,
+                              window=None)            # ring already bounds it
+    return (layers.dense(o.reshape(b, 1, -1), p["wo"], p.get("bo")),
+            (k_l, v_l))
+
+
+def _ffn_sub(x, p, cfg, ctx):
+    fp = {k: p[k] for k in ("wg", "wu", "wd", "bu", "bd") if k in p}
+    return ctx.c(layers.ffn(ctx.c(x, "ffn_in"), fp, cfg.ffn_type), "ffn_out")
+
+
+# ============================================================ block bodies
+
+def dense_block(x, p, cfg, ctx, cache=None, pos=None, window=None):
+    h, kv = _attn_sub(layers.rms_norm(x, p["ln1"], cfg.rms_eps), p, cfg, ctx,
+                      causal=True, window=window, cache=cache, pos=pos)
+    x = x + h
+    x = x + _ffn_sub(layers.rms_norm(x, p["ln2"], cfg.rms_eps), p, cfg, ctx)
+    return x, kv, jnp.zeros((), jnp.float32)
+
+
+def moe_block(x, p, cfg, ctx, cache=None, pos=None):
+    h, kv = _attn_sub(layers.rms_norm(x, p["ln1"], cfg.rms_eps), p, cfg, ctx,
+                      causal=True, cache=cache, pos=pos)
+    x = x + h
+    y, aux = moe.moe_ffn(layers.rms_norm(x, p["ln2"], cfg.rms_eps), p, cfg,
+                         ctx if ctx.ep > 1 else None)
+    return x + y, kv, aux
+
+
+def ssm_block(x, p, cfg, ctx, cache=None, pos=None):
+    h, new_cache = ssm.mamba2_block(
+        layers.rms_norm(x, p["ln1"], cfg.rms_eps), p, cfg,
+        constrain=(lambda t, kind: ctx.c(t, kind)), cache=cache, pos=pos)
+    return x + h, new_cache, jnp.zeros((), jnp.float32)
+
+
+def hybrid_block(x, p, cfg, ctx, kind, cache=None, pos=None):
+    if kind == "r":
+        h, new_cache = rglru.recurrent_block(
+            layers.rms_norm(x, p["ln1"], cfg.rms_eps), p["rec"], cfg,
+            cache=cache)
+        x = x + h
+    else:
+        h, new_cache = _attn_sub(layers.rms_norm(x, p["ln1"], cfg.rms_eps),
+                                 p["attn"], cfg, ctx, causal=True,
+                                 window=cfg.local_window, cache=cache,
+                                 pos=pos)
+        x = x + h
+    x = x + _ffn_sub(layers.rms_norm(x, p["ln2"], cfg.rms_eps), p["ffn"],
+                     cfg, ctx)
+    return x, new_cache
+
+
+_BLOCK = {"dense": dense_block, "vlm": dense_block, "moe": moe_block,
+          "ssm": ssm_block}
+
+
+# ============================================================ forward paths
+
+def embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "hybrid":                        # gemma-style scaling
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _run_stack(x, blocks, cfg, ctx, remat=False):
+    """Scan (uniform) or unroll (hybrid) the decoder stack for training."""
+    if cfg.family == "hybrid":
+        for i, p in enumerate(blocks):
+            x, _ = hybrid_block(x, p, cfg, ctx, cfg.pattern_at(i))
+        return x, jnp.zeros((), jnp.float32)
+
+    body_fn = _BLOCK[cfg.family]
+
+    def body(carry, p_layer):
+        x, aux = carry
+        x = ctx.c(x, "resid")
+        x, _, a = body_fn(x, p_layer, cfg, ctx)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def forward_hidden(params, tokens, cfg, ctx, *, patch_embeds=None,
+                   remat=False):
+    """Token ids -> final hidden states [B, S, d]."""
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    x = ctx.c(x, "resid")
+    x, aux = _run_stack(x, params["blocks"], cfg, ctx, remat=remat)
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, aux
+
+
+def _head(params, cfg):
+    return (params["embed"].T if cfg.tie_embeddings else params["head"])
+
+
+def xent_loss(h, head_w, labels, mask, ctx, chunk: int = 512):
+    """Chunked softmax cross-entropy: never materializes [B, S, V] at once.
+    h [B,S,d], labels/mask [B,S]."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    while s % chunk:            # largest divisor of s not above the target
+        chunk -= 1
+    n = s // chunk
+
+    def body(carry, i):
+        loss_sum, cnt = carry
+        hs = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+        logits = ctx.c(
+            (hs.astype(jnp.float32) @ head_w.astype(jnp.float32)), "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        loss_sum = loss_sum + jnp.sum((lse - ll) * ms)
+        cnt = cnt + jnp.sum(ms)
+        return (loss_sum, cnt), None
+
+    (loss_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    return loss_sum / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(params, batch, cfg, ctx, *, remat=True, aux_weight=0.01,
+               loss_chunk=512):
+    """batch: tokens [B,S] (+ labels, optional patch_embeds / enc_embeds)."""
+    if cfg.family == "encdec":
+        return _encdec_loss(params, batch, cfg, ctx, remat=remat)
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    h, aux = forward_hidden(params, tokens, cfg, ctx,
+                            patch_embeds=batch.get("patch_embeds"),
+                            remat=remat)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        npatch = batch["patch_embeds"].shape[1]
+        h = h[:, npatch:]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = xent_loss(h, _head(params, cfg), jnp.maximum(labels, 0), mask,
+                     ctx, chunk=loss_chunk)
+    return loss + aux_weight * aux
+
+
+# ------------------------------------------------------------- enc-dec
+
+def _enc_forward(params, enc_embeds, cfg, ctx, remat=False):
+    def body(carry, p_layer):
+        x = carry
+        h, _ = _attn_sub(layers.rms_norm(x, p_layer["ln1"], cfg.rms_eps),
+                         p_layer, cfg, ctx, causal=False)
+        x = x + h
+        x = x + _ffn_sub(layers.rms_norm(x, p_layer["ln2"], cfg.rms_eps),
+                         p_layer, cfg, ctx)
+        return x, None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, enc_embeds, params["enc_blocks"])
+    return layers.rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def _dec_block(x, p, cfg, ctx, cross_kv, cache=None, pos=None):
+    h, kv = _attn_sub(layers.rms_norm(x, p["ln1"], cfg.rms_eps), p, cfg, ctx,
+                      causal=True, cache=cache, pos=pos)
+    x = x + h
+    xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+    h, _ = _attn_sub(layers.rms_norm(x, p["ln3"], cfg.rms_eps), xp, cfg, ctx,
+                     cross_kv=cross_kv)
+    x = x + h
+    x = x + _ffn_sub(layers.rms_norm(x, p["ln2"], cfg.rms_eps), p, cfg, ctx)
+    return x, kv
+
+
+def _cross_kv(params, enc_out, cfg):
+    """Precompute per-layer cross K/V from encoder output: [L,B,Se,Hkv,hd]."""
+    b, se, _ = enc_out.shape
+    dec = params["dec_blocks"]
+
+    def body(_, p_layer):
+        xp = {k[2:]: v for k, v in p_layer.items() if k.startswith("x_")}
+        k = layers.dense(enc_out, xp["wk"], xp.get("bk")).reshape(
+            b, se, cfg.n_kv_heads, cfg.hd)
+        v = layers.dense(enc_out, xp["wv"], xp.get("bv")).reshape(
+            b, se, cfg.n_kv_heads, cfg.hd)
+        return None, (k, v)
+    _, kv = jax.lax.scan(body, None, dec)
+    return kv
+
+
+def _encdec_loss(params, batch, cfg, ctx, remat=True):
+    enc_out = _enc_forward(params, batch["enc_embeds"], cfg, ctx,
+                           remat=remat)
+    x = embed_tokens(params, batch["tokens"], cfg)
+    cross = _cross_kv(params, enc_out, cfg)
+
+    def body(x, xs):
+        p_layer, ckv = xs
+        x = ctx.c(x, "resid")
+        x, _ = _dec_block(x, p_layer, cfg, ctx, ckv)
+        return x, None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["dec_blocks"], cross))
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return xent_loss(x, _head(params, cfg), jnp.maximum(labels, 0), mask,
+                     ctx)
+
+
+# ============================================================ serving paths
+
+def init_decode_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {
+            "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        cc = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "state": jnp.zeros((L, batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((L, batch, cfg.conv_width - 1, cc), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        w = cfg.lru_width or cfg.d_model
+        n_r = sum(1 for i in range(cfg.n_layers) if cfg.pattern_at(i) == "r")
+        n_a = cfg.n_layers - n_r
+        wnd = min(cfg.local_window, max_len)
+        return {
+            "hrec": jnp.zeros((n_r, batch, w), jnp.float32),
+            "conv": jnp.zeros((n_r, batch, cfg.conv_width - 1, w), dtype),
+            "k": jnp.zeros((n_a, batch, wnd, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((n_a, batch, wnd, cfg.n_kv_heads, cfg.hd), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        enc_len = max(1, max_len // cfg.enc_ratio)
+        return {
+            "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "cross_k": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads,
+                                  cfg.hd), dtype),
+            "cross_v": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads,
+                                  cfg.hd), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cache, tokens, cfg, ctx):
+    """One token for every sequence.  tokens [B,1] -> logits [B, V]."""
+    x = embed_tokens(params, tokens, cfg)
+    x = ctx.c(x, "resid_decode")
+    pos = cache["pos"]
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        body_fn = _BLOCK[cfg.family]
+
+        def body(carry, xs):
+            x, _ = carry
+            p_layer, k_l, v_l = xs
+            x, kv, _ = body_fn(x, p_layer, cfg, ctx, cache=(k_l, v_l),
+                               pos=pos)
+            return (x, aux0), kv
+        (x, _), kvs = jax.lax.scan(body, (x, aux0),
+                                   (params["blocks"], cache["k"],
+                                    cache["v"]))
+        new_cache = {"k": kvs[0], "v": kvs[1], "pos": pos + 1}
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            x, _ = carry
+            p_layer, st, cv = xs
+            x, nc, _ = ssm_block(x, p_layer, cfg, ctx, cache=(st, cv),
+                                 pos=pos)
+            return (x, aux0), nc
+        (x, _), ncs = jax.lax.scan(body, (x, aux0),
+                                   (params["blocks"], cache["state"],
+                                    cache["conv"]))
+        new_cache = {"state": ncs[0], "conv": ncs[1], "pos": pos + 1}
+    elif cfg.family == "hybrid":
+        hrec, conv = [], []
+        ks, vs = [], []
+        ir = ia = 0
+        for i, p in enumerate(params["blocks"]):
+            kind = cfg.pattern_at(i)
+            if kind == "r":
+                x2, (h_new, tail) = hybrid_block(
+                    x, p, cfg, ctx, kind, cache=(cache["hrec"][ir],
+                                                 cache["conv"][ir]), pos=pos)
+                hrec.append(h_new)
+                conv.append(tail)
+                ir += 1
+            else:
+                x2, kv = hybrid_block(x, p, cfg, ctx, kind,
+                                      cache=(cache["k"][ia],
+                                             cache["v"][ia]), pos=pos)
+                ks.append(kv[0])
+                vs.append(kv[1])
+                ia += 1
+            x = x2
+        new_cache = {"hrec": jnp.stack(hrec), "conv": jnp.stack(conv),
+                     "k": jnp.stack(ks), "v": jnp.stack(vs), "pos": pos + 1}
+    elif cfg.family == "encdec":
+        def body(carry, xs):
+            x, _ = carry
+            p_layer, k_l, v_l, ck, cv = xs
+            x, kv = _dec_block(x, p_layer, cfg, ctx, cross_kv=(ck, cv),
+                               cache=(k_l, v_l), pos=pos)
+            return (x, aux0), kv
+        (x, _), kvs = jax.lax.scan(
+            body, (x, aux0),
+            (params["dec_blocks"], cache["k"], cache["v"],
+             cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, k=kvs[0], v=kvs[1], pos=pos + 1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = ctx.c(
+        x[:, 0].astype(jnp.float32) @ _head(params, cfg).astype(jnp.float32),
+        "logits")
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg, ctx, max_len: int | None = None):
+    """Process the full prompt; returns last-token logits + a decode cache.
+
+    For the dry-run shapes the interesting artifact is the compiled
+    prefill compute; the cache layout matches init_decode_cache."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if cfg.family == "encdec":
+        enc_out = _enc_forward(params, batch["enc_embeds"], cfg, ctx)
+        cross = _cross_kv(params, enc_out, cfg)
+        x = embed_tokens(params, tokens, cfg)
+
+        def body(x, xs):
+            p_layer, ckv = xs
+            x, kv = _dec_block(x, p_layer, cfg, ctx, ckv)
+            return x, kv
+        x, kvs = jax.lax.scan(body, x, (params["dec_blocks"], cross))
+        x = layers.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = x[:, -1].astype(jnp.float32) @ _head(params, cfg).astype(
+            jnp.float32)
+        cache = {"k": kvs[0], "v": kvs[1],
+                 "cross_k": cross[0], "cross_v": cross[1],
+                 "pos": jnp.full((b,), s, jnp.int32)}
+        return logits, cache
+
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x],
+                            axis=1)
+    x = ctx.c(x, "resid")
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        body_fn = _BLOCK[cfg.family]
+
+        def body(carry, p_layer):
+            x, aux = carry
+            x = ctx.c(x, "resid")
+            x, kv, a = body_fn(x, p_layer, cfg, ctx)
+            return (x, aux + a), kv
+        (x, _), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        cache = {"k": kvs[0], "v": kvs[1],
+                 "pos": jnp.full((b,), x.shape[1], jnp.int32)}
+    elif cfg.family == "ssm":
+        def body(carry, p_layer):
+            x = ctx.c(carry, "resid")
+            x, nc, _ = ssm_block(x, p_layer, cfg, ctx)
+            return x, nc
+        x, ncs = jax.lax.scan(body, x, params["blocks"])
+        cache = {"state": ncs[0], "conv": ncs[1],
+                 "pos": jnp.full((b,), s, jnp.int32)}
+    else:                                             # hybrid
+        hrec, conv, ks, vs = [], [], [], []
+        for i, p in enumerate(params["blocks"]):
+            kind = cfg.pattern_at(i)
+            x, c = hybrid_block(x, p, cfg, ctx, kind)
+            if kind == "r":
+                hrec.append(c[0])
+                conv.append(c[1])
+            else:
+                k, v = c
+                wnd = min(cfg.local_window, s)
+                ks.append(k[:, -wnd:])
+                vs.append(v[:, -wnd:])
+        cache = {"hrec": jnp.stack(hrec), "conv": jnp.stack(conv),
+                 "k": jnp.stack(ks), "v": jnp.stack(vs),
+                 "pos": jnp.full((b,), s, jnp.int32)}
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = x[:, -1].astype(jnp.float32) @ _head(params, cfg).astype(
+        jnp.float32)
+    return logits, cache

@@ -1,0 +1,111 @@
+"""RecurrentGemma blocks: RG-LRU recurrence + temporal conv + gating.
+
+RG-LRU (De, Smith et al., arXiv:2402.19427):
+    r_t = sigmoid(W_r x_t + b_r)            recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)            input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence with diagonal coefficients runs as a
+``jax.lax.associative_scan`` over (a, b) pairs — O(log S) depth, which is
+what makes the hybrid arch admissible for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+C_SCALE = 8.0
+
+
+def rg_lru(x, r, i, lam, h0=None):
+    """x, r, i: [B,S,W]; lam: [W].  Returns (y [B,S,W], h_last [B,W])."""
+    xf = x.astype(jnp.float32)
+    log_a = -C_SCALE * jax.nn.softplus(lam.astype(jnp.float32)) \
+        * jax.nn.sigmoid(r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i.astype(jnp.float32)) * xf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(x, r, i, lam, h_prev):
+    """One decode step: x,r,i: [B,W]; h_prev: [B,W] fp32."""
+    xf = x.astype(jnp.float32)
+    log_a = -C_SCALE * jax.nn.softplus(lam.astype(jnp.float32)) \
+        * jax.nn.sigmoid(r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i.astype(jnp.float32)) * xf
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a),
+                                          1e-12)) * gated
+    return h.astype(x.dtype), h
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv width K.  cache: [B, K-1, W] tail or None."""
+    k = w.shape[0]
+    if cache is None:
+        y = x * w[-1]
+        for j in range(1, k):
+            shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :x.shape[1]]
+            y = y + shifted * w[-1 - j]
+        tail = x[:, -(k - 1):, :]
+        return y, tail
+    window = jnp.concatenate([cache, x], axis=1)            # [B,K,W]
+    y = jnp.einsum("bkw,kw->bw", window, w)[:, None]
+    return y, window[:, 1:, :]
+
+
+def recurrent_block(x, p, cfg, cache=None):
+    """RG recurrent block.  Train: x [B,S,d], cache None.
+    Decode: x [B,1,d], cache=(h [B,W] fp32, conv_tail [B,K-1,W])."""
+    lru_in = x @ p["w_x"]                                    # [B,S,W]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    if cache is None:
+        conv, tail = _causal_conv(lru_in, p["w_conv"])
+        r = conv @ p["w_r"] + p["b_r"]
+        i = conv @ p["w_i"] + p["b_i"]
+        y, h_last = rg_lru(conv, r, i, p["lam"])
+    else:
+        h_prev, conv_cache = cache
+        conv, tail = _causal_conv(lru_in, p["w_conv"], conv_cache)
+        r = conv[:, 0] @ p["w_r"] + p["b_r"]
+        i = conv[:, 0] @ p["w_i"] + p["b_i"]
+        y1, h_last = rg_lru_step(conv[:, 0], r, i, p["lam"], h_prev)
+        y = y1[:, None]
+    out = (y * gate) @ p["w_out"]
+    return out, (h_last, tail)
+
+
+def init_recurrent(key, cfg, dtype, stack=()):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    s = tuple(stack)
+    def he(k, shape, fan):
+        return (jax.random.normal(k, shape, jnp.float32)
+                / np.sqrt(fan)).astype(dtype)
+    return {
+        "w_x": he(ks[0], s + (d, w), d),
+        "w_gate": he(ks[1], s + (d, w), d),
+        "w_conv": (jax.random.normal(ks[2], s + (cfg.conv_width, w),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "w_r": he(ks[3], s + (w, w), w),
+        "w_i": he(ks[4], s + (w, w), w),
+        "b_r": jnp.zeros(s + (w,), dtype),
+        "b_i": jnp.zeros(s + (w,), dtype),
+        # Lambda init so that a ~ U(0.9, 0.999)^(1/c) territory (paper App.)
+        "lam": jnp.full(s + (w,), 0.7, jnp.float32),
+        "w_out": he(ks[5], s + (w, d), w),
+    }

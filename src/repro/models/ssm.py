@@ -1,0 +1,165 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Math (Dao & Gu, arXiv:2405.21060): per head h with state size N and head
+dim P, the recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t (B_t ⊗ x_t),
+y_t = C_t · h_t + D x_t  is evaluated in chunks of Q tokens:
+
+  intra-chunk:  Y_intra = ((C Bᵀ) ∘ L) (dt ∘ X)  with L the causal
+                exp-segsum matrix (the "attention-like" dual form);
+  inter-chunk:  chunk states S_c are passed through a short scan and
+                applied as  Y_inter = (C ∘ exp(cumsum dA)) H_{c-1}.
+
+Everything is einsum-based so GSPMD can shard the head dimension (H) over
+the model axis — the [B, nc, H, Q, Q] intra-chunk tensor is the memory
+hot-spot and must be head-sharded at scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+
+
+def _depthwise_causal_conv(x, w):
+    """x: [B,S,C], w: [K,C] causal depthwise conv via K shifted adds."""
+    k = w.shape[0]
+    y = x * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        y = y + shifted * w[-1 - i]
+    return y
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int, constrain=None):
+    """x:[B,S,H,P] dt:[B,S,H] a_log:[H] b,c:[B,S,N] -> y:[B,S,H,P], final
+    state [B,H,P,N].  fp32 internal."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc, q = s // chunk, chunk
+    ident = constrain or (lambda t, kind: t)
+
+    xf = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtf = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bf = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cf = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # [H], negative
+    da = dtf * a                                            # [B,nc,Q,H]
+    cs = jnp.cumsum(da, axis=2)                             # [B,nc,Q,H]
+
+    # --- intra-chunk (dual quadratic form, causal-masked) -------------------
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # [B,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    l_mat = ident(l_mat, "ssd_L")                           # shard H at scale
+    cb = jnp.einsum("bcqn,bckn->bcqk", cf, bf)              # [B,nc,Q,Q]
+    w_in = dtf[..., None] * xf                              # dt ∘ x
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp",
+                         cb, l_mat, w_in)
+
+    # --- chunk states + inter-chunk scan -------------------------------------
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)           # [B,nc,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                        bf, dtf * decay_to_end, xf)         # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                  # [B,nc,H]
+
+    def scanner(h_prev, inp):
+        st, dec = inp
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_last, h_before = jax.lax.scan(
+        scanner, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)            # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         cf, jnp.exp(cs), h_before)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    return y, h_last
+
+
+def ssd_decode_step(x, dt, a_log, b, c, d_skip, state):
+    """One token: x:[B,H,P] dt:[B,H] b,c:[B,N] state:[B,H,P,N]."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dtf * a)                                # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, b.astype(jnp.float32))
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), state)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * xf
+    return y, state
+
+
+def mamba2_block(x, p, cfg, constrain=None, cache=None, pos=None):
+    """Full block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Train/prefill: x [B,S,d], cache None -> (y, (ssm_state, conv_tail)).
+    Decode: x [B,1,d] with cache=(ssm_state [B,H,P,N], conv_tail
+    [B,K-1,Cc]) -> (y, new_cache).
+    """
+    bsz, s, _ = x.shape
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p_dim = cfg.ssm_head_dim
+    conv_ch = d_in + 2 * n
+
+    zxbcdt = x @ p["w_in"]                                   # [B,S,2di+2N+H]
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)     # [B,S,Cc]
+
+    if cache is None:
+        conv = _depthwise_causal_conv(conv_in, p["w_conv"])
+        conv_tail = conv_in[:, -(cfg.conv_width - 1):, :]
+    else:
+        ssm_state, prev_tail = cache
+        window = jnp.concatenate([prev_tail, conv_in], axis=1)  # [B,K,Cc]
+        conv = jnp.einsum("bkc,kc->bc", window, p["w_conv"])[:, None]
+        conv_tail = window[:, 1:, :]
+    conv = jax.nn.silu(conv)
+    xs, bs, cs = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if cache is None:
+        y, state = ssd_chunked(
+            xs.reshape(bsz, s, h, p_dim), dt, p["a_log"], bs, cs,
+            p["d_skip"], min(cfg.ssm_chunk, s), constrain)
+        y = y.reshape(bsz, s, d_in)
+    else:
+        y, state = ssd_decode_step(
+            xs[:, 0].reshape(bsz, h, p_dim), dt[:, 0], p["a_log"],
+            bs[:, 0], cs[:, 0], p["d_skip"], ssm_state)
+        y = y.reshape(bsz, 1, d_in)
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)                   # gated
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    out = y @ p["w_out"]
+    return out, (state, conv_tail)
+
+
+def init_mamba2(key, cfg, dtype, stack=()):
+    d, d_in, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    s = tuple(stack)
+    proj_out = 2 * d_in + 2 * n + h
+    return {
+        "w_in": (jax.random.normal(ks[0], s + (d, proj_out), jnp.float32)
+                 / np.sqrt(d)).astype(dtype),
+        "w_conv": (jax.random.normal(ks[1], s + (cfg.conv_width,
+                                                 d_in + 2 * n), jnp.float32)
+                   * 0.1).astype(dtype),
+        "a_log": jnp.zeros(s + (h,), jnp.float32),
+        "dt_bias": jnp.zeros(s + (h,), jnp.float32),
+        "d_skip": jnp.ones(s + (h,), jnp.float32),
+        "norm": jnp.zeros(s + (d_in,), dtype),
+        "w_out": (jax.random.normal(ks[2], s + (d_in, d), jnp.float32)
+                  / np.sqrt(d_in)).astype(dtype),
+    }

@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, global_norm,
+                    lr_schedule)
+from .compress import compress_grads, decompress_grads
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "lr_schedule", "compress_grads", "decompress_grads"]

@@ -1,0 +1,156 @@
+"""AdamW with memory-tiered optimizer state.
+
+State tiers (per-tensor, uniform across the tree):
+  m: fp32 (default) or bf16
+  v: fp32 (default) or int8 block-quantized (128-wide blocks, fp32 scale
+     per block) — the trick that makes llama3-405b training state fit
+     256 x 16 GB: 2 (param) + 2 (m bf16) + ~1.03 (v int8) B/param.
+
+Quantization is dynamic-range: v >= 0, so int8 stores v/scale in [0,127].
+Decode-update-encode happens inside the update step; the dequantization
+error feeds back through the next update (second-moment error is benign —
+this is the bnb-style 8-bit Adam recipe).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Q_BLOCK = 128
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    m_dtype: str = "float32"        # float32 | bfloat16 | int8 (signed blocks)
+    v_mode: str = "float32"         # float32 | int8
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+# --------------------------------------------------- int8 block quantization
+# Blocks run along the LAST axis and the quantized tensor keeps the
+# parameter's leading dims, so it inherits the parameter's sharding spec
+# (critical: a flat layout could not be FSDP-sharded).
+
+def quantize_v(v, signed: bool = False):
+    """signed=False (second moment): stores sqrt(v) — compresses the range
+    so small entries survive the block scale, and the dequantizer floors
+    at a quarter quantization step.  A LINEAR int8 of raw v rounds small
+    entries to ZERO while m keeps magnitude, so m/(sqrt(0)+eps) explodes
+    (observed: loss 6.2 -> 595 in 30 steps).  signed=True (first moment):
+    plain symmetric linear blocks."""
+    v = v.astype(jnp.float32)
+    if not signed:
+        v = jnp.sqrt(jnp.maximum(v, 0.0))
+    *lead, last = v.shape
+    pad = (-last) % Q_BLOCK
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * len(lead) + [(0, pad)])
+    nb = (last + pad) // Q_BLOCK
+    blocks = v.reshape(*lead, nb, Q_BLOCK)
+    mag = jnp.abs(blocks) if signed else blocks
+    scale = jnp.max(mag, axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def dequantize_v(qv, shape, signed: bool = False):
+    *lead, last = shape
+    s = qv["q"].astype(jnp.float32) * qv["scale"]
+    if signed:
+        out = s
+    else:
+        # floor unsigned (sqrt-space) values at a quarter step:
+        # unrepresentably small true values become bounded small
+        # denominators, never zero
+        floored = jnp.maximum(s, 0.25 * qv["scale"])
+        out = floored * floored
+    out = out.reshape(*lead, -1)
+    return out[..., :last]
+
+
+# ------------------------------------------------------------------ adamw
+
+def adamw_init(params, cfg: AdamWConfig):
+    mdt = jnp.bfloat16 if cfg.m_dtype == "bfloat16" else jnp.float32
+
+    def init_leaf(p):
+        if cfg.m_dtype == "int8":
+            m = quantize_v(jnp.zeros(p.shape, jnp.float32), signed=True)
+        else:
+            m = jnp.zeros(p.shape, mdt)
+        if cfg.v_mode == "int8":
+            v = quantize_v(jnp.zeros(p.shape, jnp.float32))
+        else:
+            v = jnp.zeros(p.shape, jnp.float32)
+        return {"m": m, "v": v}
+
+    return {"mu": jax.tree.map(init_leaf, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu):
+        g = g.astype(jnp.float32) * scale
+        if cfg.m_dtype == "int8":
+            m = dequantize_v(mu["m"], p.shape, signed=True)
+        else:
+            m = mu["m"].astype(jnp.float32)
+        if cfg.v_mode == "int8":
+            v = dequantize_v(mu["v"], p.shape)
+        else:
+            v = mu["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        new_m = (quantize_v(m, signed=True) if cfg.m_dtype == "int8"
+                 else m.astype(mu["m"].dtype))
+        new_mu = {"m": new_m,
+                  "v": quantize_v(v) if cfg.v_mode == "int8" else v}
+        return new_p, new_mu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    out = [upd(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}, {"grad_norm": gnorm,
+                                                      "lr": lr}

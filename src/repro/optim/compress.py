@@ -1,0 +1,63 @@
+"""int8 gradient compression with error feedback.
+
+Used to shrink the cross-pod (DCN) gradient all-reduce: grads are
+block-quantized to int8 before the reduction and dequantized after, with
+the quantization residual carried to the next step (error feedback keeps
+the scheme unbiased in the long run).
+
+Because XLA inserts the all-reduce implicitly from shardings, the
+compression is expressed as quantize -> (reduce happens on the int32
+partial sums upstream) -> dequantize around the gradient tree; on a real
+multi-pod deployment the quantized tree is what crosses DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+
+
+def _quant(x):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: int(np.prod(shape))].reshape(shape)
+
+
+def compress_grads(grads, error=None):
+    """Returns (quantized tree, new error-feedback tree)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quant(corrected)
+        deq = _dequant(q, s, g.shape)
+        return {"q": q, "s": s}, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree.unflatten(treedef, [p[1] for p in pairs]))
+
+
+def decompress_grads(qtree, shapes_like):
+    flat_q, treedef = jax.tree.flatten(
+        qtree, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    flat_s = treedef.flatten_up_to(shapes_like)
+    return jax.tree.unflatten(
+        treedef, [_dequant(q["q"], q["s"], s.shape)
+                  for q, s in zip(flat_q, flat_s)])

@@ -1,0 +1,5 @@
+from .sharding import (ShardingPolicy, make_ctx, param_specs, batch_specs,
+                       cache_specs, to_named)
+
+__all__ = ["ShardingPolicy", "make_ctx", "param_specs", "batch_specs",
+           "cache_specs", "to_named"]

@@ -1,0 +1,208 @@
+"""Sharding policy: param / activation / cache PartitionSpecs.
+
+Baseline layout (paper-faithful Megatron-style 2D = FSDP('data') x
+TP('model'), pure DP over 'pod'):
+
+  embed [V, d]            -> (model, data)       vocab-parallel
+  attn  wq/wk/wv [.,d,H*hd]-> (., data, model)    column-parallel heads
+        wo [., H*hd, d]   -> (., model, data)    row-parallel
+  ffn   wg/wu [., d, ff]  -> (., data, model)
+        wd [., ff, d]     -> (., model, data)
+  moe   we_* [., E, d, ff]-> (., model=EP, data, .)
+  ssm   w_in [., d, proj] -> (., data, model)    etc.
+  caches k/v [L,B,S,Hkv,hd]-> (., dp, model, ., .)  sequence-sharded KV
+
+EVERY dim rule is divisibility-guarded: if a dim doesn't divide by the
+axis size it falls back to replication for that dim (e.g. batch=1 in
+long_500k).  This keeps one policy valid across all 40 (arch x shape)
+cells and both meshes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.lm import ParallelCtx
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Tunable knobs — the perf hillclimb flips these."""
+    fsdp_params: bool = True        # shard the non-TP weight dim over 'data'
+    seq_shard_resid: bool = False   # sequence-shard residual activations
+    shard_logits: bool = True
+    kv_seq_axis: str = "model"      # decode KV cache: shard seq over...
+    tp_enable: bool = True          # False: 'model' axis becomes extra DP
+                                    # (small models: TP all-reduce >> FLOPs)
+    replicate_embed: bool = False   # small models: replicated embed/head
+                                    # kills vocab-partial logits all-reduces
+
+
+def _axes(mesh, policy: "ShardingPolicy | None" = None):
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    if policy is not None and not policy.tp_enable:
+        return dp + ("model",), None
+    return dp, "model"
+
+
+def _div(mesh, dim: int, axis) -> Any:
+    """Use `axis` for this dim only if it divides evenly."""
+    if axis is None or dim <= 0:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in
+                        (axis if isinstance(axis, tuple) else (axis,))]))
+    return axis if dim % size == 0 else None
+
+
+def param_specs(mesh, params, policy: ShardingPolicy | None = None):
+    """Pytree of PartitionSpecs matching `params` (works on shape structs)."""
+    policy = policy or ShardingPolicy()
+    dp, tp = _axes(mesh, policy)
+    fs = "data" if (policy.fsdp_params and "data" in mesh.axis_names) \
+        else None
+
+    def rule(path, leaf):
+        key = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                key = str(p.key)
+                break
+        shape = leaf.shape
+        nd = len(shape)
+
+        def spec(*dims):
+            """dims given for the TRAILING len(dims) axes; leading axes
+            (layer stacking) replicate."""
+            lead = (None,) * (nd - len(dims))
+            out = []
+            for size, ax in zip(shape[nd - len(dims):], dims):
+                out.append(_div(mesh, size, ax))
+            return P(*(lead + tuple(out)))
+
+        if key in ("embed",):
+            return P() if policy.replicate_embed else spec(tp, fs)
+        if key in ("head",):
+            return P() if policy.replicate_embed else spec(fs, tp)
+        if key and key.startswith("x_"):
+            key = key[2:]
+        if key in ("wq", "wk", "wv", "w_in", "wg", "wu", "w_x", "w_gate",
+                   "w_r", "w_i", "s_wg", "s_wu"):
+            return spec(fs, tp)
+        if key in ("wo", "wd", "w_out", "s_wd"):
+            return spec(tp, fs)
+        if key in ("bq", "bk", "bv", "bu", "b_r", "b_i", "lam", "s_bu"):
+            return spec(tp)
+        if key in ("we_g", "we_u"):                     # [., E, d, ff]
+            return spec(tp, fs, None)
+        if key in ("we_d",):                            # [., E, ff, d]
+            return spec(tp, None, fs)
+        if key in ("router",):
+            return spec(None, None)
+        if key in ("w_conv",):                          # [., K, C]
+            return spec(None, tp)
+        if key in ("a_log", "dt_bias", "d_skip"):       # [., H]
+            return spec(tp)
+        if key in ("norm",):                            # [., d_in]
+            return spec(tp)
+        return P()                                       # norms, biases, etc.
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_specs(mesh, batch, policy: ShardingPolicy | None = None):
+    dp, tp = _axes(mesh, policy)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        lead = _div(mesh, shape[0], dp)
+        rest = (None,) * (len(shape) - 1)
+        return P(lead, *rest)
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_specs(mesh, cache, policy: ShardingPolicy | None = None):
+    """Decode caches: [L, B, S|W, ...] -> (., dp, kv_seq_axis, ., .);
+    ssm state [L, B, H, P, N] -> (., dp, model, ., .)."""
+    policy = policy or ShardingPolicy()
+    dp, tp = _axes(mesh, policy)
+
+    def rule(path, leaf):
+        key = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                key = str(p.key)
+                break
+        shape = leaf.shape
+        if key == "pos":
+            return P(_div(mesh, shape[0], dp))
+        if key in ("k", "v", "cross_k", "cross_v"):      # [L,B,S,Hkv,hd]
+            return P(None, _div(mesh, shape[1], dp),
+                     _div(mesh, shape[2], tp), None, None)
+        if key == "state":                               # [L,B,H,P,N]
+            return P(None, _div(mesh, shape[1], dp),
+                     _div(mesh, shape[2], tp), None, None)
+        if key == "conv":                                # [L,B,K-1,C]
+            return P(None, _div(mesh, shape[1], dp), None,
+                     _div(mesh, shape[3], tp))
+        if key == "hrec":                                # [Lr,B,W]
+            return P(None, _div(mesh, shape[1], dp),
+                     _div(mesh, shape[2], tp))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def activation_rules(mesh, policy: ShardingPolicy):
+    dp, tp = _axes(mesh, policy)
+    seq = tp if policy.seq_shard_resid else None
+    logits_tp = tp if policy.shard_logits else None
+    return {
+        "resid": P(dp, seq, None),
+        "resid_decode": P(dp, None, None),
+        "ffn_in": P(dp, seq, None),
+        "ffn_out": P(dp, seq, None),
+        "attn_q": P(dp, None, tp, None),
+        "attn_kv": P(dp, None, None, None),
+        "attn_out": P(dp, None, tp, None),
+        "logits": P(dp, None, logits_tp),
+        "ssd_L": P(dp, None, None, None, tp),
+    }
+
+
+def make_ctx(mesh, cfg, policy: ShardingPolicy | None = None) -> ParallelCtx:
+    policy = policy or ShardingPolicy()
+    dp, tp = _axes(mesh, policy)
+    rules = activation_rules(mesh, policy)
+
+    def constrain(t, kind):
+        spec = rules.get(kind)
+        if spec is None or mesh is None:
+            return t
+        # guard rank + divisibility
+        if len(spec) != t.ndim:
+            return t
+        fixed = []
+        for size, ax in zip(t.shape, spec):
+            fixed.append(_div(mesh, size, ax))
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(mesh, P(*fixed)))
+
+    ep = mesh.shape[tp] if (cfg.family == "moe" and tp is not None
+                            and tp in mesh.axis_names) else 1
+    return ParallelCtx(mesh=mesh, dp_axis=dp if len(dp) > 1 else dp[0],
+                       tp_axis=tp or "model", ep=ep, constrain=constrain)
+
+
+def to_named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

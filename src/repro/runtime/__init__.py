@@ -1,0 +1,5 @@
+from .fault import (ElasticPlan, FailureDetector, StragglerWatchdog,
+                    plan_elastic_mesh)
+
+__all__ = ["ElasticPlan", "FailureDetector", "StragglerWatchdog",
+           "plan_elastic_mesh"]

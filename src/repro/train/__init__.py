@@ -1,0 +1,5 @@
+from .step import TrainConfig, build_train_step, build_serve_step, \
+    init_train_state, opt_specs
+
+__all__ = ["TrainConfig", "build_train_step", "build_serve_step",
+           "init_train_state", "opt_specs"]

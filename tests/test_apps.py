@@ -1,0 +1,106 @@
+"""Applications over the SELCC API: B-link tree + transaction engines."""
+
+import pytest
+
+from repro.apps.btree import BLinkTree
+from repro.apps.txn import TxnConfig, TxnEngine
+from repro.apps.workloads import TPCCConfig, TPCCTables, tpcc_worker
+from repro.core import (ClusterConfig, SELCCConfig, SELCCLayer,
+                        check_coherence, merge_histories)
+
+
+def _layer(n_compute=3, threads=4, cache=512):
+    return SELCCLayer(ClusterConfig(
+        n_compute=n_compute, n_memory=2, threads_per_node=threads,
+        selcc=SELCCConfig(cache_capacity=cache)))
+
+
+def test_btree_concurrent_inserts_all_found():
+    layer = _layer()
+    trees = [BLinkTree(layer, n, fanout=16) for n in layer.nodes]
+    n = 400
+    procs = []
+    for j, t in enumerate(trees):
+        def ins(tree=t, base=j):
+            for i in range(n):
+                yield from tree.insert(base + i * 3, i)
+        procs.append(layer.env.process(ins()))
+    layer.env.run_until_complete(procs, hard_limit=200)
+
+    missing = []
+    def verify(tree=trees[0]):
+        for j in range(3):
+            for i in range(n):
+                v = yield from tree.lookup(j + i * 3)
+                if v is None:
+                    missing.append((j, i))
+    p = layer.env.process(verify())
+    layer.env.run_until_complete([p], hard_limit=400)
+    assert not missing
+
+
+def test_btree_range_scan():
+    layer = _layer(n_compute=1, threads=1)
+    tree = BLinkTree(layer, layer.nodes[0], fanout=8)
+    def work():
+        for i in range(100):
+            yield from tree.insert(i, i * 10)
+        out = yield from tree.range_scan(20, 10)
+        assert [k for k, _ in out] == list(range(20, 30))
+        assert [v for _, v in out] == [k * 10 for k in range(20, 30)]
+    p = layer.env.process(work())
+    layer.env.run_until_complete([p], hard_limit=100)
+
+
+def test_btree_runs_on_sel_unchanged():
+    layer = SELCCLayer(ClusterConfig(n_compute=2, n_memory=2,
+                                     threads_per_node=2, protocol="sel"))
+    tree = BLinkTree(layer, layer.nodes[0], fanout=8)
+    def work():
+        for i in range(60):
+            yield from tree.insert(i, i)
+        v = yield from tree.lookup(42)
+        assert v == 42
+    p = layer.env.process(work())
+    layer.env.run_until_complete([p], hard_limit=100)
+
+
+@pytest.mark.parametrize("algo", ["2pl", "to", "occ"])
+def test_txn_engine_commits(algo):
+    layer = _layer(n_compute=2, threads=4, cache=4096)
+    cfg = TPCCConfig(warehouses=4, txns_per_thread=20)
+    tables = TPCCTables(cfg)
+    engines = [TxnEngine(layer, nd, TxnConfig(algo=algo), tables.n_tuples)
+               for nd in layer.nodes]
+    procs = []
+    for ni, e in enumerate(engines):
+        for t in range(4):
+            procs.append(layer.env.process(
+                tpcc_worker(e, tables, cfg, 0, ni, 2, t, seed=13)))
+    layer.env.run_until_complete(procs, hard_limit=200)
+    commits = sum(e.stats.commits for e in engines)
+    total = commits + sum(e.stats.aborts for e in engines)
+    assert total == 2 * 4 * 20
+    assert commits > total * 0.4, f"{algo}: too few commits"
+
+
+def test_2pc_partitioned_slower_with_cross_shard():
+    def run(dist_ratio):
+        layer = _layer(n_compute=4, threads=4, cache=4096)
+        cfg = TPCCConfig(warehouses=8, txns_per_thread=10,
+                         distribution_ratio=dist_ratio)
+        tables = TPCCTables(cfg)
+        engines = [TxnEngine(layer, nd,
+                             TxnConfig(algo="2pl", wal=True,
+                                       partitioned=True), tables.n_tuples)
+                   for nd in layer.nodes]
+        for e in engines:
+            e.partition_fn = tables.partition_of
+        procs = []
+        for ni, e in enumerate(engines):
+            for t in range(4):
+                procs.append(layer.env.process(
+                    tpcc_worker(e, tables, cfg, 1, ni, 4, t, seed=5)))
+        layer.env.run_until_complete(procs, hard_limit=2000)
+        return sum(e.stats.commits for e in engines) / layer.env.now
+    assert run(0.0) > 1.3 * run(1.0)

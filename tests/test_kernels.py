@@ -1,0 +1,158 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracle, swept over
+shapes/dtypes (+ hypothesis sweeps for the latch kernel)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.gcl_fetch.ops import fetch
+from repro.kernels.latch_ops.ops import apply_batch
+from repro.kernels.paged_attention.ops import decode_paged
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd,causal,dtype", [
+    (2, 256, 4, 2, 64, True, jnp.float32),
+    (1, 512, 8, 8, 128, True, jnp.float32),
+    (2, 256, 4, 1, 128, False, jnp.float32),
+    (1, 256, 8, 4, 64, True, jnp.bfloat16),
+    (1, 128, 2, 2, 256, True, jnp.float32),
+])
+def test_flash_attention_matches_ref(b, s, hq, hkv, hd, causal, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, s, hq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), dtype)
+    ref = attention(q, k, v, causal=causal, backend="ref")
+    pal = attention(q, k, v, causal=causal, backend="pallas",
+                    interpret=True, block_q=128, block_k=128)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                 - pal.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("b,hq,hkv,hd,page,mp,pool,dtype", [
+    (4, 8, 2, 64, 16, 8, 64, jnp.float32),
+    (2, 4, 4, 128, 32, 4, 32, jnp.float32),
+    (3, 8, 1, 128, 16, 6, 128, jnp.float32),
+    (2, 16, 8, 64, 8, 4, 32, jnp.bfloat16),
+])
+def test_paged_attention_matches_ref(b, hq, hkv, hd, page, mp, pool,
+                                     dtype):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(b, hq, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(pool, page, hkv, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(pool, page, hkv, hd)), dtype)
+    tbl = jnp.asarray(rng.integers(0, pool, (b, mp)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, mp * page, b), jnp.int32)
+    ref = decode_paged(q, kp, vp, tbl, lens, backend="ref")
+    pal = decode_paged(q, kp, vp, tbl, lens, backend="pallas",
+                       interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                 - pal.astype(jnp.float32)))) < tol
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), r=st.integers(1, 64))
+def test_latch_ops_match_ref(seed, r):
+    rng = np.random.default_rng(seed)
+    n = 2048
+    words = jnp.asarray(rng.integers(0, 2 ** 20, (n, 2)), jnp.int32)
+    line = rng.integers(-1, n, r).astype(np.int32)
+    req = {
+        "line": jnp.asarray(line),
+        "op": jnp.asarray(rng.integers(0, 2, r), jnp.int32),
+        "arg_hi": jnp.asarray(rng.integers(-4, 4, r), jnp.int32),
+        "arg_lo": jnp.asarray(rng.integers(0, 2 ** 16, r), jnp.int32),
+        "cmp_hi": jnp.asarray(rng.integers(0, 4, r), jnp.int32),
+        "cmp_lo": jnp.asarray(
+            np.asarray(words)[np.maximum(line, 0), 1], jnp.int32),
+    }
+    ref = apply_batch(words, req, backend="ref")
+    pal = apply_batch(words, req, backend="pallas", interpret=True)
+    for a, b in zip(ref, pal):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latch_ops_same_line_serialization():
+    # 3 FAAs to the same line must serialize: old values chain
+    words = jnp.zeros((1024, 2), jnp.int32)
+    req = {
+        "line": jnp.asarray([5, 5, 5], jnp.int32),
+        "op": jnp.asarray([1, 1, 1], jnp.int32),
+        "arg_hi": jnp.zeros(3, jnp.int32),
+        "arg_lo": jnp.asarray([1, 2, 4], jnp.int32),
+        "cmp_hi": jnp.zeros(3, jnp.int32),
+        "cmp_lo": jnp.zeros(3, jnp.int32),
+    }
+    for backend in ("ref", "pallas"):
+        new_w, old_hi, old_lo, ok = apply_batch(words, req,
+                                                backend=backend)
+        assert list(np.asarray(old_lo)) == [0, 1, 3]
+        assert int(np.asarray(new_w)[5, 1]) == 7
+
+
+@pytest.mark.parametrize("pool,elems,r", [(32, 128, 16), (64, 256, 8)])
+def test_gcl_fetch_matches_ref(pool, elems, r):
+    rng = np.random.default_rng(2)
+    pages = jnp.asarray(rng.normal(size=(pool, elems)), jnp.float32)
+    words = np.zeros((pool, 2), np.int32)
+    words[1, 0] = 3 << 24
+    words = jnp.asarray(words)
+    req_page = jnp.asarray(rng.integers(-1, pool, r), jnp.int32)
+    bit_hi = jnp.zeros((r,), jnp.int32)
+    bit_lo = jnp.asarray(rng.integers(1, 2 ** 8, r), jnp.int32)
+    ref = fetch(pages, words, req_page, bit_hi, bit_lo, backend="ref")
+    pal = fetch(pages, words, req_page, bit_hi, bit_lo, backend="pallas",
+                interpret=True)
+    np.testing.assert_allclose(np.asarray(ref[0]), np.asarray(pal[0]))
+    np.testing.assert_array_equal(np.asarray(ref[3]), np.asarray(pal[3]))
+    np.testing.assert_array_equal(np.asarray(ref[4]), np.asarray(pal[4]))
+
+
+@pytest.mark.parametrize("b,q,h,p,dtype", [
+    (2, 32, 4, 16, jnp.float32),
+    (1, 64, 8, 64, jnp.float32),
+    (3, 16, 2, 32, jnp.bfloat16),
+])
+def test_ssd_intra_matches_ref(b, q, h, p, dtype):
+    from repro.kernels.ssd_intra.ops import intra_chunk
+    rng = np.random.default_rng(4)
+    cb = jnp.asarray(rng.normal(size=(b, q, q)) * 0.3, dtype)
+    # decaying cumsums (dA < 0): realistic magnitudes keep exp() sane
+    cs = jnp.asarray(-np.abs(rng.normal(size=(b, q, h))).cumsum(axis=1)
+                     * 0.1, dtype)
+    win = jnp.asarray(rng.normal(size=(b, q, h, p)), dtype)
+    ref = intra_chunk(cb, cs, win, backend="ref")
+    pal = intra_chunk(cb, cs, win, backend="pallas", interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    err = float(jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                - pal.astype(jnp.float32))))
+    assert err < tol, err
+
+
+def test_ssd_intra_matches_model_branch():
+    """The kernel must agree with models/ssm.ssd_chunked's intra branch:
+    feed identical (cb, cs, dt*x) and compare against the model's einsum."""
+    from repro.kernels.ssd_intra.ops import intra_chunk
+    rng = np.random.default_rng(5)
+    b, q, h, p, n = 2, 32, 4, 16, 8
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, q, h))) * 0.1, jnp.float32)
+    a = -jnp.exp(jnp.asarray(rng.normal(size=(h,)), jnp.float32) * 0.1)
+    cs = jnp.cumsum(dt * a, axis=1)
+    bmat = jnp.asarray(rng.normal(size=(b, q, n)), jnp.float32)
+    cmat = jnp.asarray(rng.normal(size=(b, q, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, q, h, p)), jnp.float32)
+    cb = jnp.einsum("bqn,bkn->bqk", cmat, bmat)
+    win = dt[..., None] * x
+    got = intra_chunk(cb, cs, win, backend="pallas", interpret=True)
+    # the model's einsum form
+    seg = cs[:, :, None, :] - cs[:, None, :, :]
+    l_mat = jnp.where(jnp.tril(jnp.ones((q, q), bool))[None, :, :, None],
+                      jnp.exp(seg), 0.0)
+    ref = jnp.einsum("bqk,bqkh,bkhp->bqhp", cb, l_mat, win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

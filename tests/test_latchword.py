@@ -1,0 +1,53 @@
+"""Latch-word encode/decode properties (paper Fig. 3 layout)."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import latchword as lw
+
+
+@settings(max_examples=200, deadline=None)
+@given(writer=st.one_of(st.none(), st.integers(0, 55)),
+       readers=st.sets(st.integers(0, 55), max_size=16))
+def test_pack_roundtrip(writer, readers):
+    word = lw.pack(writer, readers)
+    assert lw.writer_of(word) == writer
+    assert set(lw.readers_of(word)) == readers
+    hi, lo = lw.to_lanes(word)
+    assert lw.from_lanes(hi, lo) == word
+
+
+@settings(max_examples=100, deadline=None)
+@given(node=st.integers(0, 55))
+def test_faa_set_reset_bit(node):
+    word = lw.FREE
+    word = lw.faa(word, lw.reader_bit(node))
+    assert lw.readers_of(word) == [node]
+    word = lw.faa(word, -lw.reader_bit(node))
+    assert word == lw.FREE
+
+
+@settings(max_examples=100, deadline=None)
+@given(node=st.integers(0, 54))
+def test_double_set_is_detectable_corruption(node):
+    # setting the same bit twice carries into the NEXT node's bit — the
+    # protocol must never do it (single-flight per node); this documents
+    # the failure mode the single-flight path prevents.
+    word = lw.faa(lw.faa(lw.FREE, lw.reader_bit(node)),
+                  lw.reader_bit(node))
+    assert lw.readers_of(word) == [node + 1]
+
+
+def test_writer_release_by_subtract():
+    w = lw.pack(7, [])
+    w2 = lw.faa(w, -lw.writer_field(7))
+    assert w2 == lw.FREE
+    # release with concurrent transient reader bits keeps the bits
+    w = lw.pack(7, [3])
+    w2 = lw.faa(w, -lw.writer_field(7))
+    assert lw.writer_of(w2) is None and lw.readers_of(w2) == [3]
+
+
+def test_holders_of():
+    w = lw.pack(9, [1, 40, 55])
+    assert set(lw.holders_of(w)) == {9, 1, 40, 55}

@@ -1,0 +1,97 @@
+"""DES protocol behaviour: coherence, sequential consistency, fairness,
+baselines — the system-level reproduction of the paper's Secs. 4-7."""
+
+import random
+
+import pytest
+
+from repro.core import (ClusterConfig, SELCCConfig, SELCCLayer,
+                        check_coherence, check_sequential_consistency,
+                        merge_histories)
+
+
+def drive(protocol="selcc", n_compute=4, threads=4, ops=150, n_gcls=128,
+          read_ratio=0.5, cache=64, seed=1, record=True, **selcc_kw):
+    selcc = SELCCConfig(cache_capacity=cache, record_history=record,
+                        **selcc_kw)
+    layer = SELCCLayer(ClusterConfig(n_compute=n_compute, n_memory=2,
+                                     threads_per_node=threads,
+                                     protocol=protocol, selcc=selcc,
+                                     seed=seed))
+    gcls = layer.allocate_many(n_gcls)
+    procs = []
+    for node in layer.nodes:
+        for t in range(threads):
+            def worker(node=node, t=t,
+                       rng=random.Random(seed * 999 + node.node_id * 31
+                                         + t)):
+                for _ in range(ops):
+                    g = gcls[rng.randrange(n_gcls)]
+                    if rng.random() < read_ratio:
+                        yield from node.op_read(g, thread=t)
+                    else:
+                        yield from node.op_write(g, thread=t)
+            procs.append(layer.env.process(worker()))
+    layer.env.run_until_complete(procs, hard_limit=500.0)
+    return layer
+
+
+def test_sequential_consistency_mixed():
+    layer = drive(read_ratio=0.5, seed=2)
+    check_sequential_consistency(merge_histories(layer.nodes))
+
+
+def test_sequential_consistency_write_heavy_skew():
+    layer = drive(read_ratio=0.1, n_gcls=16, cache=8, seed=3)
+    check_sequential_consistency(merge_histories(layer.nodes))
+
+
+def test_coherence_only_large():
+    layer = drive(read_ratio=0.7, n_compute=6, ops=250, seed=4)
+    check_coherence(merge_histories(layer.nodes))
+
+
+def test_all_fairness_mechanisms_off_still_completes():
+    layer = drive(read_ratio=0.3, seed=5, enable_handover=False,
+                  enable_lease=False, enable_spin_window=False,
+                  ops=100, n_gcls=64)
+    check_sequential_consistency(merge_histories(layer.nodes))
+
+
+def test_sel_baseline_consistency():
+    layer = drive(protocol="sel", read_ratio=0.5, seed=6)
+    check_coherence(merge_histories(layer.nodes))
+
+
+def test_gam_completes():
+    layer = drive(protocol="gam", read_ratio=0.5, seed=7, record=False)
+    assert layer.total_ops() == 4 * 4 * 150
+
+
+def test_cache_hits_happen_under_locality():
+    layer = drive(read_ratio=1.0, n_gcls=32, cache=64, seed=8)
+    stats = layer.cache_stats()
+    assert stats["hits"] > 0
+
+
+def test_invalidations_flow_under_write_sharing():
+    layer = drive(read_ratio=0.0, n_gcls=8, cache=64, seed=9, ops=80)
+    assert sum(n.stats.inv_sent for n in layer.nodes) > 0
+    stats = layer.cache_stats()
+    assert stats["inv_received"] > 0
+
+
+def test_handover_occurs_under_contention():
+    layer = drive(read_ratio=0.0, n_gcls=2, cache=16, threads=8, ops=60,
+                  seed=10)
+    stats = layer.cache_stats()
+    assert stats["handovers"] > 0, "deterministic handover never fired"
+
+
+def test_selcc_beats_sel_on_read_locality():
+    import copy
+    kw = dict(read_ratio=1.0, n_gcls=64, cache=128, ops=200, seed=11,
+              record=False)
+    selcc = drive(protocol="selcc", **kw)
+    sel = drive(protocol="sel", **kw)
+    assert selcc.throughput() > 1.5 * sel.throughput()

@@ -1,0 +1,86 @@
+"""Property-based protocol tests (hypothesis): arbitrary op schedules must
+preserve sequential consistency + coherence, for the DES protocol AND the
+vectorized JAX round protocol."""
+
+import random
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+import jax.numpy as jnp
+from repro.core import (ClusterConfig, SELCCConfig, SELCCLayer,
+                        check_sequential_consistency, merge_histories)
+from repro.core import jax_protocol as jp
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       read_pct=st.integers(0, 100),
+       n_gcls=st.integers(2, 64),
+       cache=st.integers(2, 64))
+def test_des_random_schedules_are_sequentially_consistent(
+        seed, read_pct, n_gcls, cache):
+    selcc = SELCCConfig(cache_capacity=cache, record_history=True)
+    layer = SELCCLayer(ClusterConfig(n_compute=3, n_memory=2,
+                                     threads_per_node=3, selcc=selcc,
+                                     seed=seed))
+    gcls = layer.allocate_many(n_gcls)
+    procs = []
+    for node in layer.nodes:
+        for t in range(3):
+            def worker(node=node, t=t,
+                       rng=random.Random(seed * 77 + node.node_id * 7
+                                         + t)):
+                for _ in range(40):
+                    g = gcls[rng.randrange(n_gcls)]
+                    if rng.randrange(100) < read_pct:
+                        yield from node.op_read(g, thread=t)
+                    else:
+                        yield from node.op_write(g, thread=t)
+            procs.append(layer.env.process(worker()))
+    layer.env.run_until_complete(procs, hard_limit=500.0)
+    check_sequential_consistency(merge_histories(layer.nodes))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       hot_lines=st.integers(2, 32),
+       write_pct=st.integers(0, 100))
+def test_jax_round_protocol_invariants(seed, hot_lines, write_pct):
+    # FIXED array shapes (n_lines=32, R=12) so one jit compilation serves
+    # every hypothesis example; contention level varies via hot_lines.
+    rng = np.random.default_rng(seed)
+    n_nodes = 4
+    n_lines = 32
+    state = jp.make_state(n_nodes, n_lines)
+    for _ in range(6):
+        r = 12
+        # at most one op per (node, line) per round: sample WITHOUT
+        # replacement from the full (node, line) grid, skewed to hot lines
+        pairs = [(n, l) for n in range(n_nodes) for l in range(n_lines)]
+        weights = np.array([4.0 if l < hot_lines else 0.05
+                            for n, l in pairs])
+        idx = rng.choice(len(pairs), size=r, replace=False,
+                         p=weights / weights.sum())
+        nid = np.array([pairs[i][0] for i in idx], np.int32)
+        ln = np.array([pairs[i][1] for i in idx], np.int32)
+        isw = (rng.integers(0, 100, r) < write_pct).astype(np.int32)
+        state, _, _ = jp.run_ops_to_completion(
+            state, nid, ln, isw, n_nodes=n_nodes, max_rounds=128)
+        jp.check_invariants(state)
+
+
+def test_jax_round_versions_monotone_per_line():
+    rng = np.random.default_rng(0)
+    state = jp.make_state(3, 8)
+    last = np.zeros(8, np.int64)
+    for _ in range(10):
+        nid = rng.integers(0, 3, 8).astype(np.int32)
+        ln = np.arange(8).astype(np.int32)
+        isw = rng.integers(0, 2, 8).astype(np.int32)
+        state, vers, _ = jp.run_ops_to_completion(
+            state, nid, ln, isw, n_nodes=3)
+        mv = np.asarray(state["mem_version"])
+        assert (mv >= last).all()
+        last = mv

@@ -1,0 +1,59 @@
+"""Fault-tolerance control plane: failure detector, elastic remesh plan,
+straggler watchdog (simulated clocks)."""
+
+import pytest
+
+from repro.runtime import (ElasticPlan, FailureDetector, StragglerWatchdog,
+                           plan_elastic_mesh)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_failure_detector_lifecycle():
+    clk = FakeClock()
+    fd = FailureDetector(["h0", "h1", "h2"], suspect_after=5, dead_after=10,
+                         clock=clk)
+    clk.t = 3
+    fd.beat("h0")
+    clk.t = 7
+    alive, suspect, dead = fd.sweep()
+    assert "h0" in alive and set(suspect) == {"h1", "h2"}
+    fd.beat("h1")                        # suspect resurrects
+    clk.t = 12
+    alive, suspect, dead = fd.sweep()
+    assert "h2" in dead and "h1" in suspect and "h0" in suspect
+    fd.beat("h2")                        # dead stays dead
+    assert fd.state("h2") == FailureDetector.DEAD
+
+
+def test_elastic_plan_kills_whole_data_rows():
+    plan = plan_elastic_mesh(16, 16, dead_hosts=[3, 7])
+    assert plan.new_data_size == 14
+    assert plan.lost_rows == [3, 7]
+    assert abs(plan.batch_scale - 14 / 16) < 1e-9
+
+
+def test_elastic_plan_no_survivors_raises():
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(2, 2, dead_hosts=[0, 1])
+
+
+def test_straggler_watchdog_flags_persistent_offender():
+    dog = StragglerWatchdog(k=2.0, strikes=3)
+    for _ in range(10):
+        assert dog.observe(1.0, slowest_host="h9") is None
+    verdicts = [dog.observe(5.0, slowest_host="h9") for _ in range(3)]
+    assert verdicts[-1] == "h9"
+    # one-off blips don't trigger
+    dog2 = StragglerWatchdog(k=2.0, strikes=3)
+    for _ in range(5):
+        dog2.observe(1.0, slowest_host="h1")
+    assert dog2.observe(5.0, slowest_host="h1") is None
+    assert dog2.observe(1.0, slowest_host="h2") is None
+    assert dog2.observe(5.0, slowest_host="h1") is None
