@@ -5,6 +5,10 @@ determines the paper's RATIOS (sharing, skew, locality, read mix, cache
 size relative to data) is preserved.  Each run prints a CSV row:
 
     figure,series,x,metric,value
+
+Protocols resolve through the v2 backend registry
+(``repro.core.available_protocols()``): figures can sweep every
+registered backend — including out-of-tree ones — without edits here.
 """
 
 from __future__ import annotations
@@ -20,14 +24,31 @@ from repro.apps.workloads import (MicroConfig, TPCCConfig,  # noqa: E402
                                   TPCCTables, YCSBConfig, micro_worker,
                                   tpcc_worker, ycsb_worker)
 from repro.core import (ClusterConfig, GAMConfig,           # noqa: E402
-                        SELCCConfig, SELCCLayer)
+                        SELCCConfig, SELCCLayer,
+                        available_protocols, get_protocol)
+
+__all__ = [                 # re-exported for the fig*.py drivers
+    "BLinkTree", "TxnConfig", "TxnEngine", "MicroConfig", "TPCCConfig",
+    "TPCCTables", "YCSBConfig", "micro_worker", "tpcc_worker",
+    "ycsb_worker", "ClusterConfig", "GAMConfig", "SELCCConfig",
+    "SELCCLayer", "available_protocols", "BASELINES", "HARD_LIMIT",
+    "build_layer", "run_micro", "emit", "timer",
+]
 
 HARD_LIMIT = 300.0          # sim-seconds safety net
+
+# Baseline sweep used by the comparison figures; any registered backend
+# name is a valid series.
+BASELINES = ("selcc", "sel", "gam", "rpc")
 
 
 def build_layer(protocol: str, n_compute: int, threads: int,
                 cache_entries: int = 4096, consistency: str = "SEQ",
                 seed: int = 11) -> SELCCLayer:
+    try:
+        get_protocol(protocol)     # CLI-friendly unknown-name error only
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
     selcc = SELCCConfig(cache_capacity=cache_entries)
     gam = GAMConfig(cache_capacity=cache_entries, consistency=consistency)
     return SELCCLayer(ClusterConfig(

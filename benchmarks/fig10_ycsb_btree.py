@@ -4,13 +4,16 @@ Paper claims: uniform 3.75-6.28x over SEL (immutable internal nodes stay
 cached); skewed ~10x (hot leaves cached too).  Sherman/DEX are external
 systems and are represented qualitatively in EXPERIMENTS.md (SEL here is
 the no-cache lower bound the paper also uses).
+
+The tree is written once against the Table-1 v2 facade (scope-guarded
+handles + GclHeap payloads) and runs on each protocol unchanged — the
+series differ ONLY in the ``protocol=`` string.
 """
 
 from __future__ import annotations
 
 from .common import YCSBConfig, build_layer, emit
-from repro.apps.btree import BLinkTree
-from repro.apps.workloads import ycsb_worker
+from repro.apps import BLinkTree, ycsb_worker
 
 RATIOS = {"read_only": 1.0, "read_int": 0.95, "write_int": 0.5,
           "write_only": 0.0}

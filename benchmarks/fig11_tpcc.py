@@ -8,8 +8,8 @@ caches); OCC < 2PL (double latching).
 from __future__ import annotations
 
 from .common import build_layer, emit
-from repro.apps.txn import TxnConfig, TxnEngine
-from repro.apps.workloads import TPCCConfig, TPCCTables, tpcc_worker
+from repro.apps import (TPCCConfig, TPCCTables, TxnConfig, TxnEngine,
+                        tpcc_worker)
 
 QUERIES = {1: "Q1_neworder", 2: "Q2_payment", 3: "Q3_orderstatus",
            4: "Q4_delivery", 5: "Q5_stocklevel", 0: "mix"}

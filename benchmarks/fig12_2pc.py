@@ -8,8 +8,8 @@ fully-shared (no 2PC) stays flat.
 from __future__ import annotations
 
 from .common import build_layer, emit
-from repro.apps.txn import TxnConfig, TxnEngine
-from repro.apps.workloads import TPCCConfig, TPCCTables, tpcc_worker
+from repro.apps import (TPCCConfig, TPCCTables, TxnConfig, TxnEngine,
+                        tpcc_worker)
 
 
 def run_one(partitioned: bool, dist_ratio: float, quick: bool):

@@ -5,7 +5,9 @@ Paper claims validated here:
   * write-heavy degradation of fully-shared vs fully-partitioned at 8
     nodes ~ 16/14% (8 GB cache scale);
   * 8-node speedup over 1 node ~ 6.7x (write-int) / 6.9x (write-only);
-  * invalidation-message op fraction (the bar series).
+  * invalidation-message op fraction (the bar series).  ``inv_ratio`` is
+    UNclamped since the v2 facade: a value above 1.0 in the CSV flags a
+    protocol accounting bug instead of being silently rounded down.
 """
 
 from __future__ import annotations

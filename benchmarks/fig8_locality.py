@@ -1,13 +1,16 @@
-"""Fig. 8 — performance under 50% access locality, SELCC vs SEL vs GAM.
+"""Fig. 8 — performance under 50% access locality, across every
+registered baseline (SELCC vs SEL vs GAM vs the RPC strawman).
 
 Paper claims: SELCC > SEL 1.68x/2.18x (read-int/read-only at high thread
 counts); SELCC > GAM 2.8-5.6x across mixes; GAM's thread scalability
-collapses on writes (memory-node CPU saturation).
+collapses on writes (memory-node CPU saturation).  The registry-supplied
+RPC series bounds GAM from below: same memory-side CPU bottleneck, no
+compute-side cache at all (Sec. 2 strawman).
 """
 
 from __future__ import annotations
 
-from .common import MicroConfig, emit, run_micro
+from .common import BASELINES, MicroConfig, emit, run_micro
 
 RATIOS = {"read_only": 1.0, "read_int": 0.95, "write_int": 0.5,
           "write_only": 0.0}
@@ -21,7 +24,7 @@ def main(quick: bool = False) -> dict:
             mcfg = MicroConfig(n_gcls=24_000, sharing_ratio=1.0,
                                read_ratio=rr, locality=0.5,
                                ops_per_thread=100 if quick else 150)
-            for proto in ("selcc", "sel", "gam"):
+            for proto in BASELINES:
                 layer = run_micro(proto, 8, threads, mcfg)
                 thpt = layer.throughput()
                 emit("fig8", f"{proto}_{rname}", threads, "mops",
@@ -29,10 +32,9 @@ def main(quick: bool = False) -> dict:
                 out[(proto, rname, threads)] = thpt
     t = threads_list[-1]
     for rname in RATIOS:
-        emit("fig8", rname, t, "selcc_over_sel",
-             out[("selcc", rname, t)] / out[("sel", rname, t)])
-        emit("fig8", rname, t, "selcc_over_gam",
-             out[("selcc", rname, t)] / out[("gam", rname, t)])
+        for proto in BASELINES[1:]:
+            emit("fig8", rname, t, f"selcc_over_{proto}",
+                 out[("selcc", rname, t)] / out[(proto, rname, t)])
     return out
 
 

@@ -1,8 +1,9 @@
-"""Quickstart: the SELCC abstraction layer in 60 lines.
+"""Quickstart: the SELCC v2 abstraction layer in ~70 lines.
 
-Allocates Global Cache Lines, takes shared/exclusive SELCC latches from
-two compute nodes, shows lazy release + invalidation in action, and runs
-a B-link tree over the same API (paper Table 1 + Sec. 8.1).
+Typed GAddrs, scope-guarded latches with a real data plane
+(``h.value`` / ``h.store``), lazy release + invalidation in action, the
+pluggable backend registry, and a B-link tree over the same API
+(paper Table 1 + Sec. 8.1).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,33 +11,36 @@ a B-link tree over the same API (paper Table 1 + Sec. 8.1).
 import sys
 sys.path.insert(0, "src")
 
-from repro.apps.btree import BLinkTree
-from repro.core import ClusterConfig, SELCCConfig, SELCCLayer
+from repro.apps import BLinkTree
+from repro.core import (ClusterConfig, SELCCConfig, SELCCLayer,
+                        available_protocols)
 
 
 def main():
+    print(f"registered protocol backends: {available_protocols()}")
     layer = SELCCLayer(ClusterConfig(n_compute=2, n_memory=2,
                                      threads_per_node=4,
                                      selcc=SELCCConfig(cache_capacity=256)))
     node0, node1 = layer.nodes
     gaddr = layer.allocate()
-    print(f"allocated GCL at gaddr={gaddr}")
+    print(f"allocated GCL at gaddr={gaddr!r} "
+          f"(typed; packs to 0x{gaddr.pack():x})")
 
     def demo():
-        # node 0 writes under the exclusive SELCC latch
-        h = yield from node0.xlock(gaddr)
-        yield from node0.write(h)
-        yield from node0.xunlock(h)
-        print(f"  node0 wrote v{h.version}; latch is released LAZILY "
-              f"(still held globally)")
+        # node 0 writes a real payload under an exclusive scope guard
+        h = yield from node0.xlocked(gaddr)
+        yield from h.store({"greeting": "hello, disaggregated world"})
+        yield from h.release()
+        print(f"  node0 stored {layer.heap.load(gaddr)} at v{h.version}; "
+              f"latch is released LAZILY (still held globally)")
         # node 1 reads: its acquisition invalidates node 0's copy
-        h1 = yield from node1.slock(gaddr)
-        print(f"  node1 read  v{h1.version} (coherent)")
-        yield from node1.sunlock(h1)
+        h1 = yield from node1.slocked(gaddr)
+        print(f"  node1 read  {h1.value!r} at v{h1.version} (coherent)")
+        yield from h1.release()
         # node 1 reads again: pure LOCAL cache hit — zero RDMA
         before = layer.fabric.stats.total_rdma()
-        h1 = yield from node1.slock(gaddr)
-        yield from node1.sunlock(h1)
+        h1 = yield from node1.slocked(gaddr)
+        yield from h1.release()
         after = layer.fabric.stats.total_rdma()
         print(f"  node1 re-read: cache hit, RDMA ops used = "
               f"{after - before}")
@@ -59,9 +63,26 @@ def main():
 
     p = layer.env.process(tree_demo())
     layer.env.run_until_complete([p])
+    layer.assert_released()           # every scope guard closed
     cs = layer.cache_stats()
     print(f"cache: hits={cs['hits']} misses={cs['misses']} "
           f"hit_rate={cs['hits'] / (cs['hits'] + cs['misses']):.1%}")
+
+    # ---- same app, different backend: resolved via the registry ----------
+    rpc_layer = SELCCLayer(ClusterConfig(n_compute=2, n_memory=2,
+                                         threads_per_node=4,
+                                         protocol="rpc"))
+    rpc_tree = BLinkTree(rpc_layer, rpc_layer.nodes[0], fanout=16)
+
+    def rpc_demo():
+        for i in range(50):
+            yield from rpc_tree.insert(i, -i)
+        v = yield from rpc_tree.lookup(42)
+        print(f"  SAME btree code over the 'rpc' strawman: lookup(42)={v}")
+
+    p = rpc_layer.env.process(rpc_demo())
+    rpc_layer.env.run_until_complete([p])
+    rpc_layer.assert_released()
 
 
 if __name__ == "__main__":

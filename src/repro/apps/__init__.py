@@ -1,4 +1,11 @@
+# Applications written purely against the Table-1 v2 facade — they run
+# unchanged over every backend in repro.core.available_protocols().
 from .btree import BLinkTree
 from .txn import TxnEngine, TxnConfig
+from .workloads import (MicroConfig, TPCCConfig, TPCCTables, YCSBConfig,
+                        micro_worker, parity_worker, tpcc_worker,
+                        ycsb_worker)
 
-__all__ = ["BLinkTree", "TxnEngine", "TxnConfig"]
+__all__ = ["BLinkTree", "TxnEngine", "TxnConfig", "MicroConfig",
+           "TPCCConfig", "TPCCTables", "YCSBConfig", "micro_worker",
+           "parity_worker", "tpcc_worker", "ycsb_worker"]

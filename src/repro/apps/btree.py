@@ -1,16 +1,21 @@
-"""Concurrent B-link tree over the SELCC Table-1 API (paper Sec. 8.1).
+"""Concurrent B-link tree over the SELCC Table-1 v2 API (paper Sec. 8.1).
 
 Migration recipe exactly as the paper prescribes: tree nodes align onto
 Global Cache Lines, and the monolithic server's local shared-exclusive
-latches become SELCC_SLock/XLock.  Lehman-Yao right-links make descents
+latches become SELCC latch scopes.  Lehman-Yao right-links make descents
 latch-free-ish (no lock coupling): a reader that lands on a split node
-follows the link.  Runs unchanged over SELCC, SEL, or GAM-backed layers —
-that API parity is the paper's abstraction-layer claim.
+follows the link.  Runs unchanged over every backend registered with
+``repro.core.register_protocol`` (SELCC, SEL, GAM, RPC, ...) — that API
+parity is the paper's abstraction-layer claim.
 
-Node payloads live in a host-side dict keyed by gaddr; every access
-happens strictly under the corresponding SELCC latch, and the protocol's
-coherence invariant (asserted online) makes that equivalent to reading
-one's own coherent cached copy.
+v2 data plane: node payloads live in the layer's :class:`GclHeap` and
+are reached ONLY through handles — ``h = yield from node.slocked(g)``,
+``n = h.value``, ``yield from h.store(n)``, ``yield from h.release()``.
+Every access happens strictly under the corresponding SELCC latch scope,
+and the protocol's coherence invariant (asserted online) makes that
+equivalent to reading one's own coherent cached copy.  The shared root
+is published as the layer binding ``"btree:root"`` — no state hides in
+``SELCCLayer.__dict__`` anymore.
 """
 
 from __future__ import annotations
@@ -18,6 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 FANOUT = 64
+ROOT_BINDING = "btree:root"
 
 
 @dataclass
@@ -31,42 +37,37 @@ class _Node:
 
 class BLinkTree:
     def __init__(self, layer, node, fanout: int = FANOUT):
-        """layer: SELCCLayer (allocator); node: the compute-node protocol
-        object this tree instance runs on."""
+        """layer: SELCCLayer (allocator + heap); node: the compute-node
+        protocol object this tree instance runs on."""
         self.layer = layer
         self.node = node
         self.fanout = fanout
-        self.content = layer.__dict__.setdefault("_btree_content", {})
-        meta = layer.__dict__.get("_btree_root")
-        if meta is None:
-            root = layer.allocate()
-            self.content[root] = _Node(leaf=True)
-            layer.__dict__["_btree_root"] = root
+        if layer.binding(ROOT_BINDING) is None:
+            layer.bind(ROOT_BINDING, layer.alloc_object(_Node(leaf=True)))
         self.stats = {"splits": 0, "link_hops": 0}
 
     @property
     def root(self):
-        return self.layer.__dict__["_btree_root"]
+        return self.layer.binding(ROOT_BINDING)
 
     # ------------------------------------------------------------- search
     def _descend(self, key):
         """Find the leaf that should hold key (read-latched walk)."""
         cur = self.root
         while True:
-            h = yield from self.node.slock(cur)
-            n = self.content[cur]
-            if n.high is not None and key >= n.high and n.right is not None:
-                nxt = n.right
-                yield from self.node.sunlock(h)
-                self.stats["link_hops"] += 1
-                cur = nxt
-                continue
-            if n.leaf:
-                yield from self.node.sunlock(h)
-                return cur
-            i = self._child_index(n, key)
-            nxt = n.vals[i]
-            yield from self.node.sunlock(h)
+            h = yield from self.node.slocked(cur)
+            try:
+                n = h.value
+                if n.high is not None and key >= n.high \
+                        and n.right is not None:
+                    nxt = n.right
+                    self.stats["link_hops"] += 1
+                elif n.leaf:
+                    return cur
+                else:
+                    nxt = n.vals[self._child_index(n, key)]
+            finally:
+                yield from h.release()
             cur = nxt
 
     @staticmethod
@@ -79,54 +80,56 @@ class BLinkTree:
     def lookup(self, key):
         leaf = yield from self._descend(key)
         while True:
-            h = yield from self.node.slock(leaf)
-            n = self.content[leaf]
-            if n.high is not None and key >= n.high and n.right is not None:
-                nxt = n.right
-                yield from self.node.sunlock(h)
-                self.stats["link_hops"] += 1
-                leaf = nxt
-                continue
-            val = None
-            if key in n.keys:
-                val = n.vals[n.keys.index(key)]
-            yield from self.node.sunlock(h)
-            return val
+            h = yield from self.node.slocked(leaf)
+            try:
+                n = h.value
+                if n.high is not None and key >= n.high \
+                        and n.right is not None:
+                    leaf = n.right
+                    self.stats["link_hops"] += 1
+                    continue
+                if key in n.keys:
+                    return n.vals[n.keys.index(key)]
+                return None
+            finally:
+                yield from h.release()
 
     # ------------------------------------------------------------- insert
     def insert(self, key, val):
         leaf = yield from self._descend(key)
         while True:
-            h = yield from self.node.xlock(leaf)
-            n = self.content[leaf]
-            if n.high is not None and key >= n.high and n.right is not None:
-                nxt = n.right
-                yield from self.node.xunlock(h)
-                self.stats["link_hops"] += 1
-                leaf = nxt
-                continue
-            self._leaf_put(n, key, val)
-            yield from self.node.write(h)
-            if len(n.keys) <= self.fanout:
-                yield from self.node.xunlock(h)
-                return
-            # split: allocate right sibling, move upper half, link
-            sib = self.layer.allocate()
-            mid = len(n.keys) // 2
-            sep = n.keys[mid]
-            sn = _Node(leaf=n.leaf, keys=n.keys[mid:], vals=n.vals[mid:],
-                       right=n.right, high=n.high)
-            if not n.leaf:
-                sn.keys = n.keys[mid + 1:]
-                sn.vals = n.vals[mid:]
-            self.content[sib] = sn
-            n.keys = n.keys[:mid]
-            n.vals = n.vals[:mid] if n.leaf else n.vals[:mid + 1]
-            n.right = sib
-            n.high = sep
-            self.stats["splits"] += 1
-            yield from self.node.write(h)
-            yield from self.node.xunlock(h)
+            h = yield from self.node.xlocked(leaf)
+            try:
+                n = h.value
+                if n.high is not None and key >= n.high \
+                        and n.right is not None:
+                    leaf = n.right
+                    self.stats["link_hops"] += 1
+                    continue
+                self._leaf_put(n, key, val)
+                yield from h.store(n)
+                if len(n.keys) <= self.fanout:
+                    return
+                # split: allocate right sibling, move upper half, link.
+                # The sibling is seeded BEFORE n.right publishes it (the
+                # store below happens under this X scope), so no reader
+                # can observe a half-built node.
+                mid = len(n.keys) // 2
+                sep = n.keys[mid]
+                sn = _Node(leaf=n.leaf, keys=n.keys[mid:], vals=n.vals[mid:],
+                           right=n.right, high=n.high)
+                if not n.leaf:
+                    sn.keys = n.keys[mid + 1:]
+                    sn.vals = n.vals[mid:]
+                sib = self.layer.alloc_object(sn)
+                n.keys = n.keys[:mid]
+                n.vals = n.vals[:mid] if n.leaf else n.vals[:mid + 1]
+                n.right = sib
+                n.high = sep
+                self.stats["splits"] += 1
+                yield from h.store(n)
+            finally:
+                yield from h.release()
             yield from self._insert_parent(leaf, sep, sib)
             return
 
@@ -144,67 +147,69 @@ class BLinkTree:
         """Install separator; grows a new root when the old root split."""
         root = self.root
         if child == root:
-            new_root = self.layer.allocate()
-            self.content[new_root] = _Node(leaf=False, keys=[sep],
-                                           vals=[child, sib])
-            h = yield from self.node.xlock(new_root)
-            yield from self.node.write(h)
-            yield from self.node.xunlock(h)
-            self.layer.__dict__["_btree_root"] = new_root
+            new_root = self.layer.alloc_object(
+                _Node(leaf=False, keys=[sep], vals=[child, sib]))
+            h = yield from self.node.xlocked(new_root)
+            try:
+                yield from h.store(h.value)
+            finally:
+                yield from h.release()
+            self.layer.bind(ROOT_BINDING, new_root)
             return
         # find parent by descending for sep (simplified Lehman-Yao)
         cur = self.root
         path = []
         while True:
-            h = yield from self.node.slock(cur)
-            n = self.content[cur]
-            if n.leaf or (n.vals and child in n.vals):
-                yield from self.node.sunlock(h)
-                break
-            i = self._child_index(n, sep)
-            nxt = n.vals[i]
-            path.append(cur)
-            yield from self.node.sunlock(h)
-            cur = nxt
-        target = cur if not self.content[cur].leaf else \
+            h = yield from self.node.slocked(cur)
+            try:
+                n = h.value
+                if n.leaf or (n.vals and child in n.vals):
+                    break
+                path.append(cur)
+                cur = n.vals[self._child_index(n, sep)]
+            finally:
+                yield from h.release()
+        target = cur if not self.layer.heap.load(cur).leaf else \
             (path[-1] if path else self.root)
-        h = yield from self.node.xlock(target)
-        n = self.content[target]
-        i = self._child_index(n, sep)
-        n.keys.insert(i, sep)
-        n.vals.insert(i + 1, sib)
-        yield from self.node.write(h)
-        oversize = len(n.keys) > self.fanout
+        h = yield from self.node.xlocked(target)
+        oversize = False
+        try:
+            n = h.value
+            i = self._child_index(n, sep)
+            n.keys.insert(i, sep)
+            n.vals.insert(i + 1, sib)
+            yield from h.store(n)
+            oversize = len(n.keys) > self.fanout
+            if oversize:
+                mid = len(n.keys) // 2
+                sep2 = n.keys[mid]
+                sib2 = self.layer.alloc_object(
+                    _Node(leaf=False, keys=n.keys[mid + 1:],
+                          vals=n.vals[mid + 1:], right=n.right, high=n.high))
+                n.keys = n.keys[:mid]
+                n.vals = n.vals[:mid + 1]
+                n.right = sib2
+                n.high = sep2
+                self.stats["splits"] += 1
+                yield from h.store(n)
+        finally:
+            yield from h.release()
         if oversize:
-            sib2 = self.layer.allocate()
-            mid = len(n.keys) // 2
-            sep2 = n.keys[mid]
-            sn = _Node(leaf=False, keys=n.keys[mid + 1:], vals=n.vals[mid + 1:],
-                       right=n.right, high=n.high)
-            self.content[sib2] = sn
-            n.keys = n.keys[:mid]
-            n.vals = n.vals[:mid + 1]
-            n.right = sib2
-            n.high = sep2
-            self.stats["splits"] += 1
-            yield from self.node.write(h)
-            yield from self.node.xunlock(h)
             yield from self._insert_parent(target, sep2, sib2)
-        else:
-            yield from self.node.xunlock(h)
 
     # -------------------------------------------------------------- scan
     def range_scan(self, key, count: int):
-        """Read `count` keys from `key` following leaf links."""
+        """Read ``count`` keys from ``key`` following leaf links."""
         leaf = yield from self._descend(key)
         out = []
         while leaf is not None and len(out) < count:
-            h = yield from self.node.slock(leaf)
-            n = self.content[leaf]
-            for k, v in zip(n.keys, n.vals):
-                if k >= key and len(out) < count:
-                    out.append((k, v))
-            nxt = n.right
-            yield from self.node.sunlock(h)
-            leaf = nxt
+            h = yield from self.node.slocked(leaf)
+            try:
+                n = h.value
+                for k, v in zip(n.keys, n.vals):
+                    if k >= key and len(out) < count:
+                        out.append((k, v))
+                leaf = n.right
+            finally:
+                yield from h.release()
         return out

@@ -2,7 +2,7 @@
 OCC — plus the 2PC-partitioned variant of Sec. 9.3.
 
 Tuples are heap-organized into GCLs (``tuples_per_gcl`` per line); every
-tuple access goes through SELCC_SLock/XLock on its GCL.  For 2PL the
+tuple access goes through a SELCC latch scope on its GCL.  For 2PL the
 SELCC latches double as the transaction locks (the paper's trick that
 saves RDMA round trips).  TO reads UPDATE the read-timestamp in the
 header — the exact behaviour that makes TO slow on read-only workloads
@@ -10,11 +10,21 @@ in Fig. 11 (every read invalidates peer caches).  OCC latches twice per
 tuple (read phase + validate phase).  Durability: WAL flush latency per
 commit; partitioned mode pays prepare+commit flushes per participant
 (Fig. 12's bottleneck).
+
+v2 data plane: each GCL's payload is a dict record in the layer's
+:class:`GclHeap` — ``{"writes": int, tuple_id: (rts, wts), ...}`` —
+reached only through ``Handle.value``/``Handle.store`` under the latch.
+The shared GCL directory and the timestamp word are published as layer
+bindings (``"txn:gcls"``, ``"txn:ts"``); nothing hides in
+``SELCCLayer.__dict__``.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
+GCLS_BINDING = "txn:gcls"
+TS_BINDING = "txn:ts"
 
 
 @dataclass
@@ -42,19 +52,20 @@ class TxnEngine:
         self.node = node
         self.cfg = cfg
         self.stats = TxnStats()
-        shared = layer.__dict__.setdefault("_txn_shared", {})
-        if "gcls" not in shared:
+        gcls = layer.binding(GCLS_BINDING)
+        if gcls is None:
             n_gcls = (n_tuples + cfg.tuples_per_gcl - 1) \
                 // cfg.tuples_per_gcl
-            shared["gcls"] = layer.allocate_many(n_gcls)
-            shared["header"] = {}        # tuple_id -> [rts, wts]
-            shared["ts"] = layer.allocate()
-        self.gcls = shared["gcls"]
-        self.header = shared["header"]
-        self.ts_addr = shared["ts"]
+            gcls = layer.allocate_many(n_gcls)
+            for g in gcls:
+                layer.seed_object(g, {"writes": 0})
+            layer.bind(GCLS_BINDING, gcls)
+            layer.bind(TS_BINDING, layer.allocate())
+        self.gcls = gcls
+        self.ts_addr = layer.binding(TS_BINDING)
         # partition id per tuple (2PC participant detection); defaults to
         # the GCL's memory node — workloads install their own (warehouse)
-        self.partition_fn = lambda t: self._gcl_of(t)[0]
+        self.partition_fn = lambda t: self._gcl_of(t).node_id
 
     def _gcl_of(self, tuple_id: int):
         return self.gcls[tuple_id // self.cfg.tuples_per_gcl]
@@ -100,24 +111,33 @@ class TxnEngine:
         rg = {self._gcl_of(t) for t in read_set} - wg
         return sorted(rg), sorted(wg)
 
+    @staticmethod
+    def _record_write(rec: dict) -> dict:
+        """Tuple mutation stand-in: bump the GCL record's write count."""
+        rec["writes"] = rec.get("writes", 0) + 1
+        return rec
+
     # ---------------------------------------------------------------- 2PL
     def _run_2pl(self, read_set, write_set):
         """S2PL no-wait: SELCC latches ARE the locks, held to commit."""
         held = []
         rg, wg = self._gcl_sets(read_set, write_set)
-        for g, is_x in sorted([(g, False) for g in rg]
-                              + [(g, True) for g in wg]):
-            if self.cfg.nowait_local and self._local_conflict(g, is_x):
-                yield from self._release(held)
-                return False
-            if is_x:
-                h = yield from self.node.xlock(g)
-                yield from self.node.write(h)
-            else:
-                h = yield from self.node.slock(g)
-            held.append((h, is_x))
-        yield from self._release(held)
-        return True
+        try:
+            for g, is_x in sorted([(g, False) for g in rg]
+                                  + [(g, True) for g in wg]):
+                if self.cfg.nowait_local and self._local_conflict(g, is_x):
+                    return False
+                if is_x:
+                    h = yield from self.node.xlocked(g)
+                    held.append(h)
+                    yield from h.store(self._record_write(h.value))
+                else:
+                    held.append((yield from self.node.slocked(g)))
+            return True
+        finally:
+            # the scope guard: held latches release on commit AND on the
+            # no-wait abort's early return — no leaked latch either way
+            yield from self.node.release_all(held)
 
     def _local_conflict(self, gaddr, want_x: bool) -> bool:
         cache = getattr(self.node, "cache", None)
@@ -130,13 +150,6 @@ class TxnEngine:
             return e.latch.held
         return e.latch.writer is not None
 
-    def _release(self, held):
-        for h, is_x in reversed(held):
-            if is_x:
-                yield from self.node.xunlock(h)
-            else:
-                yield from self.node.sunlock(h)
-
     # ----------------------------------------------------------------- TO
     def _run_to(self, read_set, write_set):
         ts = yield from self.node.atomic_faa(self.ts_addr, 1)
@@ -147,21 +160,22 @@ class TxnEngine:
         for t in set(read_set) | wset:
             by_gcl.setdefault(self._gcl_of(t), []).append(t)
         for g in sorted(by_gcl):
-            h = yield from self.node.xlock(g)
-            for t in by_gcl[g]:
-                rts, wts = self.header.get(t, (0, 0))
-                if t in wset:
-                    if ts < rts or ts < wts:
-                        yield from self.node.xunlock(h)
-                        return False
-                    self.header[t] = (rts, ts)
-                else:
-                    if ts < wts:
-                        yield from self.node.xunlock(h)
-                        return False
-                    self.header[t] = (max(rts, ts), wts)
-            yield from self.node.write(h)      # rts/wts update dirties GCL
-            yield from self.node.xunlock(h)
+            h = yield from self.node.xlocked(g)
+            try:
+                rec = h.value
+                for t in by_gcl[g]:
+                    rts, wts = rec.get(t, (0, 0))
+                    if t in wset:
+                        if ts < rts or ts < wts:
+                            return False
+                        rec[t] = (rts, ts)
+                    else:
+                        if ts < wts:
+                            return False
+                        rec[t] = (max(rts, ts), wts)
+                yield from h.store(rec)    # rts/wts update dirties the GCL
+            finally:
+                yield from h.release()
         return True
 
     # ---------------------------------------------------------------- OCC
@@ -170,23 +184,25 @@ class TxnEngine:
         rg, wg = self._gcl_sets(read_set, write_set)
         snapshots = {}
         for g in sorted(set(rg) | set(wg)):
-            h = yield from self.node.slock(g)
+            h = yield from self.node.slocked(g)
             snapshots[g] = h.version
-            yield from self.node.sunlock(h)
+            yield from h.release()
         # validate + write phase: X latch per GCL again (latch #2 — the
         # double-latching that makes OCC lose to 2PL in Fig. 11)
         held = []
         ok = True
         wgs = set(wg)
-        for g in sorted(snapshots):
-            h = yield from self.node.xlock(g)
-            held.append((h, True, g))
-            if h.version != snapshots[g]:
-                ok = False
-                break
-        if ok:
-            for h, _, g in held:
-                if g in wgs:
-                    yield from self.node.write(h)
-        yield from self._release([(h, x) for h, x, _ in held])
-        return ok
+        try:
+            for g in sorted(snapshots):
+                h = yield from self.node.xlocked(g)
+                held.append((h, g))
+                if h.version != snapshots[g]:
+                    ok = False
+                    break
+            if ok:
+                for h, g in held:
+                    if g in wgs:
+                        yield from h.store(self._record_write(h.value))
+            return ok
+        finally:
+            yield from self.node.release_all([h for h, _ in held])

@@ -1,9 +1,15 @@
 """Workload generators: micro (Sec. 9.1), YCSB (Sec. 9.2),
-TPC-C-lite (Sec. 9.3).
+TPC-C-lite (Sec. 9.3) — plus the scripted cross-backend parity workload
+used to certify that every registered protocol backend exposes identical
+Table-1 v2 semantics.
 
 Scaled to DES size: the paper's 16M-op / 50M-key runs shrink ~100x; every
 knob (sharing ratio, read ratio, zipf theta, locality) is preserved so
 the FIGURES' ratios reproduce, not their absolute x-axes.
+
+Addresses are typed :class:`repro.core.GAddr`; workers drive the
+composite ``op_read``/``op_write`` surface, the parity script drives the
+scope-guarded handle surface (``slocked``/``xlocked`` + ``h.store``).
 """
 
 from __future__ import annotations
@@ -11,6 +17,9 @@ from __future__ import annotations
 import bisect
 import random
 from dataclasses import dataclass
+from typing import Sequence
+
+from ..core.addressing import GAddr
 
 
 class Zipf:
@@ -37,8 +46,8 @@ class MicroConfig:
     ops_per_thread: int = 200
 
 
-def micro_worker(node, gcls, cfg: MicroConfig, node_id: int, n_nodes: int,
-                 thread: int, seed: int):
+def micro_worker(node, gcls: Sequence[GAddr], cfg: MicroConfig,
+                 node_id: int, n_nodes: int, thread: int, seed: int):
     """DES generator: one worker thread of the micro-benchmark."""
     rng = random.Random((seed * 7919 + node_id * 131 + thread) & 0x7FFFFFFF)
     n = len(gcls)
@@ -81,6 +90,37 @@ def ycsb_worker(tree, cfg: YCSBConfig, node_id: int, thread: int,
             yield from tree.lookup(k)
         else:
             yield from tree.insert(k, (node_id, thread))
+
+
+# ------------------------------------------------- cross-backend parity
+
+def parity_worker(node, gcls: Sequence[GAddr], rounds: int, stride: int):
+    """Deterministic, commutative workload for the backend parity tests:
+    every op is an increment under an exclusive scope or a read under a
+    shared scope, so the FINAL memory image is interleaving-independent
+    and must be bit-identical across selcc / sel / gam / rpc.
+
+    Drives the full v2 surface on purpose: scope guards, batched
+    ``xlocked_many``, ``h.value``/``h.store``, and ``h.release``.
+    """
+    reads = []
+    for r in range(rounds):
+        for i in range(0, len(gcls), stride):
+            h = yield from node.xlocked(gcls[i])
+            yield from h.store((h.value or 0) + 1)
+            yield from h.release()
+        # shared-scope sweep: every line observed under an S latch
+        for g in gcls:
+            h = yield from node.slocked(g)
+            reads.append(h.value)
+            yield from h.release()
+        # batched multi-lock: increment a window atomically w.r.t. latches
+        window = list(gcls[: min(4, len(gcls))])
+        hs = yield from node.xlocked_many(window)
+        for h in hs:
+            yield from h.store((h.value or 0) + 1)
+        yield from node.release_all(hs)
+    return reads
 
 
 # ------------------------------------------------------------- TPC-C-lite

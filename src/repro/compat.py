@@ -1,0 +1,22 @@
+"""Version-compatibility shims.
+
+``jax.shard_map`` was promoted out of ``jax.experimental`` only in
+recent JAX releases; the container pins an older jax where the public
+alias does not exist yet.  Import ``shard_map`` from here so both
+spellings work.
+"""
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                      # jax < 0.6: experimental only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, **kwargs):
+        # the promoted API renamed check_rep -> check_vma
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, **kwargs)
+
+__all__ = ["shard_map"]

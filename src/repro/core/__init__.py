@@ -1,24 +1,49 @@
 # The paper's primary contribution: the SELCC cache-coherence protocol
-# over compute-limited disaggregated memory, plus the SEL / GAM baselines
-# and the abstraction-layer API (paper Table 1).
+# over compute-limited disaggregated memory, plus the SEL / GAM / RPC
+# baselines and the abstraction-layer API (paper Table 1, v2 surface:
+# typed GAddr, unified data-plane Handle, scope guards, and the pluggable
+# protocol-backend registry).
 from . import latchword
+from .addressing import GAddr, as_gaddr
 from .api import ClusterConfig, SELCCLayer
 from .cache import INVALID, MODIFIED, SHARED, NodeCache
 from .consistency import (SCViolation, check_coherence,
                           check_sequential_consistency, merge_histories)
 from .gam import GAMConfig, GAMMemoryAgent, GAMNode
-from .protocol import (CoherenceError, Handle, SELCCConfig, SELCCNode,
+from .handles import GclHeap, Handle, NodeAPIMixin
+from .protocol import (CoherenceError, SELCCConfig, SELCCNode,
                        PEER_RD, PEER_UPGR, PEER_WR)
+from .registry import (ProtocolSpec, available_protocols, get_protocol,
+                       register_protocol)
+from .rpc import RPCLockAgent, RPCNode
 from .sel import SELNode
 from .simulator import (CostModel, Environment, Event, Fabric, Process,
-                        QueueResource, SXLatch, Store)
+                        QueueResource, RpcRequest, SXLatch, Store)
 
 __all__ = [
-    "latchword", "ClusterConfig", "SELCCLayer", "NodeCache",
-    "MODIFIED", "SHARED", "INVALID", "SCViolation", "check_coherence",
-    "check_sequential_consistency", "merge_histories", "GAMConfig",
-    "GAMMemoryAgent", "GAMNode", "CoherenceError", "Handle", "SELCCConfig",
-    "SELCCNode", "PEER_RD", "PEER_UPGR", "PEER_WR", "SELNode", "CostModel",
-    "Environment", "Event", "Fabric", "Process", "QueueResource", "SXLatch",
-    "Store",
+    "latchword", "GAddr", "as_gaddr", "ClusterConfig", "SELCCLayer",
+    "NodeCache", "MODIFIED", "SHARED", "INVALID",
+    "SCViolation", "check_coherence", "check_sequential_consistency",
+    "merge_histories", "GAMConfig", "GAMMemoryAgent", "GAMNode", "GclHeap",
+    "Handle", "NodeAPIMixin", "CoherenceError", "SELCCConfig", "SELCCNode",
+    "PEER_RD", "PEER_UPGR", "PEER_WR", "ProtocolSpec",
+    "available_protocols", "get_protocol", "register_protocol",
+    "RPCLockAgent", "RPCNode", "SELNode", "CostModel", "Environment",
+    "Event", "Fabric", "Process", "QueueResource", "RpcRequest",
+    "SXLatch", "Store",
+    # lazy (see __getattr__): heavy JAX-path members of the same facade
+    "jax_protocol", "KVPoolConfig", "SELCCKVPool",
 ]
+
+
+def __getattr__(name):
+    # The bulk-synchronous JAX path is part of the same facade but drags
+    # in jax; resolve it lazily so pure-DES users stay light.
+    if name == "jax_protocol":
+        import importlib
+        return importlib.import_module(".jax_protocol", __name__)
+    if name in ("KVPoolConfig", "SELCCKVPool"):
+        import importlib
+        kvpool = importlib.import_module("repro.dsm.kvpool")
+        return getattr(kvpool, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

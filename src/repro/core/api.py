@@ -1,26 +1,41 @@
-"""The SELCC abstraction layer — the paper's Table 1 API.
+"""The SELCC abstraction layer — the paper's Table 1 API, v2 surface.
 
 ``SELCCLayer`` wires memory servers (Fabric), compute nodes, and a global
 allocator into the main-memory-like programming surface the paper argues
-for:
+for.  The v2 redesign makes the surface typed, data-plane-complete, and
+backend-agnostic:
 
-    Allocate / Free        -> gaddr (NodeID, offset)
-    SELCC_SLock / XLock    -> handle
-    SELCC_SUnlock/XUnlock  -> ()
-    Atomic                 -> uint64 fetch-op
+    Allocate / Free          -> typed :class:`GAddr` (NodeID, offset)
+    SELCC_SLock / XLock      -> unified :class:`Handle` on every backend
+    h.value / h.store(obj)   -> data plane (per-layer :class:`GclHeap`)
+    node.slocked / xlocked   -> leak-tracked scope guards (handles.py)
+    SELCC_SUnlock / XUnlock  -> ``yield from h.release()``
+    Atomic                   -> uint64 fetch-op
 
-Applications (apps/btree.py, apps/txn.py) are written purely against this
-facade and therefore run over SELCC, SEL, or GAM unchanged — mirroring
-the paper's "applications over SELCC can run seamlessly on SEL".
+Backends plug in through :func:`repro.core.register_protocol`
+(core/registry.py): SELCC, SEL, GAM, and the RPC strawman register
+themselves at import; ``ClusterConfig(protocol=...)`` resolves by name
+with zero dispatch code here.  Applications (apps/btree.py, apps/txn.py)
+are written purely against this facade and therefore run over any
+registered backend unchanged — the paper's "applications over SELCC can
+run seamlessly on SEL", extended to N protocols.
+
+The same address/handle vocabulary reaches the bulk-synchronous JAX
+path: :meth:`SELCCLayer.as_rounds_state` adapts the layer's allocation
+map onto core/jax_protocol.py round state (``GAddr.flat`` striping), and
+:meth:`SELCCLayer.make_kv_pool` opens the dsm/kvpool.py serving pool.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
-from .gam import GAMConfig, GAMMemoryAgent, GAMNode
-from .protocol import SELCCConfig, SELCCNode
-from .sel import SELNode
+from .addressing import GAddr
+from .gam import GAMConfig
+from .handles import GclHeap
+from .protocol import SELCCConfig
+from .registry import get_protocol
 from .simulator import CostModel, Environment, Fabric
 
 
@@ -29,10 +44,10 @@ class ClusterConfig:
     n_compute: int = 8
     n_memory: int = 8
     threads_per_node: int = 16
-    protocol: str = "selcc"           # selcc | sel | gam
-    selcc: SELCCConfig = None
-    gam: GAMConfig = None
-    cost: CostModel = None
+    protocol: str = "selcc"           # any name in available_protocols()
+    selcc: Optional[SELCCConfig] = None
+    gam: Optional[GAMConfig] = None
+    cost: Optional[CostModel] = None
     seed: int = 0
 
     def __post_init__(self):
@@ -45,58 +60,147 @@ class ClusterConfig:
             self.cost = CostModel()
 
 
+# Legacy layer.__dict__ side channels (deleted in v2) -> one-release shim
+# with a pointed migration message.
+_LEGACY_SIDE_CHANNELS = {
+    "_btree_content": "payloads now flow through Handle.value/.store() "
+                      "backed by SELCCLayer.heap",
+    "_btree_root": 'the tree root is published via layer.bind("btree:root", '
+                   "gaddr) / layer.binding(\"btree:root\")",
+    "_txn_shared": "TxnEngine state now lives in SELCCLayer.heap bindings "
+                   '("txn:gcls", "txn:ts") and per-GCL heap records',
+}
+
+
 class SELCCLayer:
-    """A simulated cluster exposing the Table-1 API per compute node."""
+    """A simulated cluster exposing the Table-1 v2 API per compute node."""
 
     def __init__(self, cfg: ClusterConfig | None = None):
         self.cfg = cfg or ClusterConfig()
         c = self.cfg
+        spec = get_protocol(c.protocol)
         self.env = Environment()
-        mem_cores = c.gam.mem_cores if c.protocol == "gam" else 1
         self.fabric = Fabric(self.env, c.n_memory, c.cost,
-                             mem_cpu_cores=mem_cores)
-        self.nodes = []
-        if c.protocol == "selcc":
-            self.nodes = [SELCCNode(self.env, i, self.fabric, c.selcc,
-                                    c.threads_per_node, seed=c.seed)
-                          for i in range(c.n_compute)]
-        elif c.protocol == "sel":
-            self.nodes = [SELNode(self.env, i, self.fabric, c.selcc,
-                                  c.threads_per_node, seed=c.seed)
-                          for i in range(c.n_compute)]
-        elif c.protocol == "gam":
-            self.agents = [GAMMemoryAgent(self.env, self.fabric, m, c.gam)
-                           for m in range(c.n_memory)]
-            self.nodes = [GAMNode(self.env, i, self.fabric, self.agents,
-                                  c.gam, c.threads_per_node, seed=c.seed)
-                          for i in range(c.n_compute)]
-        else:
-            raise ValueError(f"unknown protocol {c.protocol!r}")
-        # global allocator state: next free line per memory node + free list
+                             mem_cpu_cores=spec.mem_cpu_cores(c))
+        # ONE object heap per layer: the data plane every Handle resolves
+        # through, shared by all nodes of all backends.  Created (with
+        # the allocator state) BEFORE the backend factory runs — build()
+        # is promised the fully-constructed layer.
+        self.heap = GclHeap()
         self._next_line = [0] * c.n_memory
-        self._free: list = []
+        self._free: list[GAddr] = []
+        self._live: set[GAddr] = set()
         self._rr = 0
+        self.agents: list = []            # backend factories may populate
+        self.nodes = spec.build(self)
+        for n in self.nodes:
+            n.heap = self.heap
+
+    def __getattr__(self, name: str):
+        hint = _LEGACY_SIDE_CHANNELS.get(name)
+        if hint is not None:
+            raise AttributeError(
+                f"SELCCLayer.{name} was a pre-v2 side channel and no longer "
+                f"exists; {hint} (see docs/API.md)")
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
     # ------------------------------------------------------------- Table 1
-    def allocate(self):
-        """Allocate a global cache line; returns gaddr = (NodeID, offset)."""
+    def allocate(self) -> GAddr:
+        """Allocate a global cache line; returns a typed :class:`GAddr`."""
         if self._free:
-            return self._free.pop()
-        mid = self._rr % self.cfg.n_memory
-        self._rr += 1
-        line = self._next_line[mid]
-        self._next_line[mid] += 1
-        return (mid, line)
+            g = self._free.pop()
+        else:
+            mid = self._rr % self.cfg.n_memory
+            self._rr += 1
+            g = GAddr(mid, self._next_line[mid])
+            self._next_line[mid] += 1
+        self._live.add(g)
+        return g
 
-    def allocate_many(self, n: int):
+    def allocate_many(self, n: int) -> list[GAddr]:
+        """Batched allocation (one call, n lines — Table 1 ``Allocate``
+        with a count, so apps stop looping over the allocator)."""
         return [self.allocate() for _ in range(n)]
 
-    def free(self, gaddr):
-        self._free.append(gaddr)
+    def free(self, gaddr) -> None:
+        """Return a line to the allocator.  Rejects double-frees and
+        never-allocated addresses instead of corrupting the free list."""
+        g = GAddr(*gaddr)
+        if g not in self._live:
+            if g in self._free:
+                raise ValueError(f"double free of {g}")
+            raise ValueError(f"free() of never-allocated address {g}")
+        self._live.discard(g)
+        self._free.append(g)
+        self.heap.discard(g)       # a recycled line reads as uninitialized
 
-    # lock APIs are per compute node (node.slock/xlock/...); composite ops:
+    def alloc_object(self, obj) -> GAddr:
+        """Allocate a line and seed its payload in one step (init-time
+        convenience; steady-state writes go through ``Handle.store``)."""
+        g = self.allocate()
+        self.heap.store(g, obj)
+        return g
+
+    def seed_object(self, gaddr, obj) -> None:
+        """Install a payload without taking latches — ONLY safe during
+        single-threaded setup, before workers start."""
+        self.heap.store(GAddr(*gaddr), obj)
+
+    # -------------------------------------------------------- named roots
+    def bind(self, name: str, value) -> None:
+        """Publish a shared root object/address under a stable name."""
+        self.heap.bind(name, value)
+
+    def binding(self, name: str, default=None):
+        return self.heap.binding(name, default)
+
+    # lock APIs are per compute node (node.slocked/xlocked/...); composite:
     def run(self, until: float | None = None):
         self.env.run(until)
+
+    # ----------------------------------------------------- leak detection
+    def assert_released(self) -> None:
+        """Teardown invariant: every slocked/xlocked scope was released
+        and no local latch or pin is still held (parity tests)."""
+        for n in self.nodes:
+            open_n = n.open_scopes()
+            if open_n:
+                raise AssertionError(
+                    f"node {n.node_id}: {open_n} latch scope(s) leaked")
+            cache = getattr(n, "cache", None)
+            if cache is None:
+                continue
+            for gaddr, e in cache.entries.items():
+                if e.pins or e.latch.held:
+                    raise AssertionError(
+                        f"node {n.node_id}: entry {gaddr} still "
+                        f"pinned/latched at teardown")
+
+    # ------------------------------------------- JAX-path interop (facade)
+    def gaddr_to_line(self, gaddr) -> int:
+        """DES address -> flat device-side line index (striped)."""
+        return GAddr(*gaddr).flat(self.cfg.n_memory)
+
+    def line_to_gaddr(self, line: int) -> GAddr:
+        return GAddr.from_flat(line, self.cfg.n_memory)
+
+    def as_rounds_state(self, n_lines: int | None = None):
+        """Fresh bulk-synchronous round state (core/jax_protocol.py) sized
+        to this layer: same node count, lines spanning every allocation
+        under the shared ``GAddr.flat`` striping."""
+        from . import jax_protocol as jp
+        if n_lines is None:
+            n_lines = max(1, max(self._next_line, default=1)
+                          * self.cfg.n_memory)
+        return jp.make_state(self.cfg.n_compute, n_lines)
+
+    @staticmethod
+    def make_kv_pool(kv_cfg=None):
+        """Open a dsm/kvpool.py serving pool (lazy import: keeps the DES
+        path free of JAX unless the data plane is actually used)."""
+        from ..dsm.kvpool import KVPoolConfig, SELCCKVPool
+        return SELCCKVPool(kv_cfg or KVPoolConfig())
 
     # ------------------------------------------------------------- metrics
     def throughput(self) -> float:
@@ -123,8 +227,10 @@ class SELCCLayer:
         return out
 
     def inv_ratio(self) -> float:
-        """Fraction of operations that needed >=1 invalidation message
-        (the bar series in the paper's Fig. 7)."""
+        """Invalidation messages per operation (the bar series in the
+        paper's Fig. 7).  Deliberately UNclamped: a value above 1.0 is an
+        accounting bug (or a resend storm) that tests must catch, not a
+        number to silently round down — see test_protocol.py."""
         ops = self.total_ops()
         sent = sum(getattr(n.stats, "inv_sent", 0) for n in self.nodes)
-        return min(1.0, sent / ops) if ops else 0.0
+        return sent / ops if ops else 0.0

@@ -14,7 +14,7 @@ actual conflict semantics.
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .simulator import Environment, SXLatch
 

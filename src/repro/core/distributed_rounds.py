@@ -16,11 +16,12 @@ bucket are deferred to the next round by the caller (spin semantics).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
 
 from ..kernels.latch_ops.ops import apply_batch
 
@@ -103,7 +104,7 @@ def distributed_latch_round(words, requests, *, mesh, axis: str = "model",
                 jax.lax.psum(dropped, axis))
 
     spec_req = {k: P(axis) for k in FIELDS}
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None), spec_req),
         out_specs=(P(axis, None), P(axis), P(axis), P(axis), P()),

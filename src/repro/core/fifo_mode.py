@@ -21,11 +21,10 @@ Reads stay synchronous and check the local pending queue first
 
 from __future__ import annotations
 
-from collections import deque
 from dataclasses import dataclass
 
 from .protocol import SELCCNode
-from .simulator import Environment, Store
+from .simulator import Store
 
 
 @dataclass

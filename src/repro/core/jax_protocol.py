@@ -20,6 +20,12 @@ variant with dirty lines.  Cache states per (node, line): 0=I 1=S 2=M.
 
 Drivers must present at most one op per line per node per round (a real
 node coalesces its local ops through the local latch first — Sec. 5.2).
+
+Address vocabulary: lines here are the FLAT form of the facade's typed
+:class:`repro.core.GAddr` (``gaddr.flat(n_homes)`` /
+``GAddr.from_flat``); ``SELCCLayer.as_rounds_state()`` builds a round
+state sized to a DES layer's allocations so both planes share one
+address space.
 """
 
 from __future__ import annotations

@@ -25,10 +25,12 @@ Every public entry point is a DES generator: drive with
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from . import latchword as lw
 from .cache import CacheEntry, NodeCache, INVALID, MODIFIED, SHARED
+from .handles import Handle, NodeAPIMixin
+from .registry import register_protocol
 from .simulator import Environment, Fabric, Store
 
 PEER_RD = "PeerRd"
@@ -75,19 +77,6 @@ class NodeStats:
         return self.reads + self.writes
 
 
-class Handle:
-    """Returned by SELCC_SLock / SELCC_XLock (Table 1)."""
-    __slots__ = ("entry", "mode")
-
-    def __init__(self, entry: CacheEntry, mode: str):
-        self.entry = entry
-        self.mode = mode
-
-    @property
-    def version(self) -> int:
-        return self.entry.version
-
-
 class _InvMessage:
     __slots__ = ("type", "gaddr", "sender", "priority", "sent_at")
 
@@ -100,7 +89,7 @@ class _InvMessage:
         self.sent_at = sent_at
 
 
-class SELCCNode:
+class SELCCNode(NodeAPIMixin):
     """One compute node: sharded LRU cache + protocol engine + handlers."""
 
     def __init__(self, env: Environment, node_id: int, fabric: Fabric,
@@ -144,7 +133,7 @@ class SELCCNode:
                 cache.stats.hits += 1
                 yield env.timeout(self.fabric.cost.local_access)
                 self._assert_coherent(e)
-                return Handle(e, "S")
+                return Handle(self, gaddr, "S", entry=e)
             cache.stats.misses += 1
             if e.fetching:
                 # another local thread is already acquiring the global latch
@@ -163,7 +152,7 @@ class SELCCNode:
                 waiters, e.fetch_waiters = e.fetch_waiters, []
                 for w in waiters:
                     w.succeed()
-            return Handle(e, "S")
+            return Handle(self, gaddr, "S", entry=e)
 
     def xlock(self, gaddr):
         """Algorithm 2."""
@@ -186,7 +175,7 @@ class SELCCNode:
         if e.state == MODIFIED:                          # cache hit
             cache.stats.hits += 1
             yield env.timeout(self.fabric.cost.local_access)
-            return Handle(e, "X")
+            return Handle(self, gaddr, "X", entry=e)
         cache.stats.misses += 1
         if e.state == SHARED:
             ok = yield from self._global_upgrade(e)
@@ -196,19 +185,18 @@ class SELCCNode:
                 yield from self._global_x_acquire(e)
         else:
             yield from self._global_x_acquire(e)
-        return Handle(e, "X")
+        return Handle(self, gaddr, "X", entry=e)
 
     def write(self, handle: Handle):
         """Mutate the line under the X handle (bumps the version — versions
         stand in for payload bytes; the checker uses them)."""
         if handle.mode != "X":
             raise CoherenceError("write without exclusive handle")
-        e = handle.entry
-        e.version += 1
-        e.dirty = True
+        handle.mark_written()
         yield self.env.timeout(self.fabric.cost.local_access)
 
     def sunlock(self, handle: Handle):
+        self._untrack(handle)
         e = handle.entry
         e.pins -= 1
         e.latch.release_s()
@@ -223,6 +211,7 @@ class SELCCNode:
         yield  # pragma: no cover — make this a generator
 
     def xunlock(self, handle: Handle):
+        self._untrack(handle)
         e = handle.entry
         e.pins -= 1
         if self._lease_due(e):
@@ -559,3 +548,16 @@ class SELCCNode:
                    self.cfg.retry_floor)
         j = self.cfg.retry_jitter
         return base * (1.0 + self.rng.uniform(-j, j))
+
+
+# --------------------------------------------------------------- registry
+def _build_selcc(layer):
+    c = layer.cfg
+    return [SELCCNode(layer.env, i, layer.fabric, c.selcc,
+                      c.threads_per_node, seed=c.seed)
+            for i in range(c.n_compute)]
+
+
+register_protocol(
+    "selcc", _build_selcc,
+    description="SEL-based cache coherence (the paper's protocol)")

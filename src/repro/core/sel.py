@@ -14,15 +14,16 @@ the collapse the paper shows in Fig. 9 (write-heavy, zipf 0.99).
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass
 
 from . import latchword as lw
+from .handles import Handle, NodeAPIMixin
 from .protocol import NodeStats, SELCCConfig
+from .registry import register_protocol
 from .simulator import Environment, Fabric
 
 
-class SELNode:
-    """Same op_read/op_write surface as SELCCNode — apps run unchanged
+class SELNode(NodeAPIMixin):
+    """Same Table-1 v2 surface as SELCCNode — apps run unchanged
     (the paper stresses SEL shares SELCC's API)."""
 
     def __init__(self, env: Environment, node_id: int, fabric: Fabric,
@@ -100,23 +101,24 @@ class SELNode:
     # SEL has the same locking surface for the apps layer -------------------
     def slock(self, gaddr):
         ver = yield from self._acquire_s(gaddr)
-        return _SELHandle(self, gaddr, "S", ver)
+        return Handle(self, gaddr, "S", version=ver)
 
     def xlock(self, gaddr):
         ver = yield from self._acquire_x(gaddr)
-        return _SELHandle(self, gaddr, "X", ver)
+        return Handle(self, gaddr, "X", version=ver)
 
-    def write(self, handle: "_SELHandle"):
-        handle.version += 1
-        handle.dirty = True
+    def write(self, handle: Handle):
+        handle.mark_written()
         yield self.env.timeout(self.fabric.cost.local_access)
 
-    def sunlock(self, handle: "_SELHandle"):
+    def sunlock(self, handle: Handle):
+        self._untrack(handle)
         mid, line = handle.gaddr
         yield from self.fabric.faa(mid, line,
                                    -lw.reader_bit(self.node_id))
 
-    def xunlock(self, handle: "_SELHandle"):
+    def xunlock(self, handle: Handle):
+        self._untrack(handle)
         mid, line = handle.gaddr
         if handle.dirty:
             yield from self.fabric.write(mid, line, self.cfg.gcl_bytes,
@@ -130,16 +132,21 @@ class SELNode:
         return old
 
 
-class _SELHandle:
-    __slots__ = ("node", "gaddr", "mode", "version", "dirty")
+# Deprecation shim: _SELHandle was SEL's private handle type pre-v2; the
+# unified Handle (core/handles.py) replaced it.  Out-of-tree isinstance
+# checks keep working for one release.
+_SELHandle = Handle
 
-    def __init__(self, node, gaddr, mode, version):
-        self.node = node
-        self.gaddr = gaddr
-        self.mode = mode
-        self.version = version
-        self.dirty = False
 
-    @property
-    def entry(self):  # API parity with SELCC Handle
-        return self
+# --------------------------------------------------------------- registry
+def _build_sel(layer):
+    c = layer.cfg
+    return [SELNode(layer.env, i, layer.fabric, c.selcc,
+                    c.threads_per_node, seed=c.seed)
+            for i in range(c.n_compute)]
+
+
+register_protocol(
+    "sel", _build_sel,
+    description="eager-release shared-exclusive latch, no caching "
+                "(Ziegler et al. baseline)")

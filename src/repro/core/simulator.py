@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import heapq
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +150,19 @@ class Store:
 
     def __len__(self):
         return len(self.items)
+
+
+class RpcRequest:
+    """Two-sided RPC message to a memory-side agent (the GAM directory
+    and the RPC lock manager share this wire format)."""
+    __slots__ = ("kind", "line", "node", "reply", "arg")
+
+    def __init__(self, kind, line, node, reply, arg=None):
+        self.kind = kind
+        self.line = line
+        self.node = node
+        self.reply = reply
+        self.arg = arg
 
 
 class QueueResource:

@@ -1,27 +1,33 @@
-"""8-byte global pointers (NodeID, offset) — paper Sec. 3.
+"""8-byte global pointers — paper Sec. 3.
 
-The DES side uses (mid, line) tuples; the device side uses flat int32
-page indices with the home shard derived by modulo (pages are striped
-across the mesh so coherence-round all_to_alls stay balanced).
+The canonical type is :class:`repro.core.GAddr` (core/addressing.py):
+the DES side keys the fabric with structured ``GAddr(node_id, offset)``
+addresses, the device side (jax_protocol, kvpool) uses the flat int32
+line indices produced by ``GAddr.flat`` — pages are striped across the
+mesh so coherence-round all_to_alls stay balanced.  This module re-
+exports that vocabulary for dsm users and keeps the pre-v2 name alive.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+
+from ..core.addressing import GAddr, as_gaddr, home_of
+
+__all__ = ["GAddr", "GlobalAddress", "as_gaddr", "home_of"]
 
 
-@dataclass(frozen=True)
-class GlobalAddress:
-    node_id: int
-    offset: int
+class GlobalAddress(GAddr):
+    """Deprecated pre-v2 spelling of :class:`GAddr` (one-release shim).
 
-    def pack(self) -> int:
-        return (self.node_id << 48) | self.offset
+    A real subclass so out-of-tree ``isinstance(x, GlobalAddress)``
+    checks and ``GlobalAddress.unpack`` keep working; constructing one
+    warns."""
 
-    @staticmethod
-    def unpack(v: int) -> "GlobalAddress":
-        return GlobalAddress(v >> 48, v & ((1 << 48) - 1))
+    __slots__ = ()
 
-
-def home_of(page_index: int, n_homes: int) -> int:
-    return page_index % n_homes
+    def __new__(cls, node_id: int, offset: int):
+        warnings.warn("repro.dsm.address.GlobalAddress is deprecated; "
+                      "use repro.core.GAddr", DeprecationWarning,
+                      stacklevel=2)
+        return super().__new__(cls, node_id, offset)

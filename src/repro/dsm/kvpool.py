@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.addressing import GAddr
 from ..kernels.gcl_fetch.ops import fetch as gcl_fetch_op
 from ..kernels.paged_attention.ops import decode_paged
 
@@ -182,6 +183,15 @@ class SELCCKVPool:
         pages = np.arange(self._top, self._top + n) % self.cfg.n_pages
         self._top += n
         return pages.astype(np.int32)
+
+    def gaddr_of(self, page: int, n_homes: int = 1) -> GAddr:
+        """Structured address of a flat page index — the SAME vocabulary
+        the DES facade speaks (``SELCCLayer.line_to_gaddr``), so serving
+        pages and protocol GCLs are interchangeable identifiers."""
+        return GAddr.from_flat(int(page), n_homes)
+
+    def page_of(self, gaddr, n_homes: int = 1) -> int:
+        return GAddr(*gaddr).flat(n_homes)
 
     def append(self, pages, offsets, k_new, v_new):
         self.pool = append_tokens(self.pool, jnp.asarray(pages),

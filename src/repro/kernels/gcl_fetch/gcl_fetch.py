@@ -22,7 +22,6 @@ FAA-then-reset dance in the paper's Sec. 4.3(b).
 from __future__ import annotations
 
 import jax
-import numpy as np
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu

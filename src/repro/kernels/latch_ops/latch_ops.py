@@ -23,7 +23,6 @@ persistent output block (index_map pins them to block 0).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

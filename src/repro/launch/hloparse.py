@@ -24,7 +24,6 @@ Ring-traffic model per device:
 from __future__ import annotations
 
 import re
-from collections import defaultdict
 from dataclasses import dataclass, field
 
 DTYPE_BYTES = {

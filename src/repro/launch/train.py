@@ -22,7 +22,6 @@ from ..configs import get_config, get_smoke_config
 from ..data import DataConfig, SyntheticLM
 from ..launch.mesh import make_local_mesh, make_production_mesh
 from ..optim import AdamWConfig
-from ..parallel import sharding as shard
 from ..runtime import StragglerWatchdog
 from ..train import TrainConfig, build_train_step, init_train_state
 from ..train.step import state_specs

@@ -18,8 +18,7 @@ RoPE is applied to K at write time, so cached keys are position-baked.
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax

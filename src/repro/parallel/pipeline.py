@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def pipeline_forward(stage_fn, params_stacked, x_micro, *, mesh,
                      axis: str = "pipe"):
@@ -76,7 +78,7 @@ def pipeline_forward(stage_fn, params_stacked, x_micro, *, mesh,
         return outs[None]
 
     spec_params = jax.tree.map(lambda _: P(axis), params_stacked)
-    out = jax.shard_map(
+    out = shard_map(
         body, mesh=mesh,
         in_specs=(spec_params, P(axis)),
         out_specs=P(axis),

@@ -22,7 +22,7 @@ the exact logic a multi-host launcher would run in its coordinator:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 class FailureDetector:

@@ -9,7 +9,6 @@ the dry-run lowers exactly what a real launch would run.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,316 @@
+"""Cross-backend API parity: ONE scripted workload through the Table-1
+v2 facade over every registered protocol backend (selcc, sel, gam, rpc),
+asserting identical final memory contents and latch-leak-free teardown —
+the v2 abstraction-layer claim, mechanically checked.
+
+Also covers the v2 allocator/registry contracts: typed GAddrs, free()
+validation, scope-guard leak detection, and the public
+``register_protocol`` extension point.
+"""
+
+import pytest
+
+from repro.apps import BLinkTree, parity_worker
+from repro.core import (ClusterConfig, GAddr, SELCCConfig, SELCCLayer,
+                        available_protocols, register_protocol)
+
+BACKENDS = ["selcc", "sel", "gam", "rpc"]
+
+
+def _layer(protocol, n_compute=2):
+    return SELCCLayer(ClusterConfig(
+        n_compute=n_compute, n_memory=2, threads_per_node=2,
+        protocol=protocol, selcc=SELCCConfig(cache_capacity=64)))
+
+
+def _run_script(protocol):
+    """The scripted workload: every node CONCURRENTLY drives the guarded
+    surface (slocked/xlocked, xlocked_many, h.value/h.store/h.release)
+    over a shared set of lines; all mutations are commutative increments
+    executed under exclusive scopes, so the final image is
+    schedule-independent — IF the backend's exclusion actually holds."""
+    layer = _layer(protocol)
+    gcls = layer.allocate_many(8)
+    for g in gcls:
+        layer.seed_object(g, 0)
+    procs = [layer.env.process(parity_worker(node, gcls, rounds=2,
+                                             stride=3))
+             for node in layer.nodes]
+    layer.env.run_until_complete(procs, hard_limit=50)
+    layer.assert_released()
+    return layer, {g: layer.heap.load(g) for g in gcls}
+
+
+def test_all_backends_registered():
+    for name in BACKENDS:
+        assert name in available_protocols()
+
+
+def test_scripted_workload_identical_memory_across_backends():
+    images = {}
+    for proto in BACKENDS:
+        _, images[proto] = _run_script(proto)
+    reference = images["selcc"]
+    assert any(v > 0 for v in reference.values())
+    for proto in BACKENDS[1:]:
+        assert images[proto] == reference, (
+            f"{proto} memory image diverged from selcc")
+
+
+def test_btree_parity_across_backends():
+    scans = {}
+    for proto in BACKENDS:
+        layer = _layer(proto)
+        tree = BLinkTree(layer, layer.nodes[0], fanout=8)
+
+        def work():
+            for i in range(120):
+                yield from tree.insert(i, i * 7)
+            out = yield from tree.range_scan(0, 120)
+            return out
+
+        p = layer.env.process(work())
+        layer.env.run_until_complete([p], hard_limit=200)
+        layer.assert_released()
+        scans[proto] = p.value
+    for proto in BACKENDS[1:]:
+        assert scans[proto] == scans["selcc"]
+    assert [k for k, _ in scans["selcc"]] == list(range(120))
+
+
+@pytest.mark.parametrize("protocol", BACKENDS)
+def test_leaked_scope_is_detected(protocol):
+    layer = _layer(protocol)
+    g = layer.alloc_object(0)
+
+    def leaky():
+        yield from layer.nodes[0].slocked(g)   # never released
+
+    p = layer.env.process(leaky())
+    layer.env.run_until_complete([p], hard_limit=50)
+    with pytest.raises(AssertionError, match="leaked"):
+        layer.assert_released()
+
+
+def test_store_requires_exclusive_mode():
+    layer = _layer("selcc")
+    g = layer.alloc_object(0)
+
+    def work():
+        h = yield from layer.nodes[0].slocked(g)
+        with pytest.raises(PermissionError):
+            next(h.store(1))
+        yield from h.release()
+
+    p = layer.env.process(work())
+    layer.env.run_until_complete([p], hard_limit=50)
+    layer.assert_released()
+
+
+@pytest.mark.parametrize("protocol", BACKENDS)
+def test_exclusive_scopes_never_lose_updates(protocol):
+    """Read-modify-write with simulated work INSIDE the exclusive scope:
+    any overlap between two nodes' X scopes loses increments.  This is
+    the schedule that caught GAM's mid-scope ownership recall."""
+    layer = _layer(protocol)
+    g = layer.alloc_object(0)
+    rounds = 30
+
+    def rmw(node):
+        for _ in range(rounds):
+            h = yield from node.xlocked(g)
+            v = h.value
+            yield layer.env.timeout(2e-7)        # work under the scope
+            yield from h.store(v + 1)
+            yield from h.release()
+
+    procs = [layer.env.process(rmw(n)) for n in layer.nodes]
+    layer.env.run_until_complete(procs, hard_limit=50)
+    layer.assert_released()
+    expected = rounds * len(layer.nodes)
+    assert layer.heap.load(g) == expected, (
+        f"{protocol}: lost updates — {layer.heap.load(g)}/{expected}")
+
+
+@pytest.mark.parametrize("protocol", BACKENDS)
+def test_exclusivity_survives_eviction_pressure(protocol):
+    """Working set (32 lines) far above cache capacity (8): every backend
+    with a cache keeps evicting lines it still owns, so stale directory
+    ownership, in-flight eviction notices, and recalls all collide with
+    live scopes.  This is the regime where GAM's recall/latch interplay
+    deadlocked; totals also re-check exclusivity under eviction."""
+    layer = SELCCLayer(ClusterConfig(
+        n_compute=3, n_memory=2, threads_per_node=2, protocol=protocol,
+        selcc=SELCCConfig(cache_capacity=8)))
+    gcls = layer.allocate_many(32)
+    for g in gcls:
+        layer.seed_object(g, 0)
+    rounds = 5
+
+    def worker(node):
+        for _ in range(rounds):
+            for g in gcls:
+                h = yield from node.xlocked(g)
+                v = h.value
+                yield layer.env.timeout(2e-7)
+                yield from h.store(v + 1)
+                yield from h.release()
+
+    procs = [layer.env.process(worker(n)) for n in layer.nodes]
+    layer.env.run_until_complete(procs, hard_limit=100)
+    layer.assert_released()
+    expected = rounds * len(layer.nodes)
+    for g in gcls:
+        assert layer.heap.load(g) == expected, (
+            f"{protocol}: lost updates on {g}: "
+            f"{layer.heap.load(g)}/{expected}")
+
+
+@pytest.mark.parametrize("offset_us", [0, 5, 10, 15, 20, 25, 30, 40])
+def test_gam_version_counter_survives_eviction(offset_us):
+    """The directory's authoritative version must never regress: local
+    write bumps ride back on eviction write-backs and recalls, so a
+    later grant cannot reuse a version number an earlier reader saw
+    (OCC validation on GAM depends on this).  node1's W is swept across
+    the whole eviction window — including offsets where it races ahead
+    of node0's in-flight EVICT notice and the recall must answer from
+    the write-back buffer."""
+    layer = SELCCLayer(ClusterConfig(
+        n_compute=2, n_memory=2, threads_per_node=2, protocol="gam",
+        selcc=SELCCConfig(cache_capacity=4)))
+    g = layer.alloc_object(0)
+    spill = layer.allocate_many(16)
+    node0, node1 = layer.nodes
+    seen = {}
+
+    def w0():
+        h = yield from node0.xlocked(g)
+        for _ in range(3):
+            yield from h.store((h.value or 0) + 1)
+        seen["v0"] = h.version
+        yield from h.release()
+        for s in spill:                  # push g out of node0's cache
+            hs = yield from node0.xlocked(s)
+            yield from hs.release()
+
+    def w1():
+        yield layer.env.timeout(offset_us * 1e-6)
+        h = yield from node1.xlocked(g)
+        seen["v1"] = h.version
+        yield from h.release()
+
+    procs = [layer.env.process(w0()), layer.env.process(w1())]
+    layer.env.run_until_complete(procs, hard_limit=50)
+    layer.assert_released()
+    assert seen["v1"] > seen["v0"], (
+        f"version regressed after eviction: grant v{seen['v1']} <= "
+        f"observed v{seen['v0']} (offset {offset_us}us)")
+
+
+def test_gam_does_not_alias_lines_across_memory_nodes():
+    """Offsets repeat across memory nodes ((0, 0) and (1, 0) are DIFFERENT
+    lines); GAM's compute-side cache must key by the full gaddr or an
+    xlock on one hands out phantom ownership of the other."""
+    layer = _layer("gam")
+    g0, g1 = layer.allocate_many(2)          # (0, 0) and (1, 0)
+    assert g0.offset == g1.offset and g0.node_id != g1.node_id
+    layer.seed_object(g0, "a")
+    layer.seed_object(g1, "b")
+    node = layer.nodes[0]
+
+    def work():
+        for _ in range(3):                   # drive g0's version to 3+
+            h = yield from node.xlocked(g0)
+            yield from h.store("a")
+            yield from h.release()
+        h = yield from node.slocked(g1)      # must MISS, not alias g0's M
+        ver, val = h.version, h.value
+        yield from h.release()
+        return ver, val
+
+    p = layer.env.process(work())
+    layer.env.run_until_complete([p], hard_limit=50)
+    ver, val = p.value
+    assert val == "b"
+    assert ver == 0, f"g1 aliased g0's cache entry (saw version {ver})"
+    assert node.entries.get(tuple(g0)) != node.entries.get(tuple(g1))
+    layer.assert_released()
+
+
+def test_xlocked_many_with_duplicates_releases_once():
+    layer = _layer("selcc")
+    g = layer.alloc_object(0)
+    g2 = layer.alloc_object(0)
+
+    def work():
+        hs = yield from layer.nodes[0].xlocked_many([g, g2, g, g])
+        assert len(hs) == 2                  # duplicates collapse
+        for h in hs:
+            yield from h.store((h.value or 0) + 1)
+        yield from layer.nodes[0].release_all(hs)
+
+    p = layer.env.process(work())
+    layer.env.run_until_complete([p], hard_limit=50)
+    layer.assert_released()
+    assert layer.heap.load(g) == 1 and layer.heap.load(g2) == 1
+
+
+# --------------------------------------------------------- allocator v2
+
+def test_typed_gaddr_roundtrip_and_tuple_compat():
+    g = GAddr(3, 17)
+    assert g == (3, 17)                       # legacy tuple interop
+    mid, line = g
+    assert (mid, line) == (3, 17)
+    assert GAddr.unpack(g.pack()) == g
+    assert GAddr.from_flat(g.flat(4), 4) == g
+
+
+def test_free_rejects_double_free_and_foreign_addresses():
+    layer = _layer("selcc")
+    g = layer.allocate()
+    layer.free(g)
+    with pytest.raises(ValueError, match="double free"):
+        layer.free(g)
+    with pytest.raises(ValueError, match="never-allocated"):
+        layer.free((1, 10_000))
+    g2 = layer.allocate()                     # free list reuse still works
+    assert g2 == g
+    layer.free(g2)
+
+
+def test_free_clears_heap_payload():
+    layer = _layer("selcc")
+    g = layer.alloc_object({"secret": 1})
+    layer.free(g)
+    g2 = layer.allocate()
+    assert g2 == g
+    assert layer.heap.load(g2) is None, "recycled line leaked old payload"
+
+
+# ----------------------------------------------------------- registry v2
+
+def test_register_protocol_extension_point():
+    class _NullNode:
+        def __init__(self, node_id):
+            self.node_id = node_id
+
+    def build(layer):
+        return [_NullNode(i) for i in range(layer.cfg.n_compute)]
+
+    register_protocol("parity-test-null", build, overwrite=True)
+    assert "parity-test-null" in available_protocols()
+    layer = SELCCLayer(ClusterConfig(n_compute=3, n_memory=2,
+                                     protocol="parity-test-null"))
+    assert len(layer.nodes) == 3
+
+
+def test_register_protocol_rejects_silent_overwrite():
+    register_protocol("parity-test-dup", lambda layer: [], overwrite=True)
+    with pytest.raises(ValueError, match="already registered"):
+        register_protocol("parity-test-dup", lambda layer: [])
+
+
+def test_unknown_protocol_lists_backends():
+    with pytest.raises(ValueError, match="registered backends"):
+        SELCCLayer(ClusterConfig(protocol="definitely-not-a-backend"))

@@ -5,8 +5,7 @@ import pytest
 from repro.apps.btree import BLinkTree
 from repro.apps.txn import TxnConfig, TxnEngine
 from repro.apps.workloads import TPCCConfig, TPCCTables, tpcc_worker
-from repro.core import (ClusterConfig, SELCCConfig, SELCCLayer,
-                        check_coherence, merge_histories)
+from repro.core import ClusterConfig, SELCCConfig, SELCCLayer
 
 
 def _layer(n_compute=3, threads=4, cache=512):

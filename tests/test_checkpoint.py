@@ -1,8 +1,6 @@
 """Checkpoint/restore: roundtrip (incl. bf16 + int8 opt state), integrity,
 GC, and torn-write recovery."""
 
-import json
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

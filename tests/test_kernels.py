@@ -1,11 +1,11 @@
 """Pallas kernel validation: interpret-mode vs pure-jnp oracle, swept over
 shapes/dtypes (+ hypothesis sweeps for the latch kernel)."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention.ops import attention
 from repro.kernels.gcl_fetch.ops import fetch

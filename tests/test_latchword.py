@@ -1,7 +1,6 @@
 """Latch-word encode/decode properties (paper Fig. 3 layout)."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core import latchword as lw
 

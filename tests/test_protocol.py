@@ -81,6 +81,24 @@ def test_invalidations_flow_under_write_sharing():
     assert stats["inv_received"] > 0
 
 
+def test_inv_ratio_accounting_invariant():
+    """inv_ratio() is UNclamped since v2: the old min(1.0, ...) could
+    silently mask accounting bugs where inv_sent outran ops.  Assert the
+    invariant directly instead — resend suppression (exponential backoff
+    in _global_s/x_acquire) must keep messages-per-op at or below 1 even
+    on a fully-shared write-only workload, and the reported ratio must
+    be the raw quotient."""
+    for kwargs in (dict(read_ratio=0.0, n_gcls=8, cache=64, seed=9,
+                        ops=80),
+                   dict(read_ratio=0.5, seed=2)):
+        layer = drive(**kwargs)
+        ops = layer.total_ops()
+        sent = sum(n.stats.inv_sent for n in layer.nodes)
+        assert sent <= ops, (
+            f"invalidation accounting bug: {sent} messages > {ops} ops")
+        assert layer.inv_ratio() == pytest.approx(sent / ops)
+
+
 def test_handover_occurs_under_contention():
     layer = drive(read_ratio=0.0, n_gcls=2, cache=16, threads=8, ops=60,
                   seed=10)
@@ -89,7 +107,6 @@ def test_handover_occurs_under_contention():
 
 
 def test_selcc_beats_sel_on_read_locality():
-    import copy
     kw = dict(read_ratio=1.0, n_gcls=64, cache=128, ops=200, seed=11,
               record=False)
     selcc = drive(protocol="selcc", **kw)

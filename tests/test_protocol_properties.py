@@ -4,11 +4,10 @@ vectorized JAX round protocol."""
 
 import random
 
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
 
-import jax.numpy as jnp
+from hypothesis_compat import given, settings, st
+
 from repro.core import (ClusterConfig, SELCCConfig, SELCCLayer,
                         check_sequential_consistency, merge_histories)
 from repro.core import jax_protocol as jp

@@ -3,7 +3,7 @@ straggler watchdog (simulated clocks)."""
 
 import pytest
 
-from repro.runtime import (ElasticPlan, FailureDetector, StragglerWatchdog,
+from repro.runtime import (FailureDetector, StragglerWatchdog,
                            plan_elastic_mesh)
 
 

@@ -4,7 +4,6 @@ optimizer variants (int8 v, bf16 m, grad compression) stay stable."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.data import DataConfig, SyntheticLM
