@@ -13,6 +13,8 @@ registered backend — including out-of-tree ones — without edits here.
 
 from __future__ import annotations
 
+import json
+import platform
 import sys
 import time
 
@@ -32,7 +34,7 @@ __all__ = [                 # re-exported for the fig*.py drivers
     "TPCCTables", "YCSBConfig", "micro_worker", "tpcc_worker",
     "ycsb_worker", "ClusterConfig", "GAMConfig", "SELCCConfig",
     "SELCCLayer", "available_protocols", "BASELINES", "HARD_LIMIT",
-    "build_layer", "run_micro", "emit", "timer",
+    "build_layer", "run_micro", "emit", "timer", "write_bench_json",
 ]
 
 HARD_LIMIT = 300.0          # sim-seconds safety net
@@ -72,10 +74,38 @@ def run_micro(protocol: str, n_compute: int, threads: int,
     return layer
 
 
-def emit(figure: str, series: str, x, metric: str, value) -> None:
+def emit(figure: str, series: str, x, metric: str, value,
+         rows: list | None = None) -> None:
+    """Print one CSV row; if ``rows`` is given, also collect it for a
+    ``BENCH_*.json`` trajectory file (see :func:`write_bench_json`)."""
     print(f"{figure},{series},{x},{metric},{value:.6g}"
           if isinstance(value, float) else
           f"{figure},{series},{x},{metric},{value}", flush=True)
+    if rows is not None:
+        rows.append({"series": series, "x": x, "metric": metric,
+                     "value": value})
+
+
+def write_bench_json(name: str, rows: list, meta: dict | None = None,
+                     path: str | None = None) -> str:
+    """Write a machine-readable benchmark trajectory ``BENCH_<name>.json``
+    (the artifact the CI smoke job uploads, seeding the perf history).
+
+    Schema: ``{"bench": name, "meta": {...}, "rows": [{series, x,
+    metric, value}, ...]}``."""
+    out = path or f"BENCH_{name}.json"
+    doc = {
+        "bench": name,
+        "meta": dict(meta or {}, python=platform.python_version(),
+                     timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                             time.gmtime())),
+        "rows": rows,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+        f.write("\n")
+    print(f"# wrote {out} ({len(rows)} rows)", flush=True)
+    return out
 
 
 class timer:

@@ -1,0 +1,135 @@
+"""fig_rounds — device-plane coherence sweep (the JAX rounds engine).
+
+Measures the fused on-device spin loop (``repro.core.rounds.run_rounds``,
+one jit call, zero host syncs per round) against the pre-refactor
+host-driven loop (one host↔device sync per round — the per-op round-trip
+overhead MIND shows dominating disaggregated-memory latency), across
+node counts, write mixes, and both data-plane modes (write-through /
+write-back).
+
+Emits CSV rows like every fig*, plus ``BENCH_rounds.json`` via
+``benchmarks.common.write_bench_json`` — the artifact CI uploads, so the
+device-plane perf trajectory accumulates per commit.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit, timer, write_bench_json
+
+N_LINES = 1024
+R_SLOTS = 64
+MAX_ROUNDS = 64
+
+
+def _op_batches(rng, n_nodes: int, write_pct: int, iters: int):
+    """Pre-generate random op batches — duplicates (node, line) included:
+    the engine coalesces them, so no driver-side de-duplication."""
+    hot = max(8, N_LINES // 16)          # skewed: 1/16th of lines are hot
+    batches = []
+    for _ in range(iters):
+        node = rng.integers(0, n_nodes, R_SLOTS).astype(np.int32)
+        cold = rng.integers(0, N_LINES, R_SLOTS)
+        hotl = rng.integers(0, hot, R_SLOTS)
+        line = np.where(rng.random(R_SLOTS) < 0.5, hotl, cold) \
+            .astype(np.int32)
+        is_w = (rng.integers(0, 100, R_SLOTS) < write_pct).astype(np.int32)
+        batches.append((node, line, is_w))
+    return batches
+
+
+def _host_loop(state, node, line, is_w, *, n_nodes: int):
+    """The pre-refactor driver: re-present unserved ops with a host sync
+    after EVERY round (the baseline the fused loop deletes)."""
+    import jax.numpy as jnp
+
+    from repro.core.rounds import coherence_round
+    pending = line.copy()
+    rounds = 0
+    while (pending >= 0).any() and rounds < MAX_ROUNDS:
+        state, served, _ = coherence_round(
+            state, jnp.asarray(node), jnp.asarray(pending),
+            jnp.asarray(is_w), n_nodes=n_nodes)
+        pending = np.where(np.asarray(served), -1, pending)   # HOST SYNC
+        rounds += 1
+    assert (pending < 0).all(), "host-loop baseline left ops unserved"
+    return state, rounds
+
+
+def _bench_case(n_nodes: int, write_pct: int, write_back: bool,
+                iters: int, seed: int = 7):
+    import jax
+
+    from repro.core.rounds import make_state, run_rounds
+    rng = np.random.default_rng(seed)
+    batches = _op_batches(rng, n_nodes, write_pct, iters + 1)
+    state = make_state(n_nodes, N_LINES, write_back=write_back)
+    # warmup = compile (fused loop compiles ONCE for all rounds)
+    n0, l0, w0 = batches[0]
+    state, vers, rounds, okall = run_rounds(
+        state, n0, l0, w0, n_nodes=n_nodes, max_rounds=MAX_ROUNDS)
+    jax.block_until_ready(vers)
+    served_flags = [okall]
+    t0 = time.time()
+    rounds_used = []
+    for node, line, is_w in batches[1:]:
+        state, vers, rounds, okall = run_rounds(
+            state, node, line, is_w, n_nodes=n_nodes,
+            max_rounds=MAX_ROUNDS)
+        rounds_used.append(rounds)           # device values: no sync here
+        served_flags.append(okall)
+    jax.block_until_ready(vers)
+    fused_s = time.time() - t0
+    total_rounds = sum(int(r) for r in rounds_used)
+    # EVERY batch must have fully served, or the mops rates would count
+    # ops that were silently dropped at the round bound
+    assert all(bool(f) for f in served_flags), \
+        "ops unserved within the round bound"
+
+    # host-loop baseline over the same batches
+    state_h = make_state(n_nodes, N_LINES, write_back=write_back)
+    _host_loop(state_h, *batches[0], n_nodes=n_nodes)       # warmup
+    t0 = time.time()
+    for node, line, is_w in batches[1:]:
+        state_h, _ = _host_loop(state_h, node, line, is_w,
+                                n_nodes=n_nodes)
+    host_s = time.time() - t0
+
+    ops = iters * R_SLOTS
+    return {
+        "fused_mops": ops / fused_s / 1e6,
+        "host_mops": ops / host_s / 1e6,
+        "fused_speedup": host_s / fused_s if fused_s > 0 else 0.0,
+        "rounds_per_batch": total_rounds / iters,
+    }
+
+
+def main(quick: bool = False, smoke: bool = False) -> list:
+    rows: list = []
+    if smoke:
+        nodes_list, write_pcts, iters = [4], [50], 4
+    elif quick:
+        nodes_list, write_pcts, iters = [2, 8], [0, 100], 8
+    else:
+        nodes_list, write_pcts, iters = [2, 4, 8], [0, 50, 100], 16
+    for write_back in (False, True):
+        mode = "wb" if write_back else "wt"
+        for wp in write_pcts:
+            for n in nodes_list:
+                with timer() as t:
+                    m = _bench_case(n, wp, write_back, iters)
+                series = f"{mode}_w{wp}"
+                for metric, value in m.items():
+                    emit("fig_rounds", series, n, metric, value, rows=rows)
+                emit("fig_rounds", series, n, "wall_s", t.wall, rows=rows)
+    write_bench_json("rounds", rows,
+                     meta={"n_lines": N_LINES, "r_slots": R_SLOTS,
+                           "smoke": smoke, "quick": quick})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

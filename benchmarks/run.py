@@ -1,8 +1,12 @@
 """Benchmark runner — one module per paper table/figure + the roofline
-report.  ``python -m benchmarks.run [--quick] [--only figN,...]``.
+report + the device-plane rounds sweep.
+
+``python -m benchmarks.run [--quick] [--smoke] [--only figN,...]``
 
 Prints ``figure,series,x,metric,value`` CSV rows per figure, plus wall
-time per figure.
+time per figure.  ``--smoke`` is the CI trajectory job: a fast subset
+that writes the machine-readable ``BENCH_rounds.json`` (device plane)
+and ``BENCH_selcc.json`` (DES plane) artifacts.
 """
 
 from __future__ import annotations
@@ -12,17 +16,53 @@ import sys
 import time
 
 
+def smoke() -> None:
+    """CI smoke: one small DES micro-run + one small rounds sweep, both
+    persisted as BENCH_*.json for the per-commit perf trajectory."""
+    from . import fig_rounds
+    from .common import MicroConfig, emit, run_micro, timer, \
+        write_bench_json
+
+    rows: list = []
+    for read_ratio, series in ((0.95, "read_int"), (0.5, "write_int")):
+        mcfg = MicroConfig(n_gcls=2_000, sharing_ratio=1.0,
+                           read_ratio=read_ratio, ops_per_thread=100)
+        with timer() as t:
+            layer = run_micro("selcc", 4, 8, mcfg)
+        emit("selcc_smoke", series, 4, "mops",
+             layer.throughput() / 1e6, rows=rows)
+        emit("selcc_smoke", series, 4, "mean_latency_us",
+             layer.mean_latency() * 1e6, rows=rows)
+        emit("selcc_smoke", series, 4, "inv_ratio", layer.inv_ratio(),
+             rows=rows)
+        emit("selcc_smoke", series, 4, "hit_rate",
+             layer.cache_stats().get("hits", 0)
+             / max(1, layer.total_ops()), rows=rows)
+        emit("selcc_smoke", series, 4, "wall_s", t.wall, rows=rows)
+    write_bench_json("selcc", rows, meta={"smoke": True})
+    fig_rounds.main(smoke=True)              # writes BENCH_rounds.json
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced op counts (CI mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset emitting BENCH_*.json artifacts")
     ap.add_argument("--only", default="",
                     help="comma list: fig7,fig8,fig9,fig10,fig11,fig12,"
-                         "roofline")
+                         "rounds,roofline")
     args = ap.parse_args()
 
+    print("figure,series,x,metric,value")
+    if args.smoke:
+        t0 = time.time()
+        smoke()
+        print(f"# smoke done in {time.time() - t0:.1f}s", flush=True)
+        return
+
     from . import (fig7_scalability, fig8_locality, fig9_skew,
-                   fig10_ycsb_btree, fig11_tpcc, fig12_2pc,
+                   fig10_ycsb_btree, fig11_tpcc, fig12_2pc, fig_rounds,
                    roofline_report)
     figures = {
         "fig7": fig7_scalability.main,
@@ -31,10 +71,10 @@ def main() -> None:
         "fig10": fig10_ycsb_btree.main,
         "fig11": fig11_tpcc.main,
         "fig12": fig12_2pc.main,
+        "rounds": fig_rounds.main,
         "roofline": roofline_report.main,
     }
     only = [x for x in args.only.split(",") if x]
-    print("figure,series,x,metric,value")
     for name, fn in figures.items():
         if only and name not in only:
             continue

@@ -3,7 +3,7 @@
 # baselines and the abstraction-layer API (paper Table 1, v2 surface:
 # typed GAddr, unified data-plane Handle, scope guards, and the pluggable
 # protocol-backend registry).
-from . import latchword
+from . import coherence, latchword
 from .addressing import GAddr, as_gaddr
 from .api import ClusterConfig, SELCCLayer
 from .cache import INVALID, MODIFIED, SHARED, NodeCache
@@ -21,7 +21,8 @@ from .simulator import (CostModel, Environment, Event, Fabric, Process,
                         QueueResource, RpcRequest, SXLatch, Store)
 
 __all__ = [
-    "latchword", "GAddr", "as_gaddr", "ClusterConfig", "SELCCLayer",
+    "coherence", "latchword", "GAddr", "as_gaddr", "ClusterConfig",
+    "SELCCLayer",
     "NodeCache", "MODIFIED", "SHARED", "INVALID",
     "SCViolation", "check_coherence", "check_sequential_consistency",
     "merge_histories", "GAMConfig", "GAMMemoryAgent", "GAMNode", "GclHeap",
@@ -32,16 +33,16 @@ __all__ = [
     "Event", "Fabric", "Process", "QueueResource", "RpcRequest",
     "SXLatch", "Store",
     # lazy (see __getattr__): heavy JAX-path members of the same facade
-    "jax_protocol", "KVPoolConfig", "SELCCKVPool",
+    "jax_protocol", "rounds", "KVPoolConfig", "SELCCKVPool",
 ]
 
 
 def __getattr__(name):
     # The bulk-synchronous JAX path is part of the same facade but drags
     # in jax; resolve it lazily so pure-DES users stay light.
-    if name == "jax_protocol":
+    if name in ("jax_protocol", "rounds"):
         import importlib
-        return importlib.import_module(".jax_protocol", __name__)
+        return importlib.import_module(f".{name}", __name__)
     if name in ("KVPoolConfig", "SELCCKVPool"):
         import importlib
         kvpool = importlib.import_module("repro.dsm.kvpool")

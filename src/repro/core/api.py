@@ -185,15 +185,19 @@ class SELCCLayer:
     def line_to_gaddr(self, line: int) -> GAddr:
         return GAddr.from_flat(line, self.cfg.n_memory)
 
-    def as_rounds_state(self, n_lines: int | None = None):
-        """Fresh bulk-synchronous round state (core/jax_protocol.py) sized
-        to this layer: same node count, lines spanning every allocation
-        under the shared ``GAddr.flat`` striping."""
-        from . import jax_protocol as jp
+    def as_rounds_state(self, n_lines: int | None = None, *,
+                        write_back: bool = False):
+        """Fresh device-plane round state (core/rounds) sized to this
+        layer: same node count, lines spanning every allocation under
+        the shared ``GAddr.flat`` striping.  ``write_back=True`` builds
+        the dirty-bit variant (the DES's write-back data plane, on
+        device); drive it with ``repro.core.rounds.run_rounds``."""
+        from . import rounds
         if n_lines is None:
             n_lines = max(1, max(self._next_line, default=1)
                           * self.cfg.n_memory)
-        return jp.make_state(self.cfg.n_compute, n_lines)
+        return rounds.make_state(self.cfg.n_compute, n_lines,
+                                 write_back=write_back)
 
     @staticmethod
     def make_kv_pool(kv_cfg=None):

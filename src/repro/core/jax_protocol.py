@@ -1,224 +1,27 @@
-"""Vectorized SELCC: the protocol as bulk-synchronous JAX rounds.
+"""Compatibility shim — the bulk-synchronous engine moved to
+:mod:`repro.core.rounds` and the word encoding to
+:mod:`repro.core.coherence`.
 
-TPU SPMD has no asynchronous RPC, so the protocol's message plane is
-reshaped into deterministic ROUNDS (DESIGN.md Sec. 2).  One round:
-
-  1. local cache hits are served (lazy latches: prior grants persist);
-  2. misses become latch requests, applied by the latch_ops kernel
-     (serialized per word — the NIC atomic unit's role in the paper);
-  3. grants update cache states; a FAILED request's returned old word IS
-     the embedded directory (Fig. 3) and becomes an invalidation:
-     PeerWr -> every holder releases; PeerRd -> the writer downgrades;
-  4. invalidations are applied at the ROUND BOUNDARY (the deterministic
-     stand-in for the paper's async RPC handlers), so spinning requesters
-     win on a later round — the round order is the total order, which
-     preserves the sequential-consistency argument of Sec. 7.
-
-The data plane is write-through here (memory version always current once
-the latch moves); the DES (core/protocol.py) models the write-back
-variant with dirty lines.  Cache states per (node, line): 0=I 1=S 2=M.
-
-Drivers must present at most one op per line per node per round (a real
-node coalesces its local ops through the local latch first — Sec. 5.2).
-
-Address vocabulary: lines here are the FLAT form of the facade's typed
-:class:`repro.core.GAddr` (``gaddr.flat(n_homes)`` /
-``GAddr.from_flat``); ``SELCCLayer.as_rounds_state()`` builds a round
-state sized to a DES layer's allocations so both planes share one
-address space.
+Pre-refactor this module carried its own copy of the writer-byte /
+reader-bitmap lane math plus a host-side per-round spin loop.  Both now
+live once: the spec in ``core/coherence.py`` (shared with the DES plane
+and dsm/kvpool.py) and the engine in ``core/rounds/{state,engine,
+driver}.py`` (which added S->X upgrades, write-back mode, multi-op
+coalescing, and the fused zero-sync ``run_rounds`` driver).  Importing
+from here keeps working; new code should import ``repro.core.rounds``.
 """
 
 from __future__ import annotations
 
-import functools
+from .coherence import (I, M, S, WRITER_SHIFT_HI, bit_lanes as _bit_lanes,
+                        writer_field_hi as _writer_field_hi,
+                        writer_of_hi as _writer_of_hi)
+from .rounds import (check_invariants, coherence_round, evict_lines,
+                     make_state, run_ops_to_completion, run_rounds)
 
-import jax
-import jax.numpy as jnp
-
-from ..kernels.latch_ops.ops import OP_CAS, OP_FAA, apply_batch
-
-I, S, M = 0, 1, 2
-WRITER_SHIFT_HI = 24          # writer byte lives in hi lane bits 31..24
-
-
-def make_state(n_nodes: int, n_lines: int):
-    return {
-        "words": jnp.zeros((n_lines, 2), jnp.int32),
-        "cache_state": jnp.zeros((n_nodes, n_lines), jnp.int8),
-        "cache_version": jnp.zeros((n_nodes, n_lines), jnp.int32),
-        "mem_version": jnp.zeros((n_lines,), jnp.int32),
-    }
-
-
-def _bit_lanes(node):
-    lo = jnp.where(node < 32, jnp.left_shift(1, jnp.minimum(node, 31)), 0)
-    hi = jnp.where(node >= 32,
-                   jnp.left_shift(1, jnp.clip(node - 32, 0, 23)), 0)
-    return hi.astype(jnp.int32), lo.astype(jnp.int32)
-
-
-def _writer_field_hi(node):
-    return jnp.left_shift(node + 1, WRITER_SHIFT_HI).astype(jnp.int32)
-
-
-def _writer_of_hi(hi):
-    w = jnp.right_shift(hi, WRITER_SHIFT_HI) & 0xFF
-    return w - 1                                   # -1 = none
-
-
-@functools.partial(jax.jit, static_argnames=("n_nodes", "backend"))
-def coherence_round(state, node_id, line, is_write, *, n_nodes: int,
-                    backend: str = "ref"):
-    """One round of R op slots (node_id, line, is_write) int32 [R];
-    line = -1 marks an empty slot.  Returns (state', served[R], version[R])."""
-    words = state["words"]
-    cstate = state["cache_state"]
-    cver = state["cache_version"]
-    mver = state["mem_version"]
-    idx = jnp.maximum(line, 0)
-    valid = line >= 0
-    is_w = is_write.astype(bool)
-
-    # ---------------- 1. local hits (lazy latches) -------------------------
-    # NOTE on scatters: several op slots may target one LINE, so per-line
-    # updates must be order-independent (.add of 0/1), never .set of a
-    # captured old value — a losing slot's no-op .set can otherwise clobber
-    # the winner's update (scatter order is unspecified).
-    st = cstate[node_id, idx]
-    hit_read = jnp.logical_and(~is_w, st >= S)
-    hit_write = jnp.logical_and(is_w, st == M)
-    hit = jnp.logical_and(valid, jnp.logical_or(hit_read, hit_write))
-    # write hit: bump version (write-through); one M holder per line max
-    bump_hit = jnp.logical_and(hit_write, valid)
-    mver = mver.at[idx].add(bump_hit.astype(jnp.int32), mode="drop")
-    cver = cver.at[node_id, idx].set(
-        jnp.where(bump_hit, mver[idx], cver[node_id, idx]), mode="drop")
-
-    # ---------------- 2. latch requests for misses -------------------------
-    miss = jnp.logical_and(valid, ~hit)
-    bit_hi, bit_lo = _bit_lanes(node_id)
-    wfield = _writer_field_hi(node_id)
-    req = {
-        "line": jnp.where(miss, line, -1).astype(jnp.int32),
-        "op": jnp.where(is_w, OP_CAS, OP_FAA).astype(jnp.int32),
-        "arg_hi": jnp.where(is_w, wfield, bit_hi).astype(jnp.int32),
-        "arg_lo": jnp.where(is_w, 0, bit_lo).astype(jnp.int32),
-        "cmp_hi": jnp.zeros_like(line),
-        "cmp_lo": jnp.zeros_like(line),
-    }
-    words, old_hi, old_lo, ok = apply_batch(words, req, backend=backend)
-    old_writer = _writer_of_hi(old_hi)
-    no_writer = old_writer < 0
-    read_miss = jnp.logical_and(miss, ~is_w)
-    write_miss = jnp.logical_and(miss, is_w)
-    read_grant = jnp.logical_and(read_miss, no_writer)
-    write_grant = jnp.logical_and(write_miss, ok.astype(bool))
-    # NOTE: a granted write CAS'ed a completely FREE word, so there are no
-    # holders to invalidate — S copies always keep their bit set.
-
-    # failed readers reset their transient bit (Sec. 4.3b)
-    reset = jnp.logical_and(read_miss, ~no_writer)
-    req2 = {
-        "line": jnp.where(reset, line, -1).astype(jnp.int32),
-        "op": jnp.full_like(line, OP_FAA),
-        "arg_hi": jnp.where(reset, -bit_hi, 0).astype(jnp.int32),
-        "arg_lo": jnp.where(reset, -bit_lo, 0).astype(jnp.int32),
-        "cmp_hi": jnp.zeros_like(line),
-        "cmp_lo": jnp.zeros_like(line),
-    }
-    words, _, _, _ = apply_batch(words, req2, backend=backend)
-
-    # grants -> cache state ((node, line) slots are unique per round, so
-    # these scatters have no duplicate indices; the LINE-indexed mver uses
-    # an order-independent add — at most one write grant per line (CAS))
-    cstate = cstate.at[node_id, idx].set(
-        jnp.where(read_grant, jnp.int8(S),
-                  jnp.where(write_grant, jnp.int8(M),
-                            cstate[node_id, idx])), mode="drop")
-    mver = mver.at[idx].add(write_grant.astype(jnp.int32), mode="drop")
-    post = mver[idx]
-    cver = cver.at[node_id, idx].set(
-        jnp.where(jnp.logical_or(read_grant, write_grant), post,
-                  cver[node_id, idx]),
-        mode="drop")
-
-    # ---------------- 3/4. round-boundary invalidations --------------------
-    n_lines = words.shape[0]
-    # PeerWr: failed writers invalidate every holder of the line
-    peer_wr = jnp.zeros((n_lines,), bool).at[idx].max(
-        jnp.logical_and(write_miss, ~ok.astype(bool)), mode="drop")
-    # PeerRd: failed readers ask the current writer to downgrade
-    peer_rd = jnp.zeros((n_lines,), bool).at[idx].max(reset, mode="drop")
-
-    line_writer = _writer_of_hi(words[:, 0])        # [n_lines], -1 = none
-    # downgrade: M holder -> S (write-through: memory already current);
-    # a concurrent PeerWr dominates — the holder releases outright
-    downgrade = jnp.logical_and(jnp.logical_and(peer_rd, ~peer_wr),
-                                line_writer >= 0)
-    # release: PeerWr kills S holders AND the M holder
-    lines_all = jnp.arange(n_lines)
-    node_ids = jnp.arange(n_nodes)
-
-    is_holder_m = cstate == M                        # [N, L]
-    is_holder_s = cstate == S
-    kill = jnp.logical_and(peer_wr[None, :],
-                           jnp.logical_or(is_holder_m, is_holder_s))
-    cstate = jnp.where(kill, jnp.int8(I), cstate)
-    dg_mask = jnp.logical_and(downgrade[None, :], is_holder_m)
-    cstate = jnp.where(dg_mask, jnp.int8(S), cstate)
-
-    # words: PeerWr clears the whole word; PeerRd swaps writer byte for the
-    # downgraded holder's reader bit.
-    dg_node = jnp.maximum(line_writer, 0)
-    dg_hi, dg_lo = _bit_lanes(dg_node)
-    new_hi = jnp.where(peer_wr, 0,
-                       jnp.where(downgrade, dg_hi, words[:, 0]))
-    new_lo = jnp.where(peer_wr, 0,
-                       jnp.where(downgrade, dg_lo, words[:, 1]))
-    words = jnp.stack([new_hi, new_lo], axis=1)
-
-    served = jnp.logical_or(hit, jnp.logical_or(read_grant, write_grant))
-    version = jnp.where(valid, cver[node_id, idx], 0)
-    new_state = {"words": words, "cache_state": cstate,
-                 "cache_version": cver, "mem_version": mver}
-    return new_state, served, version
-
-
-def run_ops_to_completion(state, node_id, line, is_write, *, n_nodes,
-                          max_rounds: int = 64, backend: str = "ref"):
-    """Re-present unserved ops round after round (the spin loop) until all
-    are served; returns (state, versions, rounds_used)."""
-    import numpy as np
-    pending = np.asarray(line).copy()
-    versions = np.zeros_like(pending)
-    nid = np.asarray(node_id)
-    isw = np.asarray(is_write)
-    rounds = 0
-    while (pending >= 0).any() and rounds < max_rounds:
-        state, served, ver = coherence_round(
-            state, jnp.asarray(nid), jnp.asarray(pending),
-            jnp.asarray(isw), n_nodes=n_nodes, backend=backend)
-        served = np.asarray(served)
-        ver = np.asarray(ver)
-        versions = np.where(served, ver, versions)
-        pending = np.where(served, -1, pending)
-        rounds += 1
-    if (pending >= 0).any():
-        raise RuntimeError(f"ops not served after {max_rounds} rounds")
-    return state, versions, rounds
-
-
-def check_invariants(state) -> None:
-    """Coherence invariants on a materialized state (tests)."""
-    import numpy as np
-    cs = np.asarray(state["cache_state"])
-    cv = np.asarray(state["cache_version"])
-    mv = np.asarray(state["mem_version"])
-    n_m = (cs == M).sum(axis=0)
-    assert (n_m <= 1).all(), "two exclusive holders on one line"
-    sh = cs == S
-    excl = (cs == M).any(axis=0)
-    assert not np.logical_and(sh.any(axis=0), excl).any(), \
-        "shared copy coexists with an exclusive holder"
-    stale = np.logical_and(sh, cv != mv[None, :])
-    assert not stale.any(), "stale shared copy (coherence violation)"
+__all__ = [
+    "I", "S", "M", "WRITER_SHIFT_HI", "check_invariants",
+    "coherence_round", "evict_lines", "make_state",
+    "run_ops_to_completion", "run_rounds",
+    "_bit_lanes", "_writer_field_hi", "_writer_of_hi",
+]

@@ -8,99 +8,22 @@ Layout (paper Sec. 4.2, Figure 3)::
 The word is the unit of RDMA_CAS / RDMA_FAA (8 bytes, the max atomic
 width).  Node ids are 0..55 (56 compute nodes max — the paper's limit).
 
-Two representations are provided:
-
-* canonical Python int (used by the discrete-event protocol + checkers);
-* a ``(hi, lo)`` pair of uint32 lanes (used by the JAX/Pallas data plane —
-  TPUs are 32-bit-lane machines, so the device layer carries latch words
-  as two int32 lanes and packs/unpacks at the boundary).
+Since the coherence-spec refactor this module is a compatibility facade:
+the encoding lives ONCE in :mod:`repro.core.coherence` (which also
+carries the jnp lane helpers the device plane uses) and is re-exported
+here under the names the DES plane has always imported.
 """
 
 from __future__ import annotations
 
-MAX_NODES = 56
-WRITER_SHIFT = 56
-READER_MASK = (1 << WRITER_SHIFT) - 1
-WORD_MASK = (1 << 64) - 1
+from .coherence import (FREE, MAX_NODES, READER_MASK, WORD_MASK,
+                        WRITER_SHIFT, _check_node, faa, from_lanes,
+                        has_readers, holders_of, is_free, pack, reader_bit,
+                        readers_of, to_lanes, writer_field, writer_of)
 
-FREE = 0  # latch off: no writer, no readers
-
-
-def writer_field(node_id: int) -> int:
-    """The word value representing 'node_id holds the exclusive latch'."""
-    _check_node(node_id)
-    return (node_id + 1) << WRITER_SHIFT
-
-
-def reader_bit(node_id: int) -> int:
-    _check_node(node_id)
-    return 1 << node_id
-
-
-def pack(writer: int | None, readers) -> int:
-    """Build a latch word. ``writer`` is a node id or None; ``readers`` an
-    iterable of node ids."""
-    w = 0 if writer is None else (writer + 1)
-    word = w << WRITER_SHIFT
-    for r in readers:
-        word |= reader_bit(r)
-    return word
-
-
-def writer_of(word: int) -> int | None:
-    """Node id of the exclusive holder, or None."""
-    w = (word >> WRITER_SHIFT) & 0xFF
-    return None if w == 0 else w - 1
-
-
-def readers_of(word: int) -> list[int]:
-    bits = word & READER_MASK
-    out = []
-    i = 0
-    while bits:
-        if bits & 1:
-            out.append(i)
-        bits >>= 1
-        i += 1
-    return out
-
-
-def has_readers(word: int) -> bool:
-    return bool(word & READER_MASK)
-
-
-def holders_of(word: int) -> list[int]:
-    """Every node id that holds the latch in any mode (invalidation targets)."""
-    w = writer_of(word)
-    out = [] if w is None else [w]
-    out.extend(r for r in readers_of(word) if r != w)
-    return out
-
-
-def is_free(word: int) -> bool:
-    return word == FREE
-
-
-def faa(word: int, delta: int) -> int:
-    """Fetch-and-add semantics on the 64-bit word (wraps at 2**64 like the
-    NIC does).  Returns the *old* value; caller applies ``(old + delta) & MASK``."""
-    return (word + delta) & WORD_MASK
-
-
-# ---------------------------------------------------------------------------
-# 32-bit lane representation for the device (TPU) data plane.
-#   hi = bits 63..32  (writer byte + readers 55..32)
-#   lo = bits 31..0   (readers 31..0)
-# ---------------------------------------------------------------------------
-
-def to_lanes(word: int) -> tuple[int, int]:
-    return (word >> 32) & 0xFFFFFFFF, word & 0xFFFFFFFF
-
-
-def from_lanes(hi: int, lo: int) -> int:
-    return ((hi & 0xFFFFFFFF) << 32) | (lo & 0xFFFFFFFF)
-
-
-def _check_node(node_id: int) -> None:
-    if not 0 <= node_id < MAX_NODES:
-        raise ValueError(f"node_id {node_id} out of range [0, {MAX_NODES})")
+__all__ = [
+    "FREE", "MAX_NODES", "READER_MASK", "WORD_MASK", "WRITER_SHIFT",
+    "faa", "from_lanes", "has_readers", "holders_of", "is_free", "pack",
+    "reader_bit", "readers_of", "to_lanes", "writer_field", "writer_of",
+    "_check_node",
+]

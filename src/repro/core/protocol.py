@@ -27,6 +27,7 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass
 
+from . import coherence as co
 from . import latchword as lw
 from .cache import CacheEntry, NodeCache, INVALID, MODIFIED, SHARED
 from .handles import Handle, NodeAPIMixin
@@ -36,6 +37,11 @@ from .simulator import Environment, Fabric, Store
 PEER_RD = "PeerRd"
 PEER_WR = "PeerWr"
 PEER_UPGR = "PeerUpgr"
+
+# DES cache states <-> the shared spec's numeric MSI encoding, so the
+# invalidation handlers can look transitions up in coherence.MSI_ON_PEER
+# (the same table the device-plane round engine applies at boundaries).
+_STATE_CODE = {INVALID: co.I, SHARED: co.S, MODIFIED: co.M}
 
 
 class CoherenceError(AssertionError):
@@ -438,28 +444,30 @@ class SELCCNode(NodeAPIMixin):
                 return
             e.processed_ids.add(dedup_key)
             e.note_inv(msg.priority, msg.sender, msg.type, msg.sent_at)
-            if e.state == MODIFIED:
-                if msg.type == PEER_RD:
-                    yield from self._downgrade(e)
-                else:
-                    yield from self._release_global_x(e, handover=True)
-                    e.reset_fairness()
-            elif e.state == SHARED:
-                if msg.type in (PEER_WR, PEER_UPGR):
-                    yield from self._release_global_s(e)
-                    if self.cfg.enable_spin_window \
-                            and msg.priority >= self.cfg.spin_window_pr:
-                        # anti-write-starvation window: T_spin = P_inv * T_r,
-                        # applied only once the writer actually reports
-                        # starvation (paper: "when latch starvation is
-                        # detected") — unconditional windows over-penalize
-                        # ordinary write sharing; capped, as unbounded
-                        # P_inv freezes readers under sustained contention
-                        e.spin_until = self.env.now + (
-                            min(msg.priority, 16)
-                            * self.fabric.cost.atomic_rtt)
-                    e.reset_fairness()
-                # PeerRd to a reader: readers don't conflict — drop
+            # the shared MSI table decides WHERE to go; the fabric verbs
+            # below are HOW the DES gets there
+            cur = _STATE_CODE[e.state]
+            nxt = co.on_peer(cur, co.PEER_EVENTS[msg.type])
+            if cur == co.M and nxt == co.S:
+                yield from self._downgrade(e)
+            elif cur == co.M and nxt == co.I:
+                yield from self._release_global_x(e, handover=True)
+                e.reset_fairness()
+            elif cur == co.S and nxt == co.I:
+                yield from self._release_global_s(e)
+                if self.cfg.enable_spin_window \
+                        and msg.priority >= self.cfg.spin_window_pr:
+                    # anti-write-starvation window: T_spin = P_inv * T_r,
+                    # applied only once the writer actually reports
+                    # starvation (paper: "when latch starvation is
+                    # detected") — unconditional windows over-penalize
+                    # ordinary write sharing; capped, as unbounded
+                    # P_inv freezes readers under sustained contention
+                    e.spin_until = self.env.now + (
+                        min(msg.priority, 16)
+                        * self.fabric.cost.atomic_rtt)
+                e.reset_fairness()
+            # nxt == cur (PeerRd to a reader): holders don't conflict — drop
         finally:
             e.latch.release_x()
 

@@ -1,0 +1,23 @@
+"""The device-resident coherence engine (bulk-synchronous rounds plane).
+
+One SELCC spec (core/coherence.py), two planes: the DES models the
+asynchronous RPC protocol; this package runs the SAME state machine as
+deterministic rounds on device — S->X upgrades, write-back with dirty
+bits and eviction write-back, multi-op coalescing, and a fully-jitted
+spin loop (:func:`run_rounds`) with zero host syncs per round.
+
+    state  = make_state(n_nodes, n_lines[, write_back=True])
+    state, versions, rounds, ok = run_rounds(state, nodes, lines, is_wr,
+                                             n_nodes=n_nodes)
+"""
+
+from ..coherence import I, M, S
+from .driver import run_ops_to_completion, run_rounds
+from .engine import TRACE_COUNTS, coherence_round, evict_lines
+from .state import check_invariants, is_write_back, make_state
+
+__all__ = [
+    "I", "S", "M", "TRACE_COUNTS", "check_invariants", "coherence_round",
+    "evict_lines", "is_write_back", "make_state", "run_ops_to_completion",
+    "run_rounds",
+]

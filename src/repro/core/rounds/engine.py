@@ -1,0 +1,235 @@
+"""One bulk-synchronous coherence round — the full SELCC state machine.
+
+TPU SPMD has no asynchronous RPC, so the protocol's message plane is
+reshaped into deterministic ROUNDS (DESIGN.md Sec. 2).  One round:
+
+  1. op slots are COALESCED per (node, line): a real node funnels its
+     local ops through the local latch first (Sec. 5.2), so the engine
+     groups duplicate (node, line) slots and issues ONE effective
+     protocol op per group (a write if any member writes) — drivers no
+     longer hand-enforce "one op per line per node";
+  2. local cache hits are served (lazy latches: prior grants persist);
+  3. misses become latch requests, applied by the latch_ops kernel
+     (serialized per word — the NIC atomic unit's role in the paper):
+     reads are FAA(+reader bit), fresh writes are CAS(FREE -> writer
+     field), and an S holder's write is the paper's S->X UPGRADE —
+     CAS(my reader bit -> writer field), which succeeds iff the holder
+     is the sole reader (Algorithm 2 lines 8-13);
+  4. a FAILED request's returned old word IS the embedded directory
+     (Fig. 3) and becomes an invalidation applied at the ROUND BOUNDARY
+     (the deterministic stand-in for the async RPC handlers): PeerWr /
+     PeerUpgr -> every *other* holder releases (an upgrader never kills
+     itself — two racing upgraders kill each other, drop to I, and one
+     wins the fresh CAS next round, exactly Algorithm 2's release+
+     reacquire fallback); PeerRd -> the writer downgrades M -> S.  The
+     boundary transitions follow coherence.MSI_ON_PEER — the same table
+     the DES handlers consume.
+
+After the boundary the latch words are REBUILT from the cache states
+(`coherence.directory_from_state`), so word and directory cannot drift
+and failed readers' transient bits vanish without a second kernel pass.
+
+Data plane: write-through by default (memory version current once the
+latch moves).  A state built with ``make_state(..., write_back=True)``
+carries per-copy dirty bits: write hits bump only the local version;
+memory catches up when the holder downgrades, is invalidated, or is
+evicted (:func:`evict_lines`) — the DES's write-back semantics, on
+device.
+
+Versions under coalescing: a group's k writes serialize in slot order —
+write slot j returns ``start + rank_j + 1`` and read slots in the group
+return ``start + k`` (reads observe the node's fully-applied local
+writes, as they would through the local latch).
+
+Cache states per (node, line): 0=I 1=S 2=M (coherence.I/S/M).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import coherence as co
+from ...kernels.latch_ops.ops import OP_CAS, OP_FAA, apply_batch
+
+I, S, M = co.I, co.S, co.M
+
+# Python-side trace bookkeeping: the body below executes once per jit
+# TRACE (never per round — the while_loop body traces once), so tests
+# can prove the fused driver compiles once per shape.
+TRACE_COUNTS: dict = {}
+
+
+def _note_trace(key) -> None:
+    TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "backend"))
+def coherence_round(state, node_id, line, is_write, *, n_nodes: int,
+                    backend: str = "ref"):
+    """One round of R op slots (node_id, line, is_write) int32 [R];
+    line = -1 marks an empty slot.  Returns (state', served[R], version[R]).
+
+    Duplicate (node, line) slots are legal and coalesce (see module
+    docstring); duplicate LINES across nodes contend through the latch
+    kernel exactly like concurrent RDMA atomics."""
+    co.check_node_capacity(n_nodes)
+    write_back = "dirty" in state
+    words = state["words"]
+    cstate = state["cache_state"]
+    cver = state["cache_version"]
+    mver = state["mem_version"]
+    dirty = state.get("dirty")
+    n_lines = words.shape[0]
+    r = line.shape[0]
+    _note_trace(("round", n_nodes, n_lines, r, backend, write_back))
+
+    valid = line >= 0
+    idx = jnp.maximum(line, 0)
+    is_w = jnp.logical_and(is_write.astype(bool), valid)
+
+    # ------------- 0. coalesce duplicate (node, line) slots ---------------
+    key = node_id * n_lines + idx
+    eq = jnp.logical_and(key[:, None] == key[None, :],
+                         jnp.logical_and(valid[:, None], valid[None, :]))
+    first = jnp.argmax(eq, axis=1)                 # my group's first slot
+    is_rep = jnp.logical_and(valid, first == jnp.arange(r))
+    grp_write = jnp.any(jnp.logical_and(eq, is_w[None, :]), axis=1)
+    lower = jnp.tril(jnp.ones((r, r), bool), k=-1)
+    in_grp_w = jnp.logical_and(eq, is_w[None, :])
+    w_rank = jnp.sum(jnp.logical_and(in_grp_w, lower), axis=1) \
+        .astype(jnp.int32)                         # writes before me
+    n_w_grp = jnp.sum(in_grp_w, axis=1).astype(jnp.int32)
+
+    # ------------- 1. local hits (lazy latches) ---------------------------
+    st = cstate[node_id, idx]
+    hit_read = jnp.logical_and(~grp_write, st >= S)
+    hit_write = jnp.logical_and(grp_write, st == M)
+    hit = jnp.logical_and(is_rep, jnp.logical_or(hit_read, hit_write))
+
+    # ------------- 2. latch requests for misses ---------------------------
+    miss = jnp.logical_and(is_rep, ~hit)
+    upgrade = jnp.logical_and(miss, jnp.logical_and(grp_write, st == S))
+    fresh_w = jnp.logical_and(miss, jnp.logical_and(grp_write, st != S))
+    read_miss = jnp.logical_and(miss, ~grp_write)
+    bit_hi, bit_lo = co.bit_lanes(node_id)
+    wf = co.writer_field_hi(node_id)
+    req = {
+        "line": jnp.where(miss, line, -1).astype(jnp.int32),
+        "op": jnp.where(grp_write, OP_CAS, OP_FAA).astype(jnp.int32),
+        "arg_hi": jnp.where(grp_write, wf, bit_hi).astype(jnp.int32),
+        "arg_lo": jnp.where(grp_write, 0, bit_lo).astype(jnp.int32),
+        # S->X upgrade compares against the holder's own bit; a fresh
+        # write compares against FREE (zeros)
+        "cmp_hi": jnp.where(upgrade, bit_hi, 0).astype(jnp.int32),
+        "cmp_lo": jnp.where(upgrade, bit_lo, 0).astype(jnp.int32),
+    }
+    _, old_hi, _, ok = apply_batch(words, req, backend=backend)
+    ok = ok.astype(bool)
+    old_writer = co.writer_of_hi(old_hi)
+    no_writer = old_writer < 0
+    read_grant = jnp.logical_and(read_miss, no_writer)
+    write_grant = jnp.logical_and(jnp.logical_or(upgrade, fresh_w), ok)
+    granted = jnp.logical_or(read_grant, write_grant)
+    served_rep = jnp.logical_or(hit, granted)
+
+    # ------------- grants + versions --------------------------------------
+    # start version of the serialized group: the node's own copy on a
+    # hit (may run ahead of memory under write-back), memory otherwise
+    # (upgrades keep a coherent S copy, so memory is equally current).
+    start = jnp.where(hit, cver[node_id, idx], mver[idx])
+    k = jnp.where(jnp.logical_and(served_rep, grp_write), n_w_grp, 0)
+    final = start + k
+    # NOTE on scatters: invalid/no-op slots are routed to row n_nodes /
+    # line n_lines and dropped, so duplicate in-bounds indices never
+    # carry stale values (scatter order is unspecified).
+    upd = granted
+    cstate = cstate.at[jnp.where(upd, node_id, n_nodes), idx].set(
+        jnp.where(read_grant, jnp.int8(S), jnp.int8(M)), mode="drop")
+    cver = cver.at[jnp.where(served_rep, node_id, n_nodes), idx].set(
+        final, mode="drop")
+    wrote = jnp.logical_and(served_rep, grp_write)
+    if write_back:
+        dirty = dirty.at[jnp.where(wrote, node_id, n_nodes), idx].set(
+            True, mode="drop")
+    else:
+        mver = mver.at[jnp.where(wrote, idx, n_lines)].add(k, mode="drop")
+
+    # ------------- 3/4. round-boundary invalidations ----------------------
+    fail_w = jnp.logical_and(jnp.logical_or(upgrade, fresh_w), ~ok)
+    fail_r = jnp.logical_and(read_miss, ~no_writer)
+    wr_cnt = jnp.zeros((n_lines,), jnp.int32).at[
+        jnp.where(fail_w, idx, n_lines)].add(1, mode="drop")
+    rd_fail = jnp.zeros((n_lines,), bool).at[
+        jnp.where(fail_r, idx, n_lines)].set(True, mode="drop")
+    self_wr_fail = jnp.zeros((n_nodes, n_lines), jnp.int32).at[
+        jnp.where(fail_w, node_id, n_nodes), idx].set(1, mode="drop")
+    # PeerWr/PeerUpgr from any OTHER node kills a holder (upgraders never
+    # kill themselves; two racing upgraders kill each other and fall back
+    # to fresh acquisition — Algorithm 2's release+reacquire)
+    other_fail = (wr_cnt[None, :] - self_wr_fail) > 0
+    holder = cstate >= S
+    kill = jnp.logical_and(other_fail, holder)
+    # PeerRd with no competing writer: the M holder downgrades
+    m_mask = cstate == M
+    dg_line = jnp.logical_and(jnp.logical_and(rd_fail, wr_cnt == 0),
+                              jnp.any(m_mask, axis=0))
+    dg_mask = jnp.logical_and(dg_line[None, :], m_mask)
+    if write_back:
+        # a dirty M holder leaving M (killed or downgraded) writes back
+        flush = jnp.logical_and(jnp.logical_or(kill, dg_mask),
+                                jnp.logical_and(m_mask, dirty))
+        flush_ver = jnp.max(jnp.where(flush, cver, 0), axis=0)
+        mver = jnp.where(jnp.any(flush, axis=0), flush_ver, mver)
+        dirty = jnp.logical_and(dirty, ~jnp.logical_or(kill, dg_mask))
+    cstate = jnp.where(kill, jnp.int8(I), cstate)
+    cstate = jnp.where(dg_mask, jnp.int8(S), cstate)
+    # the word IS the directory: rebuild it from the post-boundary states
+    # (also clears failed readers' transient bits without a second pass)
+    words = co.directory_from_state(cstate)
+
+    # ------------- per-slot replies (coalesced groups fan back out) -------
+    served = jnp.where(valid, served_rep[first], False)
+    slot_start = start[first]
+    version = jnp.where(
+        served,
+        jnp.where(is_w, slot_start + w_rank + 1, slot_start + n_w_grp),
+        0).astype(jnp.int32)
+    new_state = {"words": words, "cache_state": cstate,
+                 "cache_version": cver, "mem_version": mver}
+    if write_back:
+        new_state["dirty"] = dirty
+    return new_state, served, version
+
+
+@jax.jit
+def evict_lines(state, node_id, line):
+    """Evict (node, line) slots: release the holder's latch and, in
+    write-back mode, flush a dirty exclusive copy to memory first (the
+    DES `_maybe_evict` -> `_release_global_any` path).  line = -1 skips
+    a slot.  Returns the new state."""
+    write_back = "dirty" in state
+    cstate = state["cache_state"]
+    cver = state["cache_version"]
+    mver = state["mem_version"]
+    n_nodes, n_lines = cstate.shape
+    valid = line >= 0
+    idx = jnp.maximum(line, 0)
+    new_state = dict(state)
+    if write_back:
+        dirty = state["dirty"]
+        flush = jnp.logical_and(
+            valid, jnp.logical_and(cstate[node_id, idx] == M,
+                                   dirty[node_id, idx]))
+        mver = mver.at[jnp.where(flush, idx, n_lines)].max(
+            cver[node_id, idx], mode="drop")
+        new_state["dirty"] = dirty.at[
+            jnp.where(valid, node_id, n_nodes), idx].set(False, mode="drop")
+        new_state["mem_version"] = mver
+    cstate = cstate.at[jnp.where(valid, node_id, n_nodes), idx].set(
+        jnp.int8(I), mode="drop")
+    new_state["cache_state"] = cstate
+    new_state["words"] = co.directory_from_state(cstate)
+    return new_state

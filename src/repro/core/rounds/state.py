@@ -1,0 +1,72 @@
+"""Round-state construction + invariant checking for the device plane.
+
+The state is a flat dict of arrays (a pytree — jit/donate/shard
+friendly):
+
+    words          [L, 2] int32   latch word lanes (hi, lo) — Fig. 3
+    cache_state    [N, L] int8    MSI state per (node, line)
+    cache_version  [N, L] int32   version of the node's local copy
+    mem_version    [L]    int32   version of the memory image
+    dirty          [N, L] bool    (write-back mode only) copy newer than
+                                  memory; flushed on downgrade/release/evict
+
+Write-through vs write-back is a *structural* property of the state
+(presence of the ``dirty`` leaf), so the engine needs no extra static
+flag and a state can never be run under the wrong mode.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import coherence as co
+
+
+def make_state(n_nodes: int, n_lines: int, *, write_back: bool = False):
+    """Fresh round state.  Raises ``ValueError`` for node counts the
+    latch word cannot encode (pre-spec these silently aliased bits)."""
+    co.check_node_capacity(n_nodes)
+    state = {
+        "words": jnp.zeros((n_lines, 2), jnp.int32),
+        "cache_state": jnp.zeros((n_nodes, n_lines), jnp.int8),
+        "cache_version": jnp.zeros((n_nodes, n_lines), jnp.int32),
+        "mem_version": jnp.zeros((n_lines,), jnp.int32),
+    }
+    if write_back:
+        state["dirty"] = jnp.zeros((n_nodes, n_lines), bool)
+    return state
+
+
+def is_write_back(state) -> bool:
+    """Mode is structural: a state with a ``dirty`` leaf runs write-back."""
+    return "dirty" in state
+
+
+def check_invariants(state) -> None:
+    """Coherence invariants on a materialized state (tests)."""
+    import numpy as np
+    cs = np.asarray(state["cache_state"])
+    cv = np.asarray(state["cache_version"])
+    mv = np.asarray(state["mem_version"])
+    n_m = (cs == co.M).sum(axis=0)
+    assert (n_m <= 1).all(), "two exclusive holders on one line"
+    sh = cs == co.S
+    excl = (cs == co.M).any(axis=0)
+    assert not np.logical_and(sh.any(axis=0), excl).any(), \
+        "shared copy coexists with an exclusive holder"
+    stale = np.logical_and(sh, cv != mv[None, :])
+    assert not stale.any(), "stale shared copy (coherence violation)"
+    # the word must BE the directory: rebuildable from the cache states
+    words = np.asarray(state["words"])
+    expect = np.asarray(co.directory_from_state(state["cache_state"]))
+    assert (words == expect).all(), "latch word diverged from cache states"
+    if "dirty" in state:
+        dirty = np.asarray(state["dirty"])
+        assert not np.logical_and(dirty, cs != co.M).any(), \
+            "dirty copy without the exclusive latch"
+        behind = np.logical_and(cs == co.M, cv < mv[None, :])
+        assert not behind.any(), "exclusive holder older than memory"
+    else:
+        m_stale = np.logical_and(cs == co.M, cv != mv[None, :])
+        assert not m_stale.any(), \
+            "write-through holder diverged from memory"

@@ -8,9 +8,11 @@ The paper's technique as a first-class serving feature (DESIGN.md Sec. 2):
 * replicas CACHE pages they read (shared prefixes / system prompts) and
   keep the shared latch lazily — re-reads are local until a writer
   (decode appending into the page, or eviction) invalidates;
-* the coherence plane is the bulk-synchronous round (core/jax_protocol):
-  reads = FAA+fetch (the combined one-RTT op — kernels/gcl_fetch),
-  appends = CAS exclusive + in-place update + version bump.
+* the coherence plane is the bulk-synchronous round (core/rounds, over
+  the shared core/coherence.py spec): reads = FAA+fetch (the combined
+  one-RTT op — kernels/gcl_fetch) registering the replica's REAL
+  directory lane, appends = S->X upgrade (or fresh CAS) + in-place
+  update + version bump + downgrade back to S.
 
 The pool state is a dict of arrays (shardable over the mesh: pages are
 striped so each device homes P/devices pages).  The replica cache is a
@@ -29,8 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import coherence as co
 from ..core.addressing import GAddr
 from ..kernels.gcl_fetch.ops import fetch as gcl_fetch_op
+from ..kernels.latch_ops.ops import OP_CAS, apply_batch
 from ..kernels.paged_attention.ops import decode_paged
 
 
@@ -46,8 +50,12 @@ class KVPoolConfig:
     dtype: str = "bfloat16"
 
 
+def _pool_dtype(cfg: KVPoolConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
 def make_pool(cfg: KVPoolConfig):
-    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    dt = _pool_dtype(cfg)
     shape = (cfg.n_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
     return {
         "k_pages": jnp.zeros(shape, dt),
@@ -56,18 +64,20 @@ def make_pool(cfg: KVPoolConfig):
         "page_version": jnp.zeros((cfg.n_pages,), jnp.int32),
         "page_fill": jnp.zeros((cfg.n_pages,), jnp.int32), # tokens written
         "alloc_top": jnp.zeros((), jnp.int32),
+        # readers evicted by append PeerWr broadcasts (coherence stat:
+        # the serving analogue of the DES inv_sent counter)
+        "append_evictions": jnp.zeros((), jnp.int32),
     }
 
 
 def make_replica_cache(cfg: KVPoolConfig):
+    dt = _pool_dtype(cfg)            # local copies match the pool dtype
+    shape = (cfg.n_replicas, cfg.cache_slots, cfg.page_size,
+             cfg.n_kv_heads, cfg.head_dim)
     return {
         # local copies of pages + the (page, version) tags
-        "k_local": jnp.zeros((cfg.n_replicas, cfg.cache_slots,
-                              cfg.page_size, cfg.n_kv_heads, cfg.head_dim),
-                             jnp.bfloat16),
-        "v_local": jnp.zeros_like(
-            jnp.zeros((cfg.n_replicas, cfg.cache_slots, cfg.page_size,
-                       cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)),
+        "k_local": jnp.zeros(shape, dt),
+        "v_local": jnp.zeros(shape, dt),
         "tag_page": jnp.full((cfg.n_replicas, cfg.cache_slots), -1,
                              jnp.int32),
         "tag_version": jnp.zeros((cfg.n_replicas, cfg.cache_slots),
@@ -82,25 +92,72 @@ def _slot_of(page, cache_slots):
 
 # ---------------------------------------------------------------- appends
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def append_tokens(pool, pages, offsets, k_new, v_new, *, cfg: KVPoolConfig):
-    """Decode write path: replica holding the tail pages writes one token
-    per sequence.  pages/offsets [B]; k_new/v_new [B, Hkv, hd].
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def append_tokens(pool, replica, pages, offsets, k_new, v_new, *,
+                  cfg: KVPoolConfig, backend: str = "ref"):
+    """Decode write path: the replica owning the tail pages writes one
+    token per sequence.  pages/offsets [B] (page -1 = skip); k_new/v_new
+    [B, Hkv, hd].
 
-    Exclusive access per page via CAS (writer byte = replica 0 stand-in —
-    single-writer-per-sequence is the serving invariant); each append
-    bumps the page version, which IS the invalidation broadcast (readers'
-    version tags mismatch from the next round on — lazy-release upgraded
-    to MSI exactly as the protocol prescribes)."""
-    b = pages.shape[0]
-    kp = pool["k_pages"].at[pages, offsets].set(
+    Exclusive access follows the protocol's write path through the
+    shared spec (core/coherence.py):
+
+    1. S->X UPGRADE — CAS(my reader bit -> my writer field) through the
+       latch kernel: succeeds iff this replica is the sole registered
+       holder (Algorithm 2);
+    2. a failed CAS's returned old word IS the embedded directory: its
+       other reader bits are the PeerWr broadcast targets (counted into
+       ``append_evictions`` — single-writer-per-sequence means the
+       contenders are always readers; a fresh acquire is the same case
+       with no readers to evict);
+    3. after the in-place write + version bump (the version IS the lazy
+       invalidation — evicted readers' tags mismatch on their next
+       read), the writer DOWNGRADES M -> S.  The whole append is one
+       bulk-synchronous step, so the transient M-held word is never
+       externally observable: the boundary writes the POST-downgrade
+       word directly — the writer's sole reader bit, exactly the word
+       the DES `_downgrade` leaves behind."""
+    valid = pages >= 0
+    idx = jnp.maximum(pages, 0)
+    n_pages = cfg.n_pages
+    bit_hi, bit_lo = co.bit_lanes(replica)
+    wf = co.writer_field_hi(replica)
+    words = pool["words"]
+    line = jnp.where(valid, pages, -1).astype(jnp.int32)
+    zeros = jnp.zeros_like(line)
+    cas = jnp.full_like(line, OP_CAS)
+    # 1. upgrade: CAS(my bit -> writer field)
+    words, old_hi, old_lo, ok_up = apply_batch(
+        words, {"line": line, "op": cas,
+                "arg_hi": zeros + wf, "arg_lo": zeros,
+                "cmp_hi": zeros + bit_hi, "cmp_lo": zeros + bit_lo},
+        backend=backend)
+    # 2. PeerWr boundary for failed upgrades: the CAS's returned old
+    # word carries the OTHER readers to evict (the step-3 scatter below
+    # writes the post-eviction, post-downgrade word)
+    forced = jnp.logical_and(valid, ok_up == 0)
+    others_lo = (old_lo & ~bit_lo).astype(jnp.uint32)
+    others_hi = ((old_hi & ~bit_hi) & ((1 << co.WRITER_SHIFT_HI) - 1)) \
+        .astype(jnp.uint32)
+    evicted = jnp.sum(jnp.where(
+        forced,
+        jax.lax.population_count(others_lo).astype(jnp.int32)
+        + jax.lax.population_count(others_hi).astype(jnp.int32), 0))
+    # in-place write + version bump (write-through: pool IS the memory)
+    kp = pool["k_pages"].at[jnp.where(valid, idx, n_pages), offsets].set(
         k_new.astype(pool["k_pages"].dtype), mode="drop")
-    vp = pool["v_pages"].at[pages, offsets].set(
+    vp = pool["v_pages"].at[jnp.where(valid, idx, n_pages), offsets].set(
         v_new.astype(pool["v_pages"].dtype), mode="drop")
-    ver = pool["page_version"].at[pages].add(1, mode="drop")
-    fill = pool["page_fill"].at[pages].max(offsets + 1, mode="drop")
-    return dict(pool, k_pages=kp, v_pages=vp, page_version=ver,
-                page_fill=fill)
+    ver = pool["page_version"].at[jnp.where(valid, idx, n_pages)].add(
+        1, mode="drop")
+    fill = pool["page_fill"].at[jnp.where(valid, idx, n_pages)].max(
+        offsets + 1, mode="drop")
+    # 3. downgrade M -> S: writer keeps a registered coherent copy
+    words = words.at[jnp.where(valid, idx, n_pages)].set(
+        jnp.stack([zeros + bit_hi, zeros + bit_lo], axis=1), mode="drop")
+    return dict(pool, k_pages=kp, v_pages=vp, words=words,
+                page_version=ver, page_fill=fill,
+                append_evictions=pool["append_evictions"] + evicted)
 
 
 # ---------------------------------------------------------------- reads
@@ -125,8 +182,12 @@ def read_through_cache(pool, cache, replica, pages, *, cfg: KVPoolConfig,
     flat_k = pool["k_pages"].reshape(cfg.n_pages, -1)
     flat_v = pool["v_pages"].reshape(cfg.n_pages, -1)
     req_page = jnp.where(miss, pages, -1).astype(jnp.int32)
-    bit_lo = jnp.full_like(req_page, 1 << 1)      # replica bit (demo lane)
-    bit_hi = jnp.zeros_like(req_page)
+    # this replica's OWN directory lanes from the shared spec (pre-spec,
+    # every replica aliased bit 1<<1 and the embedded directory
+    # under-counted readers)
+    rep_hi, rep_lo = co.bit_lanes(replica)
+    bit_lo = jnp.where(miss, rep_lo, 0).astype(jnp.int32)
+    bit_hi = jnp.where(miss, rep_hi, 0).astype(jnp.int32)
     k_fetch, _, _, granted_k, words = gcl_fetch_op(
         flat_k, pool["words"], req_page, bit_hi, bit_lo, backend=backend)
     v_fetch, _, _, _, _ = gcl_fetch_op(
@@ -174,13 +235,21 @@ class SELCCKVPool:
     data/coherence plane is the jitted functions above)."""
 
     def __init__(self, cfg: KVPoolConfig):
+        co.check_node_capacity(cfg.n_replicas)   # replicas = directory lanes
         self.cfg = cfg
         self.pool = make_pool(cfg)
         self.cache = make_replica_cache(cfg)
         self._top = 0
 
     def allocate(self, n: int) -> np.ndarray:
-        pages = np.arange(self._top, self._top + n) % self.cfg.n_pages
+        """Bump-allocate ``n`` pages.  Raises instead of wrapping past
+        ``n_pages`` — the pre-guard modulo silently handed out pages that
+        were still live."""
+        if self._top + n > self.cfg.n_pages:
+            raise ValueError(
+                f"pool exhausted: {n} pages requested, "
+                f"{self.cfg.n_pages - self._top} of {self.cfg.n_pages} free")
+        pages = np.arange(self._top, self._top + n)
         self._top += n
         return pages.astype(np.int32)
 
@@ -193,8 +262,9 @@ class SELCCKVPool:
     def page_of(self, gaddr, n_homes: int = 1) -> int:
         return GAddr(*gaddr).flat(n_homes)
 
-    def append(self, pages, offsets, k_new, v_new):
-        self.pool = append_tokens(self.pool, jnp.asarray(pages),
+    def append(self, pages, offsets, k_new, v_new, replica: int = 0):
+        self.pool = append_tokens(self.pool, jnp.int32(replica),
+                                  jnp.asarray(pages),
                                   jnp.asarray(offsets), k_new, v_new,
                                   cfg=self.cfg)
 

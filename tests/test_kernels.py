@@ -95,6 +95,94 @@ def test_latch_ops_same_line_serialization():
         assert int(np.asarray(new_w)[5, 1]) == 7
 
 
+def _lanes64(value):
+    """64-bit int -> (hi, lo) int32 lanes (two's complement)."""
+    v = value & ((1 << 64) - 1)
+    return (np.int32(np.uint32(v >> 32)), np.int32(np.uint32(v & 0xFFFFFFFF)))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_latch_cas_sees_transient_reader_bits(backend):
+    """An S->X upgrade CAS compares the WHOLE 64-bit word: a transient
+    reader bit (or a writer byte) alongside the upgrader's own bit must
+    fail the swap; the exact expected word must succeed."""
+    from repro.core import coherence as co
+    n = 1024
+    # line 3: node 5's reader bit + a transient bit from node 40 (hi lane)
+    # line 7: writer byte of node 3 + node 5's reader bit
+    w3 = co.pack(None, [5, 40])
+    w7 = co.pack(3, [5])
+    words = np.zeros((n, 2), np.int32)
+    words[3] = _lanes64(w3)
+    words[7] = _lanes64(w7)
+    want = _lanes64(co.pack(5, []))           # node 5's writer field
+    have = _lanes64(co.reader_bit(5))         # what an upgrader expects
+    req = {
+        "line": jnp.asarray([3, 7, 3], jnp.int32),
+        "op": jnp.zeros(3, jnp.int32),        # CAS
+        "arg_hi": jnp.asarray([want[0]] * 3, jnp.int32),
+        "arg_lo": jnp.asarray([want[1]] * 3, jnp.int32),
+        # slots 0/1: expect sole readership -> must fail on both lines;
+        # slot 2: expect the TRUE word (incl. transient bit) -> succeeds
+        "cmp_hi": jnp.asarray([have[0], have[0], _lanes64(w3)[0]],
+                              jnp.int32),
+        "cmp_lo": jnp.asarray([have[1], have[1], _lanes64(w3)[1]],
+                              jnp.int32),
+    }
+    new_w, old_hi, old_lo, ok = apply_batch(jnp.asarray(words), req,
+                                            backend=backend)
+    assert list(np.asarray(ok)) == [0, 0, 1]
+    assert tuple(np.asarray(new_w)[3]) == want   # slot 2 won line 3
+    assert tuple(np.asarray(new_w)[7]) == tuple(words[7])  # untouched
+    # the returned old word IS the directory ride-back
+    assert (old_hi[0], old_lo[0]) == _lanes64(w3)
+    assert (old_hi[1], old_lo[1]) == _lanes64(w7)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("node", [5, 40])     # lo-lane and hi-lane bits
+def test_latch_faa_underflow_on_double_release(backend, node):
+    """A double FAA-release must wrap exactly like the NIC's 64-bit
+    atomic (latchword.faa), including the borrow across the two int32
+    lanes — not saturate or corrupt neighbouring fields."""
+    from repro.core import coherence as co
+    n = 1024
+    bit = co.reader_bit(node)
+    words = np.zeros((n, 2), np.int32)
+    words[2] = _lanes64(bit)                  # one registered reader
+    delta = _lanes64(-bit)                    # release = FAA(-bit)
+    req = {
+        "line": jnp.asarray([2, 2], jnp.int32),
+        "op": jnp.ones(2, jnp.int32),         # FAA
+        "arg_hi": jnp.asarray([delta[0]] * 2, jnp.int32),
+        "arg_lo": jnp.asarray([delta[1]] * 2, jnp.int32),
+        "cmp_hi": jnp.zeros(2, jnp.int32),
+        "cmp_lo": jnp.zeros(2, jnp.int32),
+    }
+    new_w, old_hi, old_lo, ok = apply_batch(jnp.asarray(words), req,
+                                            backend=backend)
+    # first release frees the word; the second underflows 64-bit-wrapped
+    assert (old_hi[0], old_lo[0]) == _lanes64(bit)
+    assert (old_hi[1], old_lo[1]) == _lanes64(0)
+    expect = co.faa(0, -bit)                  # (0 - bit) mod 2**64
+    got = co.from_lanes(int(np.uint32(np.asarray(new_w)[2, 0])),
+                        int(np.uint32(np.asarray(new_w)[2, 1])))
+    assert got == expect, f"{got:#018x} != {expect:#018x}"
+    # the wrapped word is garbage the protocol would misread as holders:
+    # a third FAA(+bit) must restore the free word exactly
+    readd = _lanes64(bit)
+    req2 = {
+        "line": jnp.asarray([2], jnp.int32),
+        "op": jnp.ones(1, jnp.int32),
+        "arg_hi": jnp.asarray([readd[0]], jnp.int32),
+        "arg_lo": jnp.asarray([readd[1]], jnp.int32),
+        "cmp_hi": jnp.zeros(1, jnp.int32),
+        "cmp_lo": jnp.zeros(1, jnp.int32),
+    }
+    new_w2, _, _, _ = apply_batch(new_w, req2, backend=backend)
+    assert tuple(np.asarray(new_w2)[2]) == (0, 0)
+
+
 @pytest.mark.parametrize("pool,elems,r", [(32, 128, 16), (64, 256, 8)])
 def test_gcl_fetch_matches_ref(pool, elems, r):
     rng = np.random.default_rng(2)

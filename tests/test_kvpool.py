@@ -50,6 +50,83 @@ def test_reader_bits_recorded_in_directory():
     assert words[pages[0], 1] != 0, "reader bit must land in the word"
 
 
+def test_each_replica_gets_its_own_directory_lane():
+    # pre-spec every replica aliased bit 1<<1, so the embedded directory
+    # under-counted readers; now lanes come from coherence.bit_lanes
+    from repro.core import coherence as co
+    cfg = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=4, cache_slots=4)
+    pool = SELCCKVPool(cfg)
+    pages = pool.allocate(1)
+    for rep in range(cfg.n_replicas):
+        pool.read(rep, np.array([pages[0]], np.int32))
+    hi, lo = np.asarray(pool.pool["words"])[pages[0]]
+    word = co.from_lanes(int(np.uint32(hi)), int(np.uint32(lo)))
+    assert co.readers_of(word) == [0, 1, 2, 3]
+
+
+def test_append_upgrades_and_evicts_readers():
+    from repro.core import coherence as co
+    cfg = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=4, cache_slots=4)
+    pool = SELCCKVPool(cfg)
+    pages = pool.allocate(1)
+    for rep in (0, 2, 3):
+        pool.read(rep, np.array([pages[0]], np.int32))
+    # replica 0 appends: S->X upgrade fails (readers 2,3 present), the
+    # failed CAS doubles as PeerWr — their bits are evicted; after the
+    # write the writer downgrades back to a sole S registration
+    pool.append(np.array([pages[0]]), np.array([0]),
+                jnp.ones((1, 1, 8)), jnp.ones((1, 1, 8)), replica=0)
+    hi, lo = np.asarray(pool.pool["words"])[pages[0]]
+    word = co.from_lanes(int(np.uint32(hi)), int(np.uint32(lo)))
+    assert co.writer_of(word) is None
+    assert co.readers_of(word) == [0]
+    assert int(pool.pool["append_evictions"]) == 2        # readers 2, 3
+    # sole registered holder now: the next append upgrades IN PLACE
+    pool.append(np.array([pages[0]]), np.array([1]),
+                jnp.ones((1, 1, 8)), jnp.ones((1, 1, 8)), replica=0)
+    assert int(pool.pool["append_evictions"]) == 2        # nobody evicted
+    # evicted readers re-register on their next (miss) read
+    _, _, h2 = pool.read(2, np.array([pages[0]], np.int32))
+    assert not h2[0]
+    hi, lo = np.asarray(pool.pool["words"])[pages[0]]
+    word = co.from_lanes(int(np.uint32(hi)), int(np.uint32(lo)))
+    assert co.readers_of(word) == [0, 2]
+
+
+def test_replica_cache_honours_pool_dtype():
+    from repro.dsm.kvpool import make_replica_cache
+    cfg32 = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                         n_replicas=2, cache_slots=4, dtype="float32")
+    cache = make_replica_cache(cfg32)
+    assert cache["k_local"].dtype == jnp.float32
+    assert cache["v_local"].dtype == jnp.float32
+    cfg16 = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                         n_replicas=2, cache_slots=4)
+    cache = make_replica_cache(cfg16)
+    assert cache["k_local"].dtype == jnp.bfloat16
+
+
+def test_allocate_rejects_exhaustion_instead_of_wrapping():
+    cfg = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=2, cache_slots=4)
+    pool = SELCCKVPool(cfg)
+    first = pool.allocate(6)
+    assert first.tolist() == [0, 1, 2, 3, 4, 5]
+    with np.testing.assert_raises(ValueError):
+        pool.allocate(3)                      # would wrap onto live pages
+    assert pool.allocate(2).tolist() == [6, 7]
+
+
+def test_unencodable_replica_count_rejected():
+    from repro.core import coherence as co
+    cfg = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=co.MAX_NODES + 1, cache_slots=4)
+    with np.testing.assert_raises(ValueError):
+        SELCCKVPool(cfg)
+
+
 def test_paged_attention_over_pool_matches_flat():
     cfg, pool = _pool()
     rng = np.random.default_rng(3)
