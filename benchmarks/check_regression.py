@@ -1,0 +1,127 @@
+"""Perf regression gate: fail CI when a trajectory falls off a cliff.
+
+``python -m benchmarks.check_regression`` compares the freshly emitted
+``BENCH_*.json`` files (cwd, written by ``benchmarks.run --smoke``)
+against the committed seed trajectories in ``benchmarks/seeds/`` and
+exits non-zero when
+
+* the median of any throughput metric (name ending in ``mops``) for a
+  (series, x-agnostic) group regresses more than ``--max-regress``
+  (default 25%) below the seed's median, or
+* the median of any ``*speedup*`` metric drops below ``--min-speedup``
+  (default 1.5x) — the fused-loop-vs-host-loop floor: the fused driver
+  earning less than 1.5x over the per-round host-sync baseline means
+  the zero-sync spin loop has stopped paying for itself.
+
+The speedup checks are within-run ratios and therefore
+machine-independent; the throughput checks compare against seed values
+recorded on whatever machine committed them, so they ALSO gate runner
+speed — if CI runners prove systematically slower than the seed
+machine, re-record the seeds from a CI artifact (or widen
+``BENCH_GATE_MAX_REGRESS``) rather than letting the gate rot as always
+red.  Thresholds: ``BENCH_GATE_MAX_REGRESS`` /
+``BENCH_GATE_MIN_SPEEDUP`` env vars or the CLI flags.  Every seed file
+must have a fresh counterpart — a silently missing benchmark is itself
+a regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import statistics
+import sys
+
+SEED_DIR = os.path.join(os.path.dirname(__file__), "seeds")
+
+
+def _medians(doc: dict) -> dict:
+    """(series, metric) -> median value across the file's rows (all x)."""
+    groups: dict = {}
+    for row in doc["rows"]:
+        groups.setdefault((row["series"], row["metric"]), []) \
+            .append(float(row["value"]))
+    return {k: statistics.median(v) for k, v in groups.items()}
+
+
+def check_file(seed_path: str, fresh_path: str, max_regress: float,
+               min_speedup: float) -> tuple[list, list]:
+    """Returns (report_lines, failure_lines) for one trajectory pair."""
+    with open(seed_path) as f:
+        seed = _medians(json.load(f))
+    with open(fresh_path) as f:
+        fresh = _medians(json.load(f))
+    report, failures = [], []
+    name = os.path.basename(seed_path)
+    for (series, metric), sv in sorted(seed.items()):
+        gated = metric.endswith("mops") or "speedup" in metric
+        if not gated:
+            continue
+        fv = fresh.get((series, metric))
+        if fv is None:
+            failures.append(f"{name} {series}/{metric}: present in seed, "
+                            f"missing from fresh run")
+            continue
+        if metric.endswith("mops"):
+            floor = (1.0 - max_regress) * sv
+            ratio = fv / sv if sv else float("inf")
+            line = (f"{name} {series}/{metric}: seed={sv:.4g} "
+                    f"fresh={fv:.4g} ({ratio:.2f}x of seed, "
+                    f"floor {1 - max_regress:.2f}x)")
+            (report if fv >= floor else failures).append(line)
+        if "speedup" in metric:
+            line = (f"{name} {series}/{metric}: fresh={fv:.2f}x "
+                    f"(floor {min_speedup:.2f}x)")
+            (report if fv >= min_speedup else failures).append(line)
+    return report, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed-dir", default=SEED_DIR)
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument(
+        "--max-regress", type=float,
+        default=float(os.environ.get("BENCH_GATE_MAX_REGRESS", "0.25")),
+        help="max tolerated median-throughput drop vs seed (fraction)")
+    ap.add_argument(
+        "--min-speedup", type=float,
+        default=float(os.environ.get("BENCH_GATE_MIN_SPEEDUP", "1.5")),
+        help="absolute floor for fused/host-loop speedup metrics")
+    args = ap.parse_args(argv)
+
+    seeds = sorted(glob.glob(os.path.join(args.seed_dir, "BENCH_*.json")))
+    if not seeds:
+        print(f"no seed trajectories under {args.seed_dir}",
+              file=sys.stderr)
+        return 2
+    all_failures = []
+    for seed_path in seeds:
+        fresh_path = os.path.join(args.fresh_dir,
+                                  os.path.basename(seed_path))
+        if not os.path.exists(fresh_path):
+            all_failures.append(
+                f"{os.path.basename(seed_path)}: fresh trajectory not "
+                f"emitted (expected at {fresh_path})")
+            continue
+        report, failures = check_file(seed_path, fresh_path,
+                                      args.max_regress, args.min_speedup)
+        for line in report:
+            print(f"  ok   {line}")
+        for line in failures:
+            print(f"  FAIL {line}")
+        all_failures.extend(failures)
+    if all_failures:
+        print(f"\nperf gate FAILED ({len(all_failures)} check(s)):",
+              file=sys.stderr)
+        for line in all_failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"\nperf gate OK ({len(seeds)} trajectories)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,9 +17,10 @@ import time
 
 
 def smoke() -> None:
-    """CI smoke: one small DES micro-run + one small rounds sweep, both
-    persisted as BENCH_*.json for the per-commit perf trajectory."""
-    from . import fig_rounds
+    """CI smoke: one small DES micro-run + the device rounds sweeps
+    (flat + mesh-sharded), all persisted as BENCH_*.json for the
+    per-commit perf trajectory (gated by benchmarks.check_regression)."""
+    from . import fig7_rounds, fig_rounds
     from .common import MicroConfig, emit, run_micro, timer, \
         write_bench_json
 
@@ -41,6 +42,7 @@ def smoke() -> None:
         emit("selcc_smoke", series, 4, "wall_s", t.wall, rows=rows)
     write_bench_json("selcc", rows, meta={"smoke": True})
     fig_rounds.main(smoke=True)              # writes BENCH_rounds.json
+    fig7_rounds.main(smoke=True)      # writes BENCH_rounds_sharded.json
 
 
 def main() -> None:
@@ -50,8 +52,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset emitting BENCH_*.json artifacts")
     ap.add_argument("--only", default="",
-                    help="comma list: fig7,fig8,fig9,fig10,fig11,fig12,"
-                         "rounds,roofline")
+                    help="comma list: fig7,fig7r,fig8,fig9,fig10,fig11,"
+                         "fig12,rounds,roofline")
     args = ap.parse_args()
 
     print("figure,series,x,metric,value")
@@ -61,11 +63,12 @@ def main() -> None:
         print(f"# smoke done in {time.time() - t0:.1f}s", flush=True)
         return
 
-    from . import (fig7_scalability, fig8_locality, fig9_skew,
-                   fig10_ycsb_btree, fig11_tpcc, fig12_2pc, fig_rounds,
-                   roofline_report)
+    from . import (fig7_rounds, fig7_scalability, fig8_locality,
+                   fig9_skew, fig10_ycsb_btree, fig11_tpcc, fig12_2pc,
+                   fig_rounds, roofline_report)
     figures = {
         "fig7": fig7_scalability.main,
+        "fig7r": fig7_rounds.main,
         "fig8": fig8_locality.main,
         "fig9": fig9_skew.main,
         "fig10": fig10_ycsb_btree.main,

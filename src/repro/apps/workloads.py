@@ -35,6 +35,13 @@ class Zipf:
     def sample(self, rng: random.Random) -> int:
         return bisect.bisect_left(self.cdf, rng.random())
 
+    def sample_batch(self, rng, size: int):
+        """Vectorized draw (``rng`` is a ``numpy.random.Generator``) —
+        the device-plane generators sample whole op batches at once."""
+        import numpy as np
+        return np.searchsorted(np.asarray(self.cdf),
+                               rng.random(size)).astype(np.int32)
+
 
 @dataclass
 class MicroConfig:
@@ -90,6 +97,44 @@ def ycsb_worker(tree, cfg: YCSBConfig, node_id: int, thread: int,
             yield from tree.lookup(k)
         else:
             yield from tree.insert(k, (node_id, thread))
+
+
+# ------------------------------------------------- device rounds plane
+
+@dataclass
+class DeviceRoundsConfig:
+    """YCSB-shaped workload for the device-resident rounds plane (flat
+    OR mesh-sharded): each batch is R op slots (node, line, is_write)
+    with Zipf-skewed line choice — the same knobs as :class:`YCSBConfig`
+    (read mix, theta), expressed as arrays instead of DES processes."""
+    n_nodes: int = 4
+    n_lines: int = 1024
+    r_slots: int = 64
+    read_ratio: float = 0.95
+    zipf_theta: float = 0.99
+    iters: int = 16
+
+
+def device_rounds_batches(cfg: DeviceRoundsConfig, seed: int = 0):
+    """Pre-generated list of ``(node, line, is_write)`` int32 batches for
+    ``rounds.run_rounds`` / ``run_rounds_sharded``.  Duplicates are
+    legal (the engine coalesces); contention comes from the Zipf skew
+    exactly as in the YCSB figures."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    zipf = Zipf(cfg.n_lines, cfg.zipf_theta) if cfg.zipf_theta else None
+    out = []
+    for _ in range(cfg.iters):
+        node = rng.integers(0, cfg.n_nodes, cfg.r_slots).astype(np.int32)
+        if zipf is None:
+            line = rng.integers(0, cfg.n_lines,
+                                cfg.r_slots).astype(np.int32)
+        else:
+            line = zipf.sample_batch(rng, cfg.r_slots)
+        is_w = (rng.random(cfg.r_slots) >= cfg.read_ratio) \
+            .astype(np.int32)
+        out.append((node, line, is_w))
+    return out
 
 
 # ------------------------------------------------- cross-backend parity

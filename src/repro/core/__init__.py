@@ -3,7 +3,7 @@
 # baselines and the abstraction-layer API (paper Table 1, v2 surface:
 # typed GAddr, unified data-plane Handle, scope guards, and the pluggable
 # protocol-backend registry).
-from . import coherence, latchword
+from . import coherence
 from .addressing import GAddr, as_gaddr
 from .api import ClusterConfig, SELCCLayer
 from .cache import INVALID, MODIFIED, SHARED, NodeCache
@@ -40,7 +40,10 @@ __all__ = [
 def __getattr__(name):
     # The bulk-synchronous JAX path is part of the same facade but drags
     # in jax; resolve it lazily so pure-DES users stay light.
-    if name in ("jax_protocol", "rounds"):
+    # `latchword` is lazy for a different reason: the shim warns
+    # (DeprecationWarning -> use core/coherence.py) at import, and only
+    # actual users should see that warning.
+    if name in ("jax_protocol", "rounds", "latchword"):
         import importlib
         return importlib.import_module(f".{name}", __name__)
     if name in ("KVPoolConfig", "SELCCKVPool"):

@@ -186,25 +186,41 @@ class SELCCLayer:
         return GAddr.from_flat(line, self.cfg.n_memory)
 
     def as_rounds_state(self, n_lines: int | None = None, *,
-                        write_back: bool = False):
+                        write_back: bool = False, mesh=None,
+                        axis: str = "shards"):
         """Fresh device-plane round state (core/rounds) sized to this
         layer: same node count, lines spanning every allocation under
         the shared ``GAddr.flat`` striping.  ``write_back=True`` builds
         the dirty-bit variant (the DES's write-back data plane, on
-        device); drive it with ``repro.core.rounds.run_rounds``."""
+        device); drive it with ``repro.core.rounds.run_rounds``.
+
+        Passing ``mesh`` builds the MESH-SHARDED plane instead
+        (core/rounds/sharded.py): the same state striped over
+        ``mesh[axis]`` with ``home = line % n_shards`` — the device
+        mirror of this layer's memory-node striping (``GAddr.flat`` /
+        ``home_of``) — driven by ``rounds.run_rounds_sharded`` (or
+        ``run_ops_to_completion(..., mesh=mesh)``).  ``n_lines`` is
+        padded up to a shard multiple."""
         from . import rounds
         if n_lines is None:
             n_lines = max(1, max(self._next_line, default=1)
                           * self.cfg.n_memory)
+        if mesh is not None:
+            return rounds.make_sharded_state(self.cfg.n_compute, n_lines,
+                                             mesh, axis,
+                                             write_back=write_back)
         return rounds.make_state(self.cfg.n_compute, n_lines,
                                  write_back=write_back)
 
     @staticmethod
-    def make_kv_pool(kv_cfg=None):
+    def make_kv_pool(kv_cfg=None, mesh=None, axis: str = "shards"):
         """Open a dsm/kvpool.py serving pool (lazy import: keeps the DES
-        path free of JAX unless the data plane is actually used)."""
+        path free of JAX unless the data plane is actually used).  With
+        ``mesh``, the pool's pages are sharded across it and
+        ``pool.as_rounds_state()`` yields the matching mesh-sharded
+        coherence plane."""
         from ..dsm.kvpool import KVPoolConfig, SELCCKVPool
-        return SELCCKVPool(kv_cfg or KVPoolConfig())
+        return SELCCKVPool(kv_cfg or KVPoolConfig(), mesh=mesh, axis=axis)
 
     # ------------------------------------------------------------- metrics
     def throughput(self) -> float:

@@ -11,7 +11,11 @@ round, with ZERO control logic on the home side.
 
 Shapes are static: each shard presents R request slots per round; buckets
 pad to capacity R (line = -1 marks empty).  Requests that overflow a
-bucket are deferred to the next round by the caller (spin semantics).
+bucket are deferred to the next round by the caller (spin semantics) —
+this module is one round of the LATCH plane only.  The full sharded MSI
+engine (upgrades, write-back, coalescing, in-loop overflow deferral)
+lives in :mod:`repro.core.rounds.sharded`, which reuses :func:`_bucket`
+for its request routing.
 """
 
 from __future__ import annotations
@@ -36,27 +40,39 @@ def make_sharded_words(n_lines: int, mesh, axis: str = "model"):
         words, jax.sharding.NamedSharding(mesh, P(axis, None)))
 
 
-def _bucket(requests, n_shards: int, cap: int):
-    """Sort each shard's local requests into per-home buckets [S, cap]."""
+def _bucket(requests, n_shards: int, cap: int, fields=FIELDS):
+    """Sort each shard's local requests into per-home buckets [S, cap].
+
+    ``fields`` selects which request leaves ride along (the latch plane
+    routes the six kernel fields; the full sharded engine —
+    rounds/sharded.py — routes (node, line, isw)); ``requests["line"]``
+    always drives the ``home = line % n_shards`` placement.  Requests
+    past a bucket's capacity are NOT silently sent: they show up in the
+    returned ``keep`` mask (False in sorted order; ``keep[argsort(
+    order)]`` is the per-original-slot sent mask) and the ``dropped``
+    count, so callers either respin them (sharded engine, in-loop) or
+    surface the count (this module's single-round API)."""
     line = requests["line"]
     home = jnp.where(line >= 0, line % n_shards, n_shards)  # pad bucket
     order = jnp.argsort(home)                                # stable
-    sorted_reqs = {k: requests[k][order] for k in FIELDS}
+    sorted_reqs = {k: requests[k][order] for k in fields}
     home_sorted = home[order]
     # slot within bucket
     onehot = jax.nn.one_hot(home_sorted, n_shards + 1, dtype=jnp.int32)
     slot = jnp.take_along_axis(jnp.cumsum(onehot, 0) - 1,
                                home_sorted[:, None], 1)[:, 0]
     keep = jnp.logical_and(home_sorted < n_shards, slot < cap)
-    b_idx = jnp.where(keep, home_sorted, 0)
-    s_idx = jnp.where(keep, slot, cap - 1)
+    # non-kept slots (pads, overflow) scatter OUT OF BOUNDS and drop —
+    # routing them to a real bucket cell (the pre-fix (0, cap-1)) let a
+    # pad/overflow slot clobber a legitimate request whenever its bucket
+    # was exactly full (scatter order is unspecified)
+    b_idx = jnp.where(keep, home_sorted, n_shards)
+    s_idx = jnp.where(keep, slot, 0)
     out = {}
-    for k in FIELDS:
+    for k in fields:
         init = jnp.full((n_shards, cap), -1 if k == "line" else 0,
                         jnp.int32)
-        val = jnp.where(keep, sorted_reqs[k],
-                        -1 if k == "line" else 0)
-        out[k] = init.at[b_idx, s_idx].set(val, mode="drop")
+        out[k] = init.at[b_idx, s_idx].set(sorted_reqs[k], mode="drop")
     dropped = jnp.sum(jnp.logical_and(home_sorted < n_shards,
                                       ~keep).astype(jnp.int32))
     return out, order, keep, (b_idx, s_idx), dropped
@@ -113,13 +129,14 @@ def distributed_latch_round(words, requests, *, mesh, axis: str = "model",
 
 
 def stripe(words_flat, n_shards: int):
-    """[L,2] line-major -> stripe-major layout (home-contiguous)."""
-    l = words_flat.shape[0]
-    return words_flat.reshape(l // n_shards, n_shards, 2) \
-        .transpose(1, 0, 2).reshape(l, 2)
+    """[L,2] line-major -> stripe-major layout (home-contiguous).
+    Thin alias of ``rounds.state.stripe_lines`` so the latch plane and
+    the full sharded engine share ONE permutation (lazy import: this
+    module is imported by rounds/sharded.py)."""
+    from .rounds.state import stripe_lines
+    return stripe_lines(words_flat, n_shards, 0)
 
 
 def unstripe(words_striped, n_shards: int):
-    l = words_striped.shape[0]
-    return words_striped.reshape(n_shards, l // n_shards, 2) \
-        .transpose(1, 0, 2).reshape(l, 2)
+    from .rounds.state import unstripe_lines
+    return unstripe_lines(words_striped, n_shards, 0)

@@ -16,10 +16,17 @@ here under the names the DES plane has always imported.
 
 from __future__ import annotations
 
+import warnings
+
 from .coherence import (FREE, MAX_NODES, READER_MASK, WORD_MASK,
                         WRITER_SHIFT, _check_node, faa, from_lanes,
                         has_readers, holders_of, is_free, pack, reader_bit,
                         readers_of, to_lanes, writer_field, writer_of)
+
+warnings.warn(
+    "repro.core.latchword is a compatibility shim; the word encoding "
+    "lives in repro.core.coherence — import from there instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "FREE", "MAX_NODES", "READER_MASK", "WORD_MASK", "WRITER_SHIFT",

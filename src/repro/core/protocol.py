@@ -28,7 +28,7 @@ import random
 from dataclasses import dataclass
 
 from . import coherence as co
-from . import latchword as lw
+from . import coherence as lw   # host-form word helpers
 from .cache import CacheEntry, NodeCache, INVALID, MODIFIED, SHARED
 from .handles import Handle, NodeAPIMixin
 from .registry import register_protocol

@@ -57,15 +57,36 @@ def run_rounds(state, node_id, line, is_write, *, n_nodes: int,
 
 
 def run_ops_to_completion(state, node_id, line, is_write, *, n_nodes,
-                          max_rounds: int = 64, backend: str = "ref"):
+                          max_rounds: int = 64, backend: str = "ref",
+                          mesh=None, axis: str = "shards",
+                          bucket_cap: int | None = None):
     """Compatibility wrapper over :func:`run_rounds` (the pre-refactor
     host-loop API): returns ``(state, versions, rounds)`` as host values
     and raises if the round bound was hit — ONE sync at the end, none
-    inside the loop."""
+    inside the loop.
+
+    Passing ``mesh`` routes through the mesh-sharded engine
+    (:mod:`repro.core.rounds.sharded`) instead: the state must be a
+    sharded (stripe-layout) state, op slots are padded to the shard
+    count automatically, and ``bucket_cap`` bounds the per-(source,
+    home) routing buckets (overflow defers and respins in-loop) — same
+    signature, same return contract, so differential tests replay one
+    trace through both planes verbatim."""
     import numpy as np
-    state, versions, rounds, done = run_rounds(
-        state, node_id, line, is_write, n_nodes=n_nodes,
-        max_rounds=max_rounds, backend=backend)
+    if mesh is not None:
+        from .sharded import pad_ops, run_rounds_sharded
+        r = np.asarray(line).shape[0]
+        node_id, line, is_write = pad_ops(node_id, line, is_write,
+                                          mesh.shape[axis])
+        state, versions, rounds, done = run_rounds_sharded(
+            state, node_id, line, is_write, mesh=mesh, axis=axis,
+            n_nodes=n_nodes, max_rounds=max_rounds,
+            bucket_cap=bucket_cap, backend=backend)
+        versions = versions[:r]
+    else:
+        state, versions, rounds, done = run_rounds(
+            state, node_id, line, is_write, n_nodes=n_nodes,
+            max_rounds=max_rounds, backend=backend)
     if not bool(done):
         raise RuntimeError(f"ops not served after {max_rounds} rounds")
     return state, np.asarray(versions), int(rounds)

@@ -66,15 +66,12 @@ def _note_trace(key) -> None:
     TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
 
 
-@functools.partial(jax.jit, static_argnames=("n_nodes", "backend"))
-def coherence_round(state, node_id, line, is_write, *, n_nodes: int,
-                    backend: str = "ref"):
-    """One round of R op slots (node_id, line, is_write) int32 [R];
-    line = -1 marks an empty slot.  Returns (state', served[R], version[R]).
-
-    Duplicate (node, line) slots are legal and coalesce (see module
-    docstring); duplicate LINES across nodes contend through the latch
-    kernel exactly like concurrent RDMA atomics."""
+def _round_impl(state, node_id, line, is_write, *, n_nodes: int,
+                backend: str = "ref"):
+    """Unjitted round body — :func:`coherence_round` is its jitted public
+    face; the sharded plane (rounds/sharded.py) inlines it per home shard
+    inside its own fused loop, where the state leaves are each shard's
+    LOCAL slab and ``line`` carries local (striped) indices."""
     co.check_node_capacity(n_nodes)
     write_back = "dirty" in state
     words = state["words"]
@@ -204,12 +201,21 @@ def coherence_round(state, node_id, line, is_write, *, n_nodes: int,
     return new_state, served, version
 
 
-@jax.jit
-def evict_lines(state, node_id, line):
-    """Evict (node, line) slots: release the holder's latch and, in
-    write-back mode, flush a dirty exclusive copy to memory first (the
-    DES `_maybe_evict` -> `_release_global_any` path).  line = -1 skips
-    a slot.  Returns the new state."""
+@functools.partial(jax.jit, static_argnames=("n_nodes", "backend"))
+def coherence_round(state, node_id, line, is_write, *, n_nodes: int,
+                    backend: str = "ref"):
+    """One round of R op slots (node_id, line, is_write) int32 [R];
+    line = -1 marks an empty slot.  Returns (state', served[R], version[R]).
+
+    Duplicate (node, line) slots are legal and coalesce (see module
+    docstring); duplicate LINES across nodes contend through the latch
+    kernel exactly like concurrent RDMA atomics."""
+    return _round_impl(state, node_id, line, is_write, n_nodes=n_nodes,
+                       backend=backend)
+
+
+def _evict_impl(state, node_id, line):
+    """Unjitted eviction body (shared with the sharded plane)."""
     write_back = "dirty" in state
     cstate = state["cache_state"]
     cver = state["cache_version"]
@@ -233,3 +239,12 @@ def evict_lines(state, node_id, line):
     new_state["cache_state"] = cstate
     new_state["words"] = co.directory_from_state(cstate)
     return new_state
+
+
+@jax.jit
+def evict_lines(state, node_id, line):
+    """Evict (node, line) slots: release the holder's latch and, in
+    write-back mode, flush a dirty exclusive copy to memory first (the
+    DES `_maybe_evict` -> `_release_global_any` path).  line = -1 skips
+    a slot.  Returns the new state."""
+    return _evict_impl(state, node_id, line)

@@ -1,0 +1,315 @@
+"""Mesh-sharded device rounds: the FULL MSI engine, striped across shards.
+
+`core/distributed_rounds.py` shards only the bare latch plane — one
+latch-kernel application per round, overflow deferral punted to the
+caller.  This module scales the complete PR-2 rounds engine — S->X
+upgrade via CAS, structural write-back with dirty-bit flush,
+per-(node, line) coalescing, eviction — across a ``shard_map`` mesh:
+
+* every line-indexed leaf of the round state lives in STRIPE layout
+  (global line ``l`` homes on shard ``l % n_shards`` — exactly
+  ``dsm/address.home_of`` — at local index ``l // n_shards``), sharded
+  over the line axis so each shard owns one contiguous slab;
+* each round, every shard buckets its pending op slots by home and the
+  buckets cross the mesh in ONE ``all_to_all``; the home shard runs the
+  complete round body (`engine._round_impl`) against its local slab —
+  all requests for a line meet at its home, so coalescing and latch
+  contention are exact — and the (served, version) replies return by a
+  second ``all_to_all``: the paper's one-sided verbs as two collectives
+  per round, zero control logic anywhere else;
+* the whole spin lives in ONE jitted ``lax.while_loop``: the carry
+  (sharded state, pending lines, versions, a psum'd done flag) never
+  leaves the devices — zero host<->device syncs per round, and
+  ``engine.TRACE_COUNTS`` proves one trace per shape;
+* at every round boundary each home rebuilds its latch-word slab from
+  its local MSI states (``coherence.directory_from_state`` inside
+  ``_round_impl``), so the PR-2 word<->directory invariant holds PER
+  SHARD by construction;
+* a request that overflows its (source, home) bucket — ``bucket_cap``
+  models the NIC queue depth; the default ``cap = r`` can never
+  overflow — is NOT dropped and NOT punted to the caller: it stays
+  pending in the loop carry and re-presents next round, exactly like a
+  latch-contention miss (defer-and-respin inside the fused loop).
+
+Memory-side compute stays ZERO (the paper's scalability argument,
+Sec. 4 / Fig. 7): a home shard only applies one-sided latch atomics and
+slab scatters; there is no per-home message handler, queue, or thread.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ...compat import shard_map
+from .. import coherence as co
+from ..distributed_rounds import _bucket
+from . import state as st
+from .engine import _evict_impl, _note_trace, _round_impl
+
+OP_FIELDS = ("node", "line", "isw")
+
+
+# --------------------------------------------------------------- state I/O
+
+def _line_spec(name: str, ndim: int, axis: str) -> P:
+    la = st.LINE_AXIS[name]
+    return P(*[axis if d == la else None for d in range(ndim)])
+
+
+def _state_specs(state, axis: str):
+    return {k: _line_spec(k, v.ndim, axis) for k, v in state.items()}
+
+
+def shard_state(state, mesh, axis: str = "shards"):
+    """Flat (line-major) round state -> stripe layout, device_put across
+    ``mesh[axis]``.  n_lines must divide evenly by the shard count."""
+    n_shards = mesh.shape[axis]
+    n_lines = state["words"].shape[0]
+    if n_lines % n_shards:
+        raise ValueError(
+            f"n_lines={n_lines} not divisible by n_shards={n_shards}")
+    striped = st.stripe_state(state, n_shards)
+    return {k: jax.device_put(
+        v, NamedSharding(mesh, _line_spec(k, v.ndim, axis)))
+        for k, v in striped.items()}
+
+
+def unshard_state(state, mesh=None, axis: str = "shards", *,
+                  n_shards: int | None = None):
+    """Sharded stripe-layout state -> flat line-major state (host-side:
+    gathers).  Accepts either the mesh or an explicit shard count."""
+    if n_shards is None:
+        n_shards = mesh.shape[axis]
+    return st.unstripe_state({k: jnp.asarray(v) for k, v in state.items()},
+                             n_shards)
+
+
+def make_sharded_state(n_nodes: int, n_lines: int, mesh,
+                       axis: str = "shards", *, write_back: bool = False):
+    """Fresh sharded round state: ``make_state`` striped over the mesh.
+    ``n_lines`` is rounded UP to a multiple of the shard count (the
+    extra lines are ordinary cold lines no op needs to touch)."""
+    n_shards = mesh.shape[axis]
+    n_lines = ((n_lines + n_shards - 1) // n_shards) * n_shards
+    return shard_state(st.make_state(n_nodes, n_lines,
+                                     write_back=write_back), mesh, axis)
+
+
+def pad_ops(node_id, line, is_write, n_shards: int):
+    """Pad op slots with empty (line = -1) entries so the slot count
+    divides evenly across shards (each shard presents R/S slots)."""
+    node_id = np.asarray(node_id, np.int32)
+    line = np.asarray(line, np.int32)
+    is_write = np.asarray(is_write, np.int32)
+    pad = (-line.shape[0]) % n_shards
+    if pad:
+        node_id = np.concatenate([node_id, np.zeros(pad, np.int32)])
+        line = np.concatenate([line, np.full(pad, -1, np.int32)])
+        is_write = np.concatenate([is_write, np.zeros(pad, np.int32)])
+    return node_id, line, is_write
+
+
+# ------------------------------------------------------------ one round
+
+def _route_round(state_l, node_l, pending_l, isw_l, *, n_shards: int,
+                 axis: str, n_nodes: int, cap: int, backend: str):
+    """One sharded round, executing INSIDE shard_map on each shard's
+    local slab: bucket pending slots by home, all_to_all the buckets,
+    run the full round body at the homes, all_to_all the replies back.
+    Returns (state_l', served[r] bool, version[r]) in local slot order;
+    a slot that overflowed its bucket simply comes back unserved."""
+    reqs = {"node": node_l, "line": pending_l, "isw": isw_l}
+    buckets, order, keep, (b_idx, s_idx), _ = _bucket(
+        reqs, n_shards, cap, fields=OP_FIELDS)
+    recv = {k: jax.lax.all_to_all(buckets[k], axis, 0, 0, tiled=False)
+            for k in OP_FIELDS}
+    flat = {k: v.reshape(-1) for k, v in recv.items()}          # [S*cap]
+    # global line -> local slab index (stripe layout: local = line // S)
+    loc = jnp.where(flat["line"] >= 0, flat["line"] // n_shards,
+                    -1).astype(jnp.int32)
+    state_l, served_h, ver_h = _round_impl(
+        state_l, flat["node"], loc, flat["isw"], n_nodes=n_nodes,
+        backend=backend)
+
+    def back(x):
+        return jax.lax.all_to_all(x.reshape(n_shards, cap), axis, 0, 0,
+                                  tiled=False)
+    r_served = back(served_h.astype(jnp.int32))
+    r_ver = back(ver_h)
+    inv = jnp.argsort(order)
+
+    def unbucket(bucketed):
+        gathered = bucketed[b_idx, s_idx]
+        gathered = jnp.where(keep, gathered, 0)
+        return gathered[inv]
+    return state_l, unbucket(r_served).astype(bool), unbucket(r_ver)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "axis", "n_nodes", "bucket_cap",
+                              "backend"))
+def coherence_round_sharded(state, node_id, line, is_write, *, mesh,
+                            axis: str = "shards", n_nodes: int,
+                            bucket_cap: int | None = None,
+                            backend: str = "ref"):
+    """One sharded round over GLOBAL op slots [R] (R divisible by the
+    shard count; line = -1 empty).  Returns (state', served[R],
+    version[R]) — the sharded mirror of :func:`engine.coherence_round`,
+    and the building block of the host-synced baseline loop that
+    `benchmarks/fig7_rounds.py` measures the fused driver against.
+    Overflowed slots return unserved (the caller respins them)."""
+    co.check_node_capacity(n_nodes)
+    n_shards = mesh.shape[axis]
+    node_id = jnp.asarray(node_id, jnp.int32)
+    line = jnp.asarray(line, jnp.int32)
+    is_write = jnp.asarray(is_write, jnp.int32)
+    r_total = line.shape[0]
+    if r_total % n_shards:
+        raise ValueError(f"R={r_total} not divisible by "
+                         f"n_shards={n_shards} (use pad_ops)")
+    r = r_total // n_shards
+    cap = bucket_cap if bucket_cap is not None else r
+    write_back = "dirty" in state
+    _note_trace(("sharded_round", n_shards, n_nodes,
+                 state["words"].shape[0], r_total, cap, backend,
+                 write_back))
+    specs = _state_specs(state, axis)
+
+    def spmd(state_l, node_l, line_l, isw_l):
+        return _route_round(state_l, node_l, line_l, isw_l,
+                            n_shards=n_shards, axis=axis, n_nodes=n_nodes,
+                            cap=cap, backend=backend)
+
+    return shard_map(
+        spmd, mesh=mesh,
+        in_specs=(specs, P(axis), P(axis), P(axis)),
+        out_specs=(specs, P(axis), P(axis)),
+        check_vma=False,
+    )(state, node_id, line, is_write)
+
+
+# ------------------------------------------------------- the fused driver
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "axis", "n_nodes", "max_rounds",
+                              "bucket_cap", "backend"))
+def run_rounds_sharded(state, node_id, line, is_write, *, mesh,
+                       axis: str = "shards", n_nodes: int,
+                       max_rounds: int = 64,
+                       bucket_cap: int | None = None,
+                       backend: str = "ref"):
+    """Drive GLOBAL op slots [R] to completion across the mesh in ONE
+    jit call — the sharded mirror of :func:`driver.run_rounds`.
+
+    Returns ``(state', versions[R], rounds_used, all_served)``, all
+    device values.  Unserved slots (latch contention OR bucket overflow)
+    re-present themselves round after round inside the fused
+    ``lax.while_loop``; the done flag is a psum across shards, so the
+    loop runs lockstep until every shard's slots are served or
+    ``max_rounds`` is hit."""
+    co.check_node_capacity(n_nodes)
+    n_shards = mesh.shape[axis]
+    node_id = jnp.asarray(node_id, jnp.int32)
+    line = jnp.asarray(line, jnp.int32)
+    is_write = jnp.asarray(is_write, jnp.int32)
+    r_total = line.shape[0]
+    if r_total % n_shards:
+        raise ValueError(f"R={r_total} not divisible by "
+                         f"n_shards={n_shards} (use pad_ops)")
+    r = r_total // n_shards
+    cap = bucket_cap if bucket_cap is not None else r
+    write_back = "dirty" in state
+    _note_trace(("sharded", n_shards, n_nodes, state["words"].shape[0],
+                 r_total, cap, max_rounds, backend, write_back))
+    specs = _state_specs(state, axis)
+
+    def spmd(state_l, node_l, line_l, isw_l):
+        def n_pending(pending):
+            return jax.lax.psum(
+                jnp.sum((pending >= 0).astype(jnp.int32)), axis)
+
+        def cond(carry):
+            _, pending, _, rounds, done = carry
+            return jnp.logical_and(~done, rounds < max_rounds)
+
+        def body(carry):
+            stt, pending, versions, rounds, _ = carry
+            stt, served, ver = _route_round(
+                stt, node_l, pending, isw_l, n_shards=n_shards,
+                axis=axis, n_nodes=n_nodes, cap=cap, backend=backend)
+            versions = jnp.where(served, ver, versions)
+            pending = jnp.where(served, jnp.int32(-1), pending)
+            return (stt, pending, versions, rounds + 1,
+                    n_pending(pending) == 0)
+
+        init = (state_l, line_l, jnp.zeros_like(line_l), jnp.int32(0),
+                n_pending(line_l) == 0)
+        state_l, pending, versions, rounds, done = jax.lax.while_loop(
+            cond, body, init)
+        return state_l, versions, rounds, done
+
+    return shard_map(
+        spmd, mesh=mesh,
+        in_specs=(specs, P(axis), P(axis), P(axis)),
+        out_specs=(specs, P(axis), P(), P()),
+        check_vma=False,
+    )(state, node_id, line, is_write)
+
+
+# --------------------------------------------------------------- eviction
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "axis", "bucket_cap"))
+def evict_lines_sharded(state, node_id, line, *, mesh,
+                        axis: str = "shards",
+                        bucket_cap: int | None = None):
+    """Sharded :func:`engine.evict_lines`: eviction slots [R] are routed
+    to their home shards (same bucket + all_to_all machinery, overflow
+    defers and respins) and applied to the local slabs — releasing the
+    holder's latch and flushing dirty exclusive copies first in
+    write-back states.  Returns the new sharded state."""
+    n_shards = mesh.shape[axis]
+    node_id = jnp.asarray(node_id, jnp.int32)
+    line = jnp.asarray(line, jnp.int32)
+    r_total = line.shape[0]
+    if r_total % n_shards:
+        raise ValueError(f"R={r_total} not divisible by "
+                         f"n_shards={n_shards} (use pad_ops)")
+    r = r_total // n_shards
+    cap = bucket_cap if bucket_cap is not None else r
+    # evictions always land once routed: ceil(r / cap) rounds suffice
+    max_iters = (r + cap - 1) // cap
+    specs = _state_specs(state, axis)
+
+    def spmd(state_l, node_l, line_l):
+        def body(i, carry):
+            stt, pending = carry
+            reqs = {"node": node_l, "line": pending}
+            buckets, order, keep, _, _ = _bucket(
+                reqs, n_shards, cap, fields=("node", "line"))
+            recv = {k: jax.lax.all_to_all(buckets[k], axis, 0, 0,
+                                          tiled=False)
+                    for k in ("node", "line")}
+            flat = {k: v.reshape(-1) for k, v in recv.items()}
+            loc = jnp.where(flat["line"] >= 0,
+                            flat["line"] // n_shards, -1) \
+                .astype(jnp.int32)
+            stt = _evict_impl(stt, flat["node"], loc)
+            sent = keep[jnp.argsort(order)]        # per-original slot
+            pending = jnp.where(sent, jnp.int32(-1), pending)
+            return stt, pending
+        state_l, _ = jax.lax.fori_loop(0, max_iters, body,
+                                       (state_l, line_l))
+        return state_l
+
+    return shard_map(
+        spmd, mesh=mesh,
+        in_specs=(specs, P(axis), P(axis)),
+        out_specs=specs,
+        check_vma=False,
+    )(state, node_id, line)

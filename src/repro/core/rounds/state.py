@@ -42,6 +42,49 @@ def is_write_back(state) -> bool:
     return "dirty" in state
 
 
+# ------------------------------------------------------------ stripe layout
+# The sharded plane (rounds/sharded.py) keeps every line-indexed leaf in
+# STRIPE layout: global line l lives on shard l % S (dsm/address.home_of)
+# at local index l // S, so each shard owns one contiguous slab.  Which
+# axis of a leaf indexes lines is a property of the STATE layout, so the
+# table and the permutation helpers live here.
+
+LINE_AXIS = {"words": 0, "cache_state": 1, "cache_version": 1,
+             "mem_version": 0, "dirty": 1}
+
+
+def stripe_lines(x, n_shards: int, axis: int = 0):
+    """Permute the line axis from line-major to shard-major (stripe)
+    order: row ``l`` moves to ``(l % n_shards) * (L // n_shards) + l //
+    n_shards``.  Inverse of :func:`unstripe_lines`."""
+    x = jnp.moveaxis(x, axis, 0)
+    l, rest = x.shape[0], x.shape[1:]
+    x = x.reshape((l // n_shards, n_shards) + rest) \
+        .swapaxes(0, 1).reshape((l,) + rest)
+    return jnp.moveaxis(x, 0, axis)
+
+
+def unstripe_lines(x, n_shards: int, axis: int = 0):
+    x = jnp.moveaxis(x, axis, 0)
+    l, rest = x.shape[0], x.shape[1:]
+    x = x.reshape((n_shards, l // n_shards) + rest) \
+        .swapaxes(0, 1).reshape((l,) + rest)
+    return jnp.moveaxis(x, 0, axis)
+
+
+def stripe_state(state, n_shards: int):
+    """Flat (line-major) round state -> stripe-layout state.  All leaves
+    permute consistently, so :func:`check_invariants` (which is per-line
+    and permutation-invariant) works on either layout."""
+    return {k: stripe_lines(v, n_shards, LINE_AXIS[k])
+            for k, v in state.items()}
+
+
+def unstripe_state(state, n_shards: int):
+    return {k: unstripe_lines(v, n_shards, LINE_AXIS[k])
+            for k, v in state.items()}
+
+
 def check_invariants(state) -> None:
     """Coherence invariants on a materialized state (tests)."""
     import numpy as np

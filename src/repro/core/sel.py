@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import random
 
-from . import latchword as lw
+from . import coherence as lw   # host-form word helpers
 from .handles import Handle, NodeAPIMixin
 from .protocol import NodeStats, SELCCConfig
 from .registry import register_protocol

@@ -54,10 +54,10 @@ def _pool_dtype(cfg: KVPoolConfig):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
 
-def make_pool(cfg: KVPoolConfig):
+def make_pool(cfg: KVPoolConfig, mesh=None, axis: str = "shards"):
     dt = _pool_dtype(cfg)
     shape = (cfg.n_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
-    return {
+    pool = {
         "k_pages": jnp.zeros(shape, dt),
         "v_pages": jnp.zeros(shape, dt),
         "words": jnp.zeros((cfg.n_pages, 2), jnp.int32),   # latch+directory
@@ -68,6 +68,31 @@ def make_pool(cfg: KVPoolConfig):
         # the serving analogue of the DES inv_sent counter)
         "append_evictions": jnp.zeros((), jnp.int32),
     }
+    if mesh is None:
+        return pool
+    # mesh-backed pool: every page-indexed leaf is sharded over the page
+    # axis (each device homes n_pages / n_shards pages); the jitted
+    # append/read paths stay unchanged — XLA partitions the scatters and
+    # gathers, the GSPMD analogue of the rounds plane's explicit
+    # all_to_all routing.  NamedSharding places pages in contiguous
+    # BLOCKS (device d holds pages [d*P/S, (d+1)*P/S)), whereas the
+    # rounds plane stripes by page % S — logical page indices are
+    # identical on both planes, physical placement is not (GSPMD cannot
+    # express mod placement without permuting the logical order the
+    # page tables index by)
+    n_shards = mesh.shape[axis]
+    if cfg.n_pages % n_shards:
+        raise ValueError(f"n_pages={cfg.n_pages} not divisible by the "
+                         f"mesh's {n_shards} shards")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def put(name, arr):
+        if arr.ndim == 0:                       # counters: replicated
+            spec = P()
+        else:                                   # page axis is dim 0
+            spec = P(*((axis,) + (None,) * (arr.ndim - 1)))
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+    return {k: put(k, v) for k, v in pool.items()}
 
 
 def make_replica_cache(cfg: KVPoolConfig):
@@ -234,12 +259,35 @@ class SELCCKVPool:
     examples and tests (allocation is host-side bump allocation; the
     data/coherence plane is the jitted functions above)."""
 
-    def __init__(self, cfg: KVPoolConfig):
+    def __init__(self, cfg: KVPoolConfig, mesh=None, axis: str = "shards"):
         co.check_node_capacity(cfg.n_replicas)   # replicas = directory lanes
         self.cfg = cfg
-        self.pool = make_pool(cfg)
+        self.mesh = mesh
+        self.axis = axis
+        self.pool = make_pool(cfg, mesh=mesh, axis=axis)
         self.cache = make_replica_cache(cfg)
         self._top = 0
+
+    def as_rounds_state(self, *, write_back: bool = False, mesh=None,
+                        axis: str | None = None):
+        """A rounds-plane coherence state for THIS pool's pages: pages
+        are the lines, replicas are the nodes.  With a mesh (the pool's
+        own by default) the state is the mesh-sharded plane
+        (``home = page % n_shards`` — ``dsm.address.home_of``), driven
+        by ``rounds.run_rounds_sharded`` / ``run_ops_to_completion(...,
+        mesh=...)`` with the SAME logical page indices the pool's data
+        plane uses.  Note the two planes agree on indices, not physical
+        placement: the data arrays are GSPMD block-sharded (see
+        :func:`make_pool`) while the coherence plane stripes by
+        ``page % n_shards``."""
+        from ..core import rounds
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh is not None:
+            return rounds.make_sharded_state(
+                self.cfg.n_replicas, self.cfg.n_pages, mesh,
+                axis or self.axis, write_back=write_back)
+        return rounds.make_state(self.cfg.n_replicas, self.cfg.n_pages,
+                                 write_back=write_back)
 
     def allocate(self, n: int) -> np.ndarray:
         """Bump-allocate ``n`` pages.  Raises instead of wrapping past

@@ -44,6 +44,36 @@ def test_single_shard_matches_apply_batch():
     assert int(got[4]) == 0
 
 
+def test_bucket_overflow_keeps_capacity_requests_intact():
+    """A FULL bucket plus overflow/pad slots: the first `cap` requests
+    must survive bucketing untouched and the overflow must be counted.
+    Pre-fix, non-kept slots were scattered INTO cell (0, cap-1) and
+    could clobber a legitimate request whenever its bucket was exactly
+    full (the overflow case the caller-side deferral contract relies
+    on, previously untested)."""
+    from repro.core.distributed_rounds import _bucket
+    cap, n_shards = 2, 2
+    req = {
+        "line": jnp.asarray([0, 2, 4, 1, -1], jnp.int32),  # 3x home0 + pad
+        "op": jnp.asarray([1, 1, 1, 1, 0], jnp.int32),
+        "arg_hi": jnp.asarray([11, 22, 33, 44, 0], jnp.int32),
+        "arg_lo": jnp.zeros(5, jnp.int32),
+        "cmp_hi": jnp.zeros(5, jnp.int32),
+        "cmp_lo": jnp.zeros(5, jnp.int32),
+    }
+    buckets, order, keep, _, dropped = _bucket(req, n_shards, cap)
+    assert int(dropped) == 1                  # line 4 overflowed home 0
+    # home 0's bucket holds exactly the first two home-0 requests
+    np.testing.assert_array_equal(np.asarray(buckets["line"][0]), [0, 2])
+    np.testing.assert_array_equal(np.asarray(buckets["arg_hi"][0]),
+                                  [11, 22])
+    np.testing.assert_array_equal(np.asarray(buckets["line"][1]),
+                                  [1, -1])    # home 1: one request + pad
+    # per-original-slot sent mask: line 4 and the pad were NOT sent
+    sent = np.asarray(keep)[np.argsort(np.asarray(order))]
+    np.testing.assert_array_equal(sent, [True, True, False, True, False])
+
+
 def test_multi_shard_subprocess():
     code = textwrap.dedent("""
         import os

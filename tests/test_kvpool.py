@@ -149,3 +149,49 @@ def test_paged_attention_over_pool_matches_flat():
     # pool stores bf16 pages; the flat oracle is fp32 — bf16 tolerance
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref)[:, 0], rtol=2e-2, atol=2e-2)
+
+
+def test_mesh_backed_pool_matches_unsharded():
+    """A pool built over a mesh (pages sharded across devices) runs the
+    same jitted append/read paths and produces bit-identical results;
+    its as_rounds_state() opens the matching sharded coherence plane."""
+    import jax
+
+    from repro.core import rounds as rp
+    mesh = jax.make_mesh((1,), ("shards",))
+    cfg = KVPoolConfig(n_pages=16, page_size=4, n_kv_heads=2, head_dim=8,
+                       n_replicas=2, cache_slots=8)
+    plain, sharded = SELCCKVPool(cfg), SELCCKVPool(cfg, mesh=mesh)
+    k = jnp.ones((2, 2, 8), jnp.float32)
+    for pool in (plain, sharded):
+        pages = pool.allocate(2)
+        pool.append(pages, np.array([0, 0]), k, k)
+        pool.read(1, np.asarray(pages, np.int32))
+    for key in plain.pool:
+        np.testing.assert_array_equal(np.asarray(plain.pool[key]),
+                                      np.asarray(sharded.pool[key]),
+                                      err_msg=key)
+    # the pool's coherence plane: pages are lines, replicas are nodes
+    state = sharded.as_rounds_state(write_back=True)
+    assert state["words"].shape[0] == cfg.n_pages
+    assert state["cache_state"].shape == (cfg.n_replicas, cfg.n_pages)
+    state, vers, _ = rp.run_ops_to_completion(
+        state, np.asarray([0], np.int32), np.asarray([3], np.int32),
+        np.asarray([1], np.int32), n_nodes=cfg.n_replicas, mesh=mesh)
+    assert vers.tolist() == [1]
+    rp.check_invariants(state)
+
+
+def test_mesh_backed_pool_rejects_indivisible_pages():
+    import jax
+    mesh = jax.make_mesh((1,), ("shards",))
+    del mesh  # 1 divides everything; the guard needs n_shards > 1,
+    # which needs multiple devices — covered structurally here:
+    from repro.dsm.kvpool import make_pool
+
+    class FakeMesh:
+        shape = {"shards": 3}
+    cfg = KVPoolConfig(n_pages=16, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=2, cache_slots=8)
+    with np.testing.assert_raises(ValueError):
+        make_pool(cfg, mesh=FakeMesh())

@@ -50,3 +50,20 @@ def test_writer_release_by_subtract():
 def test_holders_of():
     w = lw.pack(9, [1, 40, 55])
     assert set(lw.holders_of(w)) == {9, 1, 40, 55}
+
+
+def test_shim_import_warns_and_matches_coherence():
+    """The latchword module is a one-release shim: importing it warns
+    (pointing at core/coherence.py) and every re-export is the SAME
+    object as the coherence original."""
+    import importlib
+    import warnings
+
+    from repro.core import coherence as co
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim = importlib.reload(lw)
+    assert any(issubclass(w.category, DeprecationWarning)
+               and "coherence" in str(w.message) for w in caught)
+    for name in shim.__all__:
+        assert getattr(shim, name) is getattr(co, name), name
