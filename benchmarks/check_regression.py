@@ -7,7 +7,8 @@ exits non-zero when
 
 * the median of any throughput metric (name ending in ``mops``) for a
   (series, x-agnostic) group regresses more than ``--max-regress``
-  (default 25%) below the seed's median, or
+  (default 35%; 50% for payload-carrying trajectories) below the
+  seed's median, or
 * the median of any ``*speedup*`` metric drops below ``--min-speedup``
   (default 1.5x) — the fused-loop-vs-host-loop floor: the fused driver
   earning less than 1.5x over the per-round host-sync baseline means
@@ -19,10 +20,24 @@ recorded on whatever machine committed them, so they ALSO gate runner
 speed — if CI runners prove systematically slower than the seed
 machine, re-record the seeds from a CI artifact (or widen
 ``BENCH_GATE_MAX_REGRESS``) rather than letting the gate rot as always
-red.  Thresholds: ``BENCH_GATE_MAX_REGRESS`` /
-``BENCH_GATE_MIN_SPEEDUP`` env vars or the CLI flags.  Every seed file
-must have a fresh counterpart — a silently missing benchmark is itself
-a regression.
+red.
+
+Calibration knobs (all env-overridable, CLI flags win):
+
+* ``BENCH_SEED_DIR`` — per-runner seed families: point the gate at a
+  directory of seeds recorded ON that runner class (e.g.
+  ``benchmarks/seeds-ci-large/``) instead of the default
+  ``benchmarks/seeds/``;
+* ``BENCH_GATE_MAX_REGRESS`` / ``BENCH_GATE_MIN_SPEEDUP`` — the global
+  thresholds;
+* ``BENCH_GATE_MAX_REGRESS_DATA`` — a WIDER regression budget for
+  payload-carrying trajectories (seed ``meta.payload`` true, or a
+  ``*_data`` bench name): their medians move with memory bandwidth and
+  payload-width sweeps, which jitter more across runners than the
+  latch-only configs.
+
+Every seed file must have a fresh counterpart — a silently missing
+benchmark is itself a regression.
 """
 
 from __future__ import annotations
@@ -37,6 +52,14 @@ import sys
 SEED_DIR = os.path.join(os.path.dirname(__file__), "seeds")
 
 
+def _is_payload_bench(seed_path: str, doc: dict) -> bool:
+    """Payload-carrying trajectories get the wider regression budget."""
+    if doc.get("meta", {}).get("payload"):
+        return True
+    name = os.path.basename(seed_path)
+    return name.endswith("_data.json") or "_data_" in name
+
+
 def _medians(doc: dict) -> dict:
     """(series, metric) -> median value across the file's rows (all x)."""
     groups: dict = {}
@@ -47,10 +70,17 @@ def _medians(doc: dict) -> dict:
 
 
 def check_file(seed_path: str, fresh_path: str, max_regress: float,
-               min_speedup: float) -> tuple[list, list]:
-    """Returns (report_lines, failure_lines) for one trajectory pair."""
+               min_speedup: float,
+               max_regress_data: float | None = None) -> tuple[list, list]:
+    """Returns (report_lines, failure_lines) for one trajectory pair.
+    ``max_regress_data`` (when given) replaces ``max_regress`` for
+    payload-carrying trajectories (see :func:`_is_payload_bench`)."""
     with open(seed_path) as f:
-        seed = _medians(json.load(f))
+        seed_doc = json.load(f)
+    seed = _medians(seed_doc)
+    if max_regress_data is not None and _is_payload_bench(seed_path,
+                                                          seed_doc):
+        max_regress = max(max_regress, max_regress_data)
     with open(fresh_path) as f:
         fresh = _medians(json.load(f))
     report, failures = [], []
@@ -80,12 +110,26 @@ def check_file(seed_path: str, fresh_path: str, max_regress: float,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--seed-dir", default=SEED_DIR)
+    ap.add_argument(
+        "--seed-dir",
+        default=os.environ.get("BENCH_SEED_DIR", SEED_DIR),
+        help="seed-trajectory directory (BENCH_SEED_DIR env): point CI "
+             "runner classes at their own recorded seed family")
     ap.add_argument("--fresh-dir", default=".")
     ap.add_argument(
         "--max-regress", type=float,
-        default=float(os.environ.get("BENCH_GATE_MAX_REGRESS", "0.25")),
-        help="max tolerated median-throughput drop vs seed (fraction)")
+        default=float(os.environ.get("BENCH_GATE_MAX_REGRESS", "0.35")),
+        help="max tolerated median-throughput drop vs seed (fraction); "
+             "default calibrated to observed CPU-container run-to-run "
+             "drift (ROADMAP: widened from the original 0.25)")
+    ap.add_argument(
+        "--max-regress-data", type=float,
+        default=float(os.environ.get("BENCH_GATE_MAX_REGRESS_DATA",
+                                     "0.50")),
+        help="wider drop budget for payload-carrying trajectories "
+             "(meta.payload / *_data benches): payload sweeps move "
+             "with memory bandwidth and jitter more than latch-only "
+             "configs")
     ap.add_argument(
         "--min-speedup", type=float,
         default=float(os.environ.get("BENCH_GATE_MIN_SPEEDUP", "1.5")),
@@ -107,7 +151,8 @@ def main(argv=None) -> int:
                 f"emitted (expected at {fresh_path})")
             continue
         report, failures = check_file(seed_path, fresh_path,
-                                      args.max_regress, args.min_speedup)
+                                      args.max_regress, args.min_speedup,
+                                      args.max_regress_data)
         for line in report:
             print(f"  ok   {line}")
         for line in failures:

@@ -69,7 +69,7 @@ def _child(shards: int, write_back: bool, iters: int) -> dict:
     rounds_used = []
 
     def fused_step(states, node, line, isw):
-        states[0], vers, rounds, ok = rp.run_rounds_sharded(
+        states[0], vers, _, rounds, ok = rp.run_rounds_sharded(
             states[0], node, line, isw, mesh=mesh, n_nodes=N_NODES,
             max_rounds=MAX_ROUNDS)
         jax.block_until_ready(vers)
@@ -80,7 +80,7 @@ def _child(shards: int, write_back: bool, iters: int) -> dict:
         pending = line.copy()
         rounds = 0
         while (pending >= 0).any() and rounds < MAX_ROUNDS:
-            states[0], served, _ = rp.coherence_round_sharded(
+            states[0], served, _, _ = rp.coherence_round_sharded(
                 states[0], node, pending, isw, mesh=mesh,
                 n_nodes=N_NODES)
             pending = np.where(np.asarray(served), -1, pending)  # SYNC
@@ -88,7 +88,7 @@ def _child(shards: int, write_back: bool, iters: int) -> dict:
         assert (pending < 0).all(), "host loop left ops unserved"
 
     def single_step(states, node, line, isw):
-        states[0], vers, _, ok = rp.run_rounds(
+        states[0], vers, _, _, ok = rp.run_rounds(
             states[0], node, line, isw, n_nodes=N_NODES,
             max_rounds=MAX_ROUNDS)
         jax.block_until_ready(vers)

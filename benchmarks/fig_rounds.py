@@ -50,7 +50,7 @@ def _host_loop(state, node, line, is_w, *, n_nodes: int):
     pending = line.copy()
     rounds = 0
     while (pending >= 0).any() and rounds < MAX_ROUNDS:
-        state, served, _ = coherence_round(
+        state, served, _, _ = coherence_round(
             state, jnp.asarray(node), jnp.asarray(pending),
             jnp.asarray(is_w), n_nodes=n_nodes)
         pending = np.where(np.asarray(served), -1, pending)   # HOST SYNC
@@ -61,56 +61,63 @@ def _host_loop(state, node, line, is_w, *, n_nodes: int):
 
 def _bench_case(n_nodes: int, write_pct: int, write_back: bool,
                 iters: int, seed: int = 7):
+    """Timing methodology (same as fig7_rounds): the fused driver and
+    the host-loop baseline run INTERLEAVED, batch by batch, each step
+    synced, and each is summarized by its MEDIAN per-batch time —
+    back-to-back block timing of ms-scale work on a shared CPU measures
+    scheduler/frequency drift between the blocks, which is exactly what
+    the regression gate must not gate on."""
     import jax
 
     from repro.core.rounds import make_state, run_rounds
     rng = np.random.default_rng(seed)
     batches = _op_batches(rng, n_nodes, write_pct, iters + 1)
-    state = make_state(n_nodes, N_LINES, write_back=write_back)
-    # warmup = compile (fused loop compiles ONCE for all rounds)
-    n0, l0, w0 = batches[0]
-    state, vers, rounds, okall = run_rounds(
-        state, n0, l0, w0, n_nodes=n_nodes, max_rounds=MAX_ROUNDS)
-    jax.block_until_ready(vers)
-    served_flags = [okall]
-    t0 = time.time()
+    state = [make_state(n_nodes, N_LINES, write_back=write_back)]
+    state_h = [make_state(n_nodes, N_LINES, write_back=write_back)]
     rounds_used = []
-    for node, line, is_w in batches[1:]:
-        state, vers, rounds, okall = run_rounds(
-            state, node, line, is_w, n_nodes=n_nodes,
+
+    def fused_step(node, line, is_w):
+        state[0], vers, _, rounds, ok = run_rounds(
+            state[0], node, line, is_w, n_nodes=n_nodes,
             max_rounds=MAX_ROUNDS)
-        rounds_used.append(rounds)           # device values: no sync here
-        served_flags.append(okall)
-    jax.block_until_ready(vers)
-    fused_s = time.time() - t0
-    total_rounds = sum(int(r) for r in rounds_used)
-    # EVERY batch must have fully served, or the mops rates would count
-    # ops that were silently dropped at the round bound
-    assert all(bool(f) for f in served_flags), \
-        "ops unserved within the round bound"
+        jax.block_until_ready(vers)
+        rounds_used.append(int(rounds))
+        # every batch must fully serve, or the mops rates would count
+        # ops that were silently dropped at the round bound
+        assert bool(ok), "ops unserved within the round bound"
 
-    # host-loop baseline over the same batches
-    state_h = make_state(n_nodes, N_LINES, write_back=write_back)
-    _host_loop(state_h, *batches[0], n_nodes=n_nodes)       # warmup
-    t0 = time.time()
+    def host_step(node, line, is_w):
+        state_h[0], _ = _host_loop(state_h[0], node, line, is_w,
+                                   n_nodes=n_nodes)
+
+    steps = {"fused": fused_step, "host": host_step}
+    times: dict = {name: [] for name in steps}
+    for name, step in steps.items():         # warmup = compile
+        step(*batches[0])
+    rounds_used.clear()
     for node, line, is_w in batches[1:]:
-        state_h, _ = _host_loop(state_h, node, line, is_w,
-                                n_nodes=n_nodes)
-    host_s = time.time() - t0
+        for name, step in steps.items():
+            t0 = time.perf_counter()
+            step(node, line, is_w)
+            times[name].append(time.perf_counter() - t0)
 
-    ops = iters * R_SLOTS
+    def med(name):
+        ts = sorted(times[name])
+        return ts[len(ts) // 2]
+
+    fused_s, host_s = med("fused"), med("host")
     return {
-        "fused_mops": ops / fused_s / 1e6,
-        "host_mops": ops / host_s / 1e6,
+        "fused_mops": R_SLOTS / fused_s / 1e6,
+        "host_mops": R_SLOTS / host_s / 1e6,
         "fused_speedup": host_s / fused_s if fused_s > 0 else 0.0,
-        "rounds_per_batch": total_rounds / iters,
+        "rounds_per_batch": sum(rounds_used) / iters,
     }
 
 
 def main(quick: bool = False, smoke: bool = False) -> list:
     rows: list = []
     if smoke:
-        nodes_list, write_pcts, iters = [4], [50], 4
+        nodes_list, write_pcts, iters = [4], [50], 8
     elif quick:
         nodes_list, write_pcts, iters = [2, 8], [0, 100], 8
     else:

@@ -1,0 +1,129 @@
+"""fig_rounds_data — the GCL payload plane under the fused rounds engine.
+
+Sweeps the payload width (0 = the bare latch/version plane, then 64 and
+512 int32 lanes — 256 B and 2 KiB GCLs) over the SAME Zipf op stream,
+for the flat fused driver (``rounds.run_rounds``) and the mesh-sharded
+fused driver (``rounds.run_rounds_sharded``; payload lanes ride the two
+per-round all_to_alls with the latch requests).  The interesting ratio
+is data_mops(0) / data_mops(W): what carrying real bytes costs on top
+of pure coherence traffic.
+
+Timing methodology (same as fig7_rounds): all width cells of a plane
+run INTERLEAVED, batch by batch, each step synced, and each cell is
+summarized by its MEDIAN per-batch time — back-to-back block timing of
+ms-scale work on a shared CPU is dominated by scheduler/frequency drift
+between the blocks, which is exactly what a regression gate must not
+measure.
+
+Runs in-process (the sharded cells use a 1-shard mesh on CPU CI; the
+multi-device scaling story is fig7_rounds' job).  Emits CSV rows plus
+``BENCH_rounds_data.json`` (``meta.payload`` = true, so
+benchmarks/check_regression.py applies the wider
+``BENCH_GATE_MAX_REGRESS_DATA`` budget).
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, write_bench_json
+
+N_NODES = 4
+N_LINES = 256
+R_SLOTS = 64
+MAX_ROUNDS = 128
+READ_RATIO = 0.5
+ZIPF_THETA = 0.9
+WIDTHS = (0, 64, 512)
+
+
+def _steps_flat(width: int):
+    from repro.core.rounds import make_state, run_rounds
+    state = [make_state(N_NODES, N_LINES, payload_width=width)]
+
+    def step(node, line, isw, wd):
+        state[0], vers, data, _, ok = run_rounds(
+            state[0], node, line, isw, wd[:, :width], n_nodes=N_NODES,
+            max_rounds=MAX_ROUNDS)
+        return vers, ok
+    return step
+
+
+def _steps_sharded(width: int, mesh):
+    from repro.core.rounds import make_sharded_state, run_rounds_sharded
+    state = [make_sharded_state(N_NODES, N_LINES, mesh,
+                                payload_width=width)]
+
+    def step(node, line, isw, wd):
+        state[0], vers, data, _, ok = run_rounds_sharded(
+            state[0], node, line, isw, wd[:, :width], mesh=mesh,
+            n_nodes=N_NODES, max_rounds=MAX_ROUNDS)
+        return vers, ok
+    return step
+
+
+def main(quick: bool = False, smoke: bool = False) -> list:
+    import jax
+
+    from repro.apps.workloads import (DeviceRoundsConfig,
+                                      device_rounds_batches)
+    iters = 8 if (smoke or quick) else 24
+    cfg = DeviceRoundsConfig(n_nodes=N_NODES, n_lines=N_LINES,
+                             r_slots=R_SLOTS, read_ratio=READ_RATIO,
+                             zipf_theta=ZIPF_THETA, iters=iters + 1,
+                             payload_width=max(WIDTHS))
+    batches = device_rounds_batches(cfg, seed=13)   # widest; slice per W
+    # largest shard count the static slot count divides by — a 6-device
+    # host runs 4 shards instead of crashing on R_SLOTS % 6
+    n_shards = max(d for d in range(1, jax.device_count() + 1)
+                   if R_SLOTS % d == 0)
+    mesh = jax.make_mesh((n_shards,), ("shards",))
+    cells = {}
+    for width in WIDTHS:
+        cells[("flat", width)] = _steps_flat(width)
+        cells[("sharded", width)] = _steps_sharded(width, mesh)
+
+    times: dict = {key: [] for key in cells}
+    for key, step in cells.items():                  # warmup = compile
+        vers, ok = step(*batches[0])
+        jax.block_until_ready(vers)
+        assert bool(ok), f"{key}: warmup ops unserved within bound"
+    for batch in batches[1:]:
+        for key, step in cells.items():
+            t0 = time.perf_counter()
+            vers, ok = step(*batch)
+            jax.block_until_ready(vers)
+            times[key].append(time.perf_counter() - t0)
+            assert bool(ok), f"{key}: ops unserved within bound"
+
+    def med(key):
+        ts = sorted(times[key])
+        return ts[len(ts) // 2]
+
+    rows: list = []
+    for plane in ("flat", "sharded"):
+        base = med((plane, 0))
+        for width in WIDTHS:
+            series = f"{plane}_w{width}"
+            cell_s = med((plane, width))
+            emit("fig_rounds_data", series, width, "data_mops",
+                 R_SLOTS / cell_s / 1e6, rows=rows)
+            if width:
+                # NOT gated (no "mops"/"speedup" in the name): a
+                # trajectory diagnostic for what the bytes cost
+                emit("fig_rounds_data", series, width, "payload_cost",
+                     cell_s / base, rows=rows)
+            emit("fig_rounds_data", series, width, "wall_s",
+                 sum(times[(plane, width)]), rows=rows)
+    write_bench_json("rounds_data", rows,
+                     meta={"payload": True, "n_nodes": N_NODES,
+                           "n_lines": N_LINES, "r_slots": R_SLOTS,
+                           "n_shards": n_shards, "widths": list(WIDTHS),
+                           "read_ratio": READ_RATIO,
+                           "zipf_theta": ZIPF_THETA, "smoke": smoke,
+                           "quick": quick})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -18,9 +18,10 @@ import time
 
 def smoke() -> None:
     """CI smoke: one small DES micro-run + the device rounds sweeps
-    (flat + mesh-sharded), all persisted as BENCH_*.json for the
-    per-commit perf trajectory (gated by benchmarks.check_regression)."""
-    from . import fig7_rounds, fig_rounds
+    (flat + mesh-sharded + the payload data plane), all persisted as
+    BENCH_*.json for the per-commit perf trajectory (gated by
+    benchmarks.check_regression)."""
+    from . import fig7_rounds, fig_rounds, fig_rounds_data
     from .common import MicroConfig, emit, run_micro, timer, \
         write_bench_json
 
@@ -43,6 +44,7 @@ def smoke() -> None:
     write_bench_json("selcc", rows, meta={"smoke": True})
     fig_rounds.main(smoke=True)              # writes BENCH_rounds.json
     fig7_rounds.main(smoke=True)      # writes BENCH_rounds_sharded.json
+    fig_rounds_data.main(smoke=True)     # writes BENCH_rounds_data.json
 
 
 def main() -> None:
@@ -53,7 +55,7 @@ def main() -> None:
                     help="fast CI subset emitting BENCH_*.json artifacts")
     ap.add_argument("--only", default="",
                     help="comma list: fig7,fig7r,fig8,fig9,fig10,fig11,"
-                         "fig12,rounds,roofline")
+                         "fig12,rounds,rounds_data,roofline")
     args = ap.parse_args()
 
     print("figure,series,x,metric,value")
@@ -65,7 +67,7 @@ def main() -> None:
 
     from . import (fig7_rounds, fig7_scalability, fig8_locality,
                    fig9_skew, fig10_ycsb_btree, fig11_tpcc, fig12_2pc,
-                   fig_rounds, roofline_report)
+                   fig_rounds, fig_rounds_data, roofline_report)
     figures = {
         "fig7": fig7_scalability.main,
         "fig7r": fig7_rounds.main,
@@ -75,6 +77,7 @@ def main() -> None:
         "fig11": fig11_tpcc.main,
         "fig12": fig12_2pc.main,
         "rounds": fig_rounds.main,
+        "rounds_data": fig_rounds_data.main,
         "roofline": roofline_report.main,
     }
     only = [x for x in args.only.split(",") if x]

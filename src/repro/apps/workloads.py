@@ -113,13 +113,17 @@ class DeviceRoundsConfig:
     read_ratio: float = 0.95
     zipf_theta: float = 0.99
     iters: int = 16
+    payload_width: int = 0          # > 0: batches carry [R, W] write bytes
 
 
 def device_rounds_batches(cfg: DeviceRoundsConfig, seed: int = 0):
     """Pre-generated list of ``(node, line, is_write)`` int32 batches for
     ``rounds.run_rounds`` / ``run_rounds_sharded``.  Duplicates are
     legal (the engine coalesces); contention comes from the Zipf skew
-    exactly as in the YCSB figures."""
+    exactly as in the YCSB figures.  With ``cfg.payload_width=W`` each
+    batch widens to ``(node, line, is_write, wdata[R, W])`` — random
+    nonzero bytes on write slots, zeros on reads — for driving a
+    payload-plane state."""
     import numpy as np
     rng = np.random.default_rng(seed)
     zipf = Zipf(cfg.n_lines, cfg.zipf_theta) if cfg.zipf_theta else None
@@ -133,7 +137,14 @@ def device_rounds_batches(cfg: DeviceRoundsConfig, seed: int = 0):
             line = zipf.sample_batch(rng, cfg.r_slots)
         is_w = (rng.random(cfg.r_slots) >= cfg.read_ratio) \
             .astype(np.int32)
-        out.append((node, line, is_w))
+        if cfg.payload_width:
+            wdata = rng.integers(
+                1, 1 << 20,
+                (cfg.r_slots, cfg.payload_width)).astype(np.int32)
+            wdata *= is_w[:, None]
+            out.append((node, line, is_w, wdata))
+        else:
+            out.append((node, line, is_w))
     return out
 
 

@@ -186,13 +186,16 @@ class SELCCLayer:
         return GAddr.from_flat(line, self.cfg.n_memory)
 
     def as_rounds_state(self, n_lines: int | None = None, *,
-                        write_back: bool = False, mesh=None,
-                        axis: str = "shards"):
+                        write_back: bool = False, payload_width: int = 0,
+                        mesh=None, axis: str = "shards"):
         """Fresh device-plane round state (core/rounds) sized to this
         layer: same node count, lines spanning every allocation under
         the shared ``GAddr.flat`` striping.  ``write_back=True`` builds
         the dirty-bit variant (the DES's write-back data plane, on
-        device); drive it with ``repro.core.rounds.run_rounds``.
+        device); ``payload_width=W`` attaches the GCL data plane
+        (reads return W int32 payload lanes, the device mirror of this
+        layer's ``GclHeap`` objects); drive it with
+        ``repro.core.rounds.run_rounds``.
 
         Passing ``mesh`` builds the MESH-SHARDED plane instead
         (core/rounds/sharded.py): the same state striped over
@@ -208,9 +211,11 @@ class SELCCLayer:
         if mesh is not None:
             return rounds.make_sharded_state(self.cfg.n_compute, n_lines,
                                              mesh, axis,
-                                             write_back=write_back)
+                                             write_back=write_back,
+                                             payload_width=payload_width)
         return rounds.make_state(self.cfg.n_compute, n_lines,
-                                 write_back=write_back)
+                                 write_back=write_back,
+                                 payload_width=payload_width)
 
     @staticmethod
     def make_kv_pool(kv_cfg=None, mesh=None, axis: str = "shards"):

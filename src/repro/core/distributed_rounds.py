@@ -45,7 +45,9 @@ def _bucket(requests, n_shards: int, cap: int, fields=FIELDS):
 
     ``fields`` selects which request leaves ride along (the latch plane
     routes the six kernel fields; the full sharded engine —
-    rounds/sharded.py — routes (node, line, isw)); ``requests["line"]``
+    rounds/sharded.py — routes (node, line, isw) plus, on payload-plane
+    states, a [R, W] ``wdata`` lane — any field may carry trailing
+    dimensions and buckets to [S, cap, \\*rest]); ``requests["line"]``
     always drives the ``home = line % n_shards`` placement.  Requests
     past a bucket's capacity are NOT silently sent: they show up in the
     returned ``keep`` mask (False in sorted order; ``keep[argsort(
@@ -70,9 +72,10 @@ def _bucket(requests, n_shards: int, cap: int, fields=FIELDS):
     s_idx = jnp.where(keep, slot, 0)
     out = {}
     for k in fields:
-        init = jnp.full((n_shards, cap), -1 if k == "line" else 0,
-                        jnp.int32)
-        out[k] = init.at[b_idx, s_idx].set(sorted_reqs[k], mode="drop")
+        v = sorted_reqs[k]
+        init = jnp.full((n_shards, cap) + v.shape[1:],
+                        -1 if k == "line" else 0, jnp.int32)
+        out[k] = init.at[b_idx, s_idx].set(v, mode="drop")
     dropped = jnp.sum(jnp.logical_and(home_sorted < n_shards,
                                       ~keep).astype(jnp.int32))
     return out, order, keep, (b_idx, s_idx), dropped

@@ -6,17 +6,24 @@ deterministic rounds on device — S->X upgrades, write-back with dirty
 bits and eviction write-back, multi-op coalescing, and a fully-jitted
 spin loop (:func:`run_rounds`) with zero host syncs per round.
 
-    state  = make_state(n_nodes, n_lines[, write_back=True])
-    state, versions, rounds, ok = run_rounds(state, nodes, lines, is_wr,
-                                             n_nodes=n_nodes)
+    state  = make_state(n_nodes, n_lines[, write_back=True]
+                        [, payload_width=W])
+    state, versions, data, rounds, ok = run_rounds(
+        state, nodes, lines, is_wr[, wdata], n_nodes=n_nodes)
+
+``payload_width=W`` attaches the GCL data plane: ops carry [R, W] write
+payloads and every served slot's read payload comes back in ``data`` —
+reads return bytes, not just versions.
 
 Mesh scale-out (rounds/sharded.py): the SAME engine striped across a
 shard_map mesh (home = line % n_shards), requests routed home and
-replies routed back by two all_to_alls per round, still one fused loop:
+replies routed back by two all_to_alls per round (payload lanes ride
+the same collectives), still one fused loop:
 
-    state  = make_sharded_state(n_nodes, n_lines, mesh[, write_back=..])
-    state, versions, rounds, ok = run_rounds_sharded(
-        state, nodes, lines, is_wr, mesh=mesh, n_nodes=n_nodes)
+    state  = make_sharded_state(n_nodes, n_lines, mesh[, write_back=..]
+                                [, payload_width=W])
+    state, versions, data, rounds, ok = run_rounds_sharded(
+        state, nodes, lines, is_wr[, wdata], mesh=mesh, n_nodes=n_nodes)
 """
 
 from ..coherence import I, M, S
@@ -26,12 +33,13 @@ from .sharded import (coherence_round_sharded, evict_lines_sharded,
                       make_sharded_state, pad_ops, run_rounds_sharded,
                       shard_state, unshard_state)
 from .state import (check_invariants, is_write_back, make_state,
-                    stripe_state, unstripe_state)
+                    payload_width, stripe_state, unstripe_state)
 
 __all__ = [
     "I", "S", "M", "TRACE_COUNTS", "check_invariants", "coherence_round",
     "coherence_round_sharded", "evict_lines", "evict_lines_sharded",
     "is_write_back", "make_sharded_state", "make_state", "pad_ops",
-    "run_ops_to_completion", "run_rounds", "run_rounds_sharded",
-    "shard_state", "stripe_state", "unshard_state", "unstripe_state",
+    "payload_width", "run_ops_to_completion", "run_rounds",
+    "run_rounds_sharded", "shard_state", "stripe_state", "unshard_state",
+    "unstripe_state",
 ]

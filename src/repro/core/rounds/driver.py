@@ -19,74 +19,101 @@ import jax
 import jax.numpy as jnp
 
 from .engine import _note_trace, coherence_round
+from .state import payload_width
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_nodes", "max_rounds", "backend"))
-def run_rounds(state, node_id, line, is_write, *, n_nodes: int,
-               max_rounds: int = 64, backend: str = "ref"):
+def run_rounds(state, node_id, line, is_write, wdata=None, *,
+               n_nodes: int, max_rounds: int = 64, backend: str = "ref"):
     """Drive op slots (node_id, line, is_write) int32 [R] to completion.
 
-    Returns ``(state', versions[R], rounds_used, all_served)`` — all
-    device values; the only sync is whatever the CALLER materializes.
+    ``wdata`` [R, W] carries per-op write payloads on a payload-plane
+    state (``None`` = zeros; ignored on version-only states).
+
+    Returns ``(state', versions[R], data[R, W], rounds_used,
+    all_served)`` — all device values; the only sync is whatever the
+    CALLER materializes.  ``data`` holds each op's read payload (its
+    group's final bytes; W = 0 on version-only states), produced INSIDE
+    the fused loop — no extra host round trip buys the bytes.
     ``max_rounds`` bounds the loop (static); ``all_served`` is False if
     the bound was hit with ops still pending."""
     node_id = jnp.asarray(node_id, jnp.int32)
     line = jnp.asarray(line, jnp.int32)
     is_write = jnp.asarray(is_write, jnp.int32)
+    width = payload_width(state)
+    if wdata is None:
+        wdata = jnp.zeros((line.shape[0], width), jnp.int32)
+    else:
+        wdata = jnp.asarray(wdata, jnp.int32)
     write_back = "dirty" in state
     _note_trace(("driver", n_nodes, line.shape[0], max_rounds, backend,
-                 write_back))
+                 write_back, width))
 
     def cond(carry):
-        _, pending, _, rounds = carry
+        _, pending, _, _, rounds = carry
         return jnp.logical_and(jnp.any(pending >= 0), rounds < max_rounds)
 
     def body(carry):
-        st, pending, versions, rounds = carry
-        st, served, ver = coherence_round(
-            st, node_id, pending, is_write, n_nodes=n_nodes,
+        st, pending, versions, data, rounds = carry
+        st, served, ver, rdata = coherence_round(
+            st, node_id, pending, is_write, wdata, n_nodes=n_nodes,
             backend=backend)
         versions = jnp.where(served, ver, versions)
+        data = jnp.where(served[:, None], rdata, data)
         pending = jnp.where(served, jnp.int32(-1), pending)
-        return st, pending, versions, rounds + 1
+        return st, pending, versions, data, rounds + 1
 
-    init = (state, line, jnp.zeros_like(line), jnp.int32(0))
-    state, pending, versions, rounds = jax.lax.while_loop(cond, body, init)
-    return state, versions, rounds, jnp.all(pending < 0)
+    init = (state, line, jnp.zeros_like(line),
+            jnp.zeros((line.shape[0], width), jnp.int32), jnp.int32(0))
+    state, pending, versions, data, rounds = jax.lax.while_loop(
+        cond, body, init)
+    return state, versions, data, rounds, jnp.all(pending < 0)
 
 
-def run_ops_to_completion(state, node_id, line, is_write, *, n_nodes,
-                          max_rounds: int = 64, backend: str = "ref",
-                          mesh=None, axis: str = "shards",
+def run_ops_to_completion(state, node_id, line, is_write, wdata=None, *,
+                          n_nodes, max_rounds: int = 64,
+                          backend: str = "ref", mesh=None,
+                          axis: str = "shards",
                           bucket_cap: int | None = None):
     """Compatibility wrapper over :func:`run_rounds` (the pre-refactor
     host-loop API): returns ``(state, versions, rounds)`` as host values
     and raises if the round bound was hit — ONE sync at the end, none
-    inside the loop.
+    inside the loop.  Passing ``wdata`` [R, W] opts into the payload
+    plane: the return widens to ``(state, versions, rounds, data)``
+    with each op's read payload as a host array (pass zeros to read
+    bytes without writing any).
 
     Passing ``mesh`` routes through the mesh-sharded engine
     (:mod:`repro.core.rounds.sharded`) instead: the state must be a
     sharded (stripe-layout) state, op slots are padded to the shard
     count automatically, and ``bucket_cap`` bounds the per-(source,
-    home) routing buckets (overflow defers and respins in-loop) — same
-    signature, same return contract, so differential tests replay one
-    trace through both planes verbatim."""
+    home) routing buckets (overflow defers and respins in-loop,
+    payload lanes included) — same signature, same return contract, so
+    differential tests replay one trace through both planes verbatim."""
     import numpy as np
     if mesh is not None:
         from .sharded import pad_ops, run_rounds_sharded
         r = np.asarray(line).shape[0]
-        node_id, line, is_write = pad_ops(node_id, line, is_write,
-                                          mesh.shape[axis])
-        state, versions, rounds, done = run_rounds_sharded(
-            state, node_id, line, is_write, mesh=mesh, axis=axis,
+        if wdata is None:
+            node_id, line, is_write = pad_ops(node_id, line, is_write,
+                                              mesh.shape[axis])
+        else:
+            node_id, line, is_write, wdata = pad_ops(
+                node_id, line, is_write, mesh.shape[axis], wdata)
+        state, versions, data, rounds, done = run_rounds_sharded(
+            state, node_id, line, is_write, wdata, mesh=mesh, axis=axis,
             n_nodes=n_nodes, max_rounds=max_rounds,
             bucket_cap=bucket_cap, backend=backend)
         versions = versions[:r]
+        data = data[:r]
     else:
-        state, versions, rounds, done = run_rounds(
-            state, node_id, line, is_write, n_nodes=n_nodes,
+        state, versions, data, rounds, done = run_rounds(
+            state, node_id, line, is_write, wdata, n_nodes=n_nodes,
             max_rounds=max_rounds, backend=backend)
     if not bool(done):
         raise RuntimeError(f"ops not served after {max_rounds} rounds")
+    if wdata is not None:
+        return (state, np.asarray(versions), int(rounds),
+                np.asarray(data))
     return state, np.asarray(versions), int(rounds)

@@ -36,6 +36,23 @@ memory catches up when the holder downgrades, is invalidated, or is
 evicted (:func:`evict_lines`) — the DES's write-back semantics, on
 device.
 
+Payload plane: a state built with ``make_state(..., payload_width=W)``
+carries REAL GCL bytes (``mem_data`` [L, W] int32 + per-node
+``cache_data`` copies).  Ops then take a ``wdata`` [R, W] operand:
+
+* fetch-on-grant — an S/X grant copies ``mem_data[line]`` into the
+  acquiring node's ``cache_data`` (the paper's combined latch+read
+  round trip; on the pallas backend the gather reuses the ``gcl_fetch``
+  kernel);
+* write-apply — a granted write lands its group's final ``wdata`` in
+  ``cache_data`` and, in write-through, ``mem_data``;
+* dirty-flush-with-bytes — when a dirty M holder downgrades, is
+  invalidated, or is evicted, its ``cache_data`` bytes flush to
+  ``mem_data`` alongside the version;
+* every served slot's reply carries the group's final payload bytes —
+  reads return BYTES whose freshness the protocol guarantees, not just
+  versions.
+
 Versions under coalescing: a group's k writes serialize in slot order —
 write slot j returns ``start + rank_j + 1`` and read slots in the group
 return ``start + k`` (reads observe the node's fully-applied local
@@ -52,6 +69,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import coherence as co
+from ...kernels.gcl_fetch.ops import fetch as gcl_fetch_op
 from ...kernels.latch_ops.ops import OP_CAS, OP_FAA, apply_batch
 
 I, S, M = co.I, co.S, co.M
@@ -66,12 +84,17 @@ def _note_trace(key) -> None:
     TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
 
 
-def _round_impl(state, node_id, line, is_write, *, n_nodes: int,
-                backend: str = "ref"):
+def _round_impl(state, node_id, line, is_write, wdata=None, *,
+                n_nodes: int, backend: str = "ref"):
     """Unjitted round body — :func:`coherence_round` is its jitted public
     face; the sharded plane (rounds/sharded.py) inlines it per home shard
     inside its own fused loop, where the state leaves are each shard's
-    LOCAL slab and ``line`` carries local (striped) indices."""
+    LOCAL slab and ``line`` carries local (striped) indices.
+
+    ``wdata`` [R, W] carries write payloads on a payload-plane state
+    (``None`` = all-zero payloads); returns a 4-tuple ``(state', served,
+    version, data)`` where ``data`` [R, W] holds each served slot's read
+    payload (W = 0 on version-only states)."""
     co.check_node_capacity(n_nodes)
     write_back = "dirty" in state
     words = state["words"]
@@ -79,9 +102,15 @@ def _round_impl(state, node_id, line, is_write, *, n_nodes: int,
     cver = state["cache_version"]
     mver = state["mem_version"]
     dirty = state.get("dirty")
+    mdata = state.get("mem_data")
+    cdata = state.get("cache_data")
+    width = mdata.shape[1] if mdata is not None else 0
     n_lines = words.shape[0]
     r = line.shape[0]
-    _note_trace(("round", n_nodes, n_lines, r, backend, write_back))
+    if wdata is None:
+        wdata = jnp.zeros((r, width), jnp.int32)
+    _note_trace(("round", n_nodes, n_lines, r, backend, write_back,
+                 width))
 
     valid = line >= 0
     idx = jnp.maximum(line, 0)
@@ -99,6 +128,10 @@ def _round_impl(state, node_id, line, is_write, *, n_nodes: int,
     w_rank = jnp.sum(jnp.logical_and(in_grp_w, lower), axis=1) \
         .astype(jnp.int32)                         # writes before me
     n_w_grp = jnp.sum(in_grp_w, axis=1).astype(jnp.int32)
+    # last write slot of my group — slot order IS the serialization
+    # order, so its wdata is the group's final payload
+    last_w = jnp.maximum(
+        jnp.max(jnp.where(in_grp_w, jnp.arange(r), -1), axis=1), 0)
 
     # ------------- 1. local hits (lazy latches) ---------------------------
     st = cstate[node_id, idx]
@@ -154,6 +187,32 @@ def _round_impl(state, node_id, line, is_write, *, n_nodes: int,
     else:
         mver = mver.at[jnp.where(wrote, idx, n_lines)].add(k, mode="drop")
 
+    # ------------- payload plane: fetch-on-grant + write-apply ------------
+    gdata = None
+    if width:
+        # fetch-on-grant: a miss grant installs the memory bytes (the
+        # paper's combined latch+read round trip — on the pallas backend
+        # the gather reuses the gcl_fetch kernel); a hit serves the
+        # node's own local copy, which may run ahead under write-back
+        if backend == "pallas":
+            fetch_req = jnp.where(granted, idx, -1).astype(jnp.int32)
+            no_bits = jnp.zeros_like(fetch_req)
+            fetched_g, _, _, _, _ = gcl_fetch_op(
+                mdata, words, fetch_req, no_bits, no_bits,
+                backend="pallas")
+            fetched = jnp.where(granted[:, None], fetched_g, mdata[idx])
+        else:
+            fetched = mdata[idx]
+        base = jnp.where(hit[:, None], cdata[node_id, idx], fetched)
+        # write-apply: the group's final payload is its LAST write slot's
+        # wdata (slot order = serialization order, version start+k)
+        gdata = jnp.where(grp_write[:, None], wdata[last_w], base)
+        cdata = cdata.at[jnp.where(served_rep, node_id, n_nodes), idx] \
+            .set(gdata, mode="drop")
+        if not write_back:
+            mdata = mdata.at[jnp.where(wrote, idx, n_lines)].set(
+                gdata, mode="drop")
+
     # ------------- 3/4. round-boundary invalidations ----------------------
     fail_w = jnp.logical_and(jnp.logical_or(upgrade, fresh_w), ~ok)
     fail_r = jnp.logical_and(read_miss, ~no_writer)
@@ -180,6 +239,14 @@ def _round_impl(state, node_id, line, is_write, *, n_nodes: int,
                                 jnp.logical_and(m_mask, dirty))
         flush_ver = jnp.max(jnp.where(flush, cver, 0), axis=0)
         mver = jnp.where(jnp.any(flush, axis=0), flush_ver, mver)
+        if width:
+            # dirty-flush-with-bytes: the holder's cache_data IS the
+            # flush source of truth (at most one M holder per line, so
+            # the masked sum selects exactly its row)
+            flush_data = jnp.sum(
+                jnp.where(flush[:, :, None], cdata, 0), axis=0)
+            mdata = jnp.where(jnp.any(flush, axis=0)[:, None],
+                              flush_data, mdata)
         dirty = jnp.logical_and(dirty, ~jnp.logical_or(kill, dg_mask))
     cstate = jnp.where(kill, jnp.int8(I), cstate)
     cstate = jnp.where(dg_mask, jnp.int8(S), cstate)
@@ -194,24 +261,36 @@ def _round_impl(state, node_id, line, is_write, *, n_nodes: int,
         served,
         jnp.where(is_w, slot_start + w_rank + 1, slot_start + n_w_grp),
         0).astype(jnp.int32)
+    if width:
+        # every served slot replies with its group's FINAL payload (the
+        # bytes version start+k names) — reads return real data
+        data = jnp.where(served[:, None], gdata[first], 0)
+    else:
+        data = jnp.zeros((r, 0), jnp.int32)
     new_state = {"words": words, "cache_state": cstate,
                  "cache_version": cver, "mem_version": mver}
     if write_back:
         new_state["dirty"] = dirty
-    return new_state, served, version
+    if width:
+        new_state["mem_data"] = mdata
+        new_state["cache_data"] = cdata
+    return new_state, served, version, data
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "backend"))
-def coherence_round(state, node_id, line, is_write, *, n_nodes: int,
-                    backend: str = "ref"):
+def coherence_round(state, node_id, line, is_write, wdata=None, *,
+                    n_nodes: int, backend: str = "ref"):
     """One round of R op slots (node_id, line, is_write) int32 [R];
-    line = -1 marks an empty slot.  Returns (state', served[R], version[R]).
+    line = -1 marks an empty slot.  ``wdata`` [R, W] carries write
+    payloads on a payload-plane state (None = zeros).  Returns
+    (state', served[R], version[R], data[R, W]) — ``data`` is each
+    served slot's read payload (W = 0 on version-only states).
 
     Duplicate (node, line) slots are legal and coalesce (see module
     docstring); duplicate LINES across nodes contend through the latch
     kernel exactly like concurrent RDMA atomics."""
-    return _round_impl(state, node_id, line, is_write, n_nodes=n_nodes,
-                       backend=backend)
+    return _round_impl(state, node_id, line, is_write, wdata,
+                       n_nodes=n_nodes, backend=backend)
 
 
 def _evict_impl(state, node_id, line):
@@ -231,6 +310,12 @@ def _evict_impl(state, node_id, line):
                                    dirty[node_id, idx]))
         mver = mver.at[jnp.where(flush, idx, n_lines)].max(
             cver[node_id, idx], mode="drop")
+        if "mem_data" in state:
+            # eviction write-back carries the bytes, not just the version
+            cdata = state["cache_data"]
+            new_state["mem_data"] = state["mem_data"].at[
+                jnp.where(flush, idx, n_lines)].set(
+                    cdata[node_id, idx], mode="drop")
         new_state["dirty"] = dirty.at[
             jnp.where(valid, node_id, n_nodes), idx].set(False, mode="drop")
         new_state["mem_version"] = mver

@@ -14,9 +14,13 @@ per-(node, line) coalescing, eviction — across a ``shard_map`` mesh:
   buckets cross the mesh in ONE ``all_to_all``; the home shard runs the
   complete round body (`engine._round_impl`) against its local slab —
   all requests for a line meet at its home, so coalescing and latch
-  contention are exact — and the (served, version) replies return by a
-  second ``all_to_all``: the paper's one-sided verbs as two collectives
-  per round, zero control logic anywhere else;
+  contention are exact — and the (served, version, payload) replies
+  return by a second ``all_to_all``: the paper's one-sided verbs as two
+  collectives per round, zero control logic anywhere else.  On
+  payload-plane states the request bucket entries widen from (node,
+  line, isw) to carry a [W] ``wdata`` lane and the reply routes the
+  read bytes back — the data plane rides the SAME two collectives as
+  the latch traffic, no separate host-mediated copy channel;
 * the whole spin lives in ONE jitted ``lax.while_loop``: the carry
   (sharded state, pending lines, versions, a psum'd done flag) never
   leaves the devices — zero host<->device syncs per round, and
@@ -90,19 +94,26 @@ def unshard_state(state, mesh=None, axis: str = "shards", *,
 
 
 def make_sharded_state(n_nodes: int, n_lines: int, mesh,
-                       axis: str = "shards", *, write_back: bool = False):
+                       axis: str = "shards", *, write_back: bool = False,
+                       payload_width: int = 0):
     """Fresh sharded round state: ``make_state`` striped over the mesh.
     ``n_lines`` is rounded UP to a multiple of the shard count (the
-    extra lines are ordinary cold lines no op needs to touch)."""
+    extra lines are ordinary cold lines no op needs to touch).
+    ``payload_width=W`` stripes the GCL data plane (``mem_data`` /
+    ``cache_data``) alongside the latch words."""
     n_shards = mesh.shape[axis]
     n_lines = ((n_lines + n_shards - 1) // n_shards) * n_shards
     return shard_state(st.make_state(n_nodes, n_lines,
-                                     write_back=write_back), mesh, axis)
+                                     write_back=write_back,
+                                     payload_width=payload_width),
+                       mesh, axis)
 
 
-def pad_ops(node_id, line, is_write, n_shards: int):
+def pad_ops(node_id, line, is_write, n_shards: int, wdata=None):
     """Pad op slots with empty (line = -1) entries so the slot count
-    divides evenly across shards (each shard presents R/S slots)."""
+    divides evenly across shards (each shard presents R/S slots).
+    With ``wdata`` [R, W], pads it with zero payloads too and returns a
+    4-tuple."""
     node_id = np.asarray(node_id, np.int32)
     line = np.asarray(line, np.int32)
     is_write = np.asarray(is_write, np.int32)
@@ -111,58 +122,83 @@ def pad_ops(node_id, line, is_write, n_shards: int):
         node_id = np.concatenate([node_id, np.zeros(pad, np.int32)])
         line = np.concatenate([line, np.full(pad, -1, np.int32)])
         is_write = np.concatenate([is_write, np.zeros(pad, np.int32)])
-    return node_id, line, is_write
+    if wdata is None:
+        return node_id, line, is_write
+    wdata = np.asarray(wdata, np.int32)
+    if pad:
+        wdata = np.concatenate(
+            [wdata, np.zeros((pad,) + wdata.shape[1:], np.int32)])
+    return node_id, line, is_write, wdata
 
 
 # ------------------------------------------------------------ one round
 
-def _route_round(state_l, node_l, pending_l, isw_l, *, n_shards: int,
-                 axis: str, n_nodes: int, cap: int, backend: str):
+def _route_round(state_l, node_l, pending_l, isw_l, wdata_l, *,
+                 n_shards: int, axis: str, n_nodes: int, cap: int,
+                 backend: str):
     """One sharded round, executing INSIDE shard_map on each shard's
     local slab: bucket pending slots by home, all_to_all the buckets,
     run the full round body at the homes, all_to_all the replies back.
-    Returns (state_l', served[r] bool, version[r]) in local slot order;
-    a slot that overflowed its bucket simply comes back unserved."""
+    On payload-plane states the bucket entries widen from (node, line,
+    isw) to carry a [W] ``wdata`` lane, and the reply all_to_all routes
+    each served slot's read payload back the same way.  Returns
+    (state_l', served[r] bool, version[r], data[r, W]) in local slot
+    order; a slot that overflowed its bucket simply comes back unserved
+    (its payload re-presents with it next round)."""
+    width = wdata_l.shape[1]
+    fields = OP_FIELDS + ("wdata",) if width else OP_FIELDS
     reqs = {"node": node_l, "line": pending_l, "isw": isw_l}
+    if width:
+        reqs["wdata"] = wdata_l
     buckets, order, keep, (b_idx, s_idx), _ = _bucket(
-        reqs, n_shards, cap, fields=OP_FIELDS)
+        reqs, n_shards, cap, fields=fields)
     recv = {k: jax.lax.all_to_all(buckets[k], axis, 0, 0, tiled=False)
-            for k in OP_FIELDS}
-    flat = {k: v.reshape(-1) for k, v in recv.items()}          # [S*cap]
+            for k in fields}
+    flat = {k: v.reshape((n_shards * cap,) + v.shape[2:])
+            for k, v in recv.items()}                           # [S*cap]
     # global line -> local slab index (stripe layout: local = line // S)
     loc = jnp.where(flat["line"] >= 0, flat["line"] // n_shards,
                     -1).astype(jnp.int32)
-    state_l, served_h, ver_h = _round_impl(
-        state_l, flat["node"], loc, flat["isw"], n_nodes=n_nodes,
-        backend=backend)
+    state_l, served_h, ver_h, data_h = _round_impl(
+        state_l, flat["node"], loc, flat["isw"], flat.get("wdata"),
+        n_nodes=n_nodes, backend=backend)
 
     def back(x):
-        return jax.lax.all_to_all(x.reshape(n_shards, cap), axis, 0, 0,
-                                  tiled=False)
+        return jax.lax.all_to_all(
+            x.reshape((n_shards, cap) + x.shape[1:]), axis, 0, 0,
+            tiled=False)
     r_served = back(served_h.astype(jnp.int32))
     r_ver = back(ver_h)
     inv = jnp.argsort(order)
 
     def unbucket(bucketed):
         gathered = bucketed[b_idx, s_idx]
-        gathered = jnp.where(keep, gathered, 0)
+        mask = keep.reshape((-1,) + (1,) * (gathered.ndim - 1))
+        gathered = jnp.where(mask, gathered, 0)
         return gathered[inv]
-    return state_l, unbucket(r_served).astype(bool), unbucket(r_ver)
+    if width:
+        r_data = unbucket(back(data_h))
+    else:
+        r_data = jnp.zeros((pending_l.shape[0], 0), jnp.int32)
+    return (state_l, unbucket(r_served).astype(bool), unbucket(r_ver),
+            r_data)
 
 
 @functools.partial(
     jax.jit, static_argnames=("mesh", "axis", "n_nodes", "bucket_cap",
                               "backend"))
-def coherence_round_sharded(state, node_id, line, is_write, *, mesh,
-                            axis: str = "shards", n_nodes: int,
+def coherence_round_sharded(state, node_id, line, is_write, wdata=None,
+                            *, mesh, axis: str = "shards", n_nodes: int,
                             bucket_cap: int | None = None,
                             backend: str = "ref"):
     """One sharded round over GLOBAL op slots [R] (R divisible by the
-    shard count; line = -1 empty).  Returns (state', served[R],
-    version[R]) — the sharded mirror of :func:`engine.coherence_round`,
-    and the building block of the host-synced baseline loop that
-    `benchmarks/fig7_rounds.py` measures the fused driver against.
-    Overflowed slots return unserved (the caller respins them)."""
+    shard count; line = -1 empty).  ``wdata`` [R, W] carries write
+    payloads on a payload-plane state.  Returns (state', served[R],
+    version[R], data[R, W]) — the sharded mirror of
+    :func:`engine.coherence_round`, and the building block of the
+    host-synced baseline loop that `benchmarks/fig7_rounds.py` measures
+    the fused driver against.  Overflowed slots return unserved (the
+    caller respins them, payload included)."""
     co.check_node_capacity(n_nodes)
     n_shards = mesh.shape[axis]
     node_id = jnp.asarray(node_id, jnp.int32)
@@ -174,23 +210,28 @@ def coherence_round_sharded(state, node_id, line, is_write, *, mesh,
                          f"n_shards={n_shards} (use pad_ops)")
     r = r_total // n_shards
     cap = bucket_cap if bucket_cap is not None else r
+    width = st.payload_width(state)
+    if wdata is None:
+        wdata = jnp.zeros((r_total, width), jnp.int32)
+    else:
+        wdata = jnp.asarray(wdata, jnp.int32)
     write_back = "dirty" in state
     _note_trace(("sharded_round", n_shards, n_nodes,
                  state["words"].shape[0], r_total, cap, backend,
-                 write_back))
+                 write_back, width))
     specs = _state_specs(state, axis)
 
-    def spmd(state_l, node_l, line_l, isw_l):
-        return _route_round(state_l, node_l, line_l, isw_l,
+    def spmd(state_l, node_l, line_l, isw_l, wdata_l):
+        return _route_round(state_l, node_l, line_l, isw_l, wdata_l,
                             n_shards=n_shards, axis=axis, n_nodes=n_nodes,
                             cap=cap, backend=backend)
 
     return shard_map(
         spmd, mesh=mesh,
-        in_specs=(specs, P(axis), P(axis), P(axis)),
-        out_specs=(specs, P(axis), P(axis)),
+        in_specs=(specs, P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(specs, P(axis), P(axis), P(axis)),
         check_vma=False,
-    )(state, node_id, line, is_write)
+    )(state, node_id, line, is_write, wdata)
 
 
 # ------------------------------------------------------- the fused driver
@@ -198,17 +239,20 @@ def coherence_round_sharded(state, node_id, line, is_write, *, mesh,
 @functools.partial(
     jax.jit, static_argnames=("mesh", "axis", "n_nodes", "max_rounds",
                               "bucket_cap", "backend"))
-def run_rounds_sharded(state, node_id, line, is_write, *, mesh,
-                       axis: str = "shards", n_nodes: int,
+def run_rounds_sharded(state, node_id, line, is_write, wdata=None, *,
+                       mesh, axis: str = "shards", n_nodes: int,
                        max_rounds: int = 64,
                        bucket_cap: int | None = None,
                        backend: str = "ref"):
     """Drive GLOBAL op slots [R] to completion across the mesh in ONE
     jit call — the sharded mirror of :func:`driver.run_rounds`.
 
-    Returns ``(state', versions[R], rounds_used, all_served)``, all
-    device values.  Unserved slots (latch contention OR bucket overflow)
-    re-present themselves round after round inside the fused
+    ``wdata`` [R, W] carries per-op write payloads on a payload-plane
+    state; returns ``(state', versions[R], data[R, W], rounds_used,
+    all_served)``, all device values, where ``data`` holds each op's
+    read payload routed back through the reply all_to_all.  Unserved
+    slots (latch contention OR bucket overflow) re-present themselves —
+    bytes included — round after round inside the fused
     ``lax.while_loop``; the done flag is a psum across shards, so the
     loop runs lockstep until every shard's slots are served or
     ``max_rounds`` is hit."""
@@ -223,42 +267,49 @@ def run_rounds_sharded(state, node_id, line, is_write, *, mesh,
                          f"n_shards={n_shards} (use pad_ops)")
     r = r_total // n_shards
     cap = bucket_cap if bucket_cap is not None else r
+    width = st.payload_width(state)
+    if wdata is None:
+        wdata = jnp.zeros((r_total, width), jnp.int32)
+    else:
+        wdata = jnp.asarray(wdata, jnp.int32)
     write_back = "dirty" in state
     _note_trace(("sharded", n_shards, n_nodes, state["words"].shape[0],
-                 r_total, cap, max_rounds, backend, write_back))
+                 r_total, cap, max_rounds, backend, write_back, width))
     specs = _state_specs(state, axis)
 
-    def spmd(state_l, node_l, line_l, isw_l):
+    def spmd(state_l, node_l, line_l, isw_l, wdata_l):
         def n_pending(pending):
             return jax.lax.psum(
                 jnp.sum((pending >= 0).astype(jnp.int32)), axis)
 
         def cond(carry):
-            _, pending, _, rounds, done = carry
+            _, pending, _, _, rounds, done = carry
             return jnp.logical_and(~done, rounds < max_rounds)
 
         def body(carry):
-            stt, pending, versions, rounds, _ = carry
-            stt, served, ver = _route_round(
-                stt, node_l, pending, isw_l, n_shards=n_shards,
+            stt, pending, versions, data, rounds, _ = carry
+            stt, served, ver, rdata = _route_round(
+                stt, node_l, pending, isw_l, wdata_l, n_shards=n_shards,
                 axis=axis, n_nodes=n_nodes, cap=cap, backend=backend)
             versions = jnp.where(served, ver, versions)
+            data = jnp.where(served[:, None], rdata, data)
             pending = jnp.where(served, jnp.int32(-1), pending)
-            return (stt, pending, versions, rounds + 1,
+            return (stt, pending, versions, data, rounds + 1,
                     n_pending(pending) == 0)
 
-        init = (state_l, line_l, jnp.zeros_like(line_l), jnp.int32(0),
-                n_pending(line_l) == 0)
-        state_l, pending, versions, rounds, done = jax.lax.while_loop(
-            cond, body, init)
-        return state_l, versions, rounds, done
+        init = (state_l, line_l, jnp.zeros_like(line_l),
+                jnp.zeros((line_l.shape[0], width), jnp.int32),
+                jnp.int32(0), n_pending(line_l) == 0)
+        state_l, pending, versions, data, rounds, done = \
+            jax.lax.while_loop(cond, body, init)
+        return state_l, versions, data, rounds, done
 
     return shard_map(
         spmd, mesh=mesh,
-        in_specs=(specs, P(axis), P(axis), P(axis)),
-        out_specs=(specs, P(axis), P(), P()),
+        in_specs=(specs, P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(specs, P(axis), P(axis), P(), P()),
         check_vma=False,
-    )(state, node_id, line, is_write)
+    )(state, node_id, line, is_write, wdata)
 
 
 # --------------------------------------------------------------- eviction

@@ -9,10 +9,20 @@ friendly):
     mem_version    [L]    int32   version of the memory image
     dirty          [N, L] bool    (write-back mode only) copy newer than
                                   memory; flushed on downgrade/release/evict
+    mem_data       [L, W] int32   (payload plane only) GCL payload lanes of
+                                  the memory image — the Fig. 1/3 data
+                                  bytes the latch word protects
+    cache_data     [N, L, W] i32  (payload plane only) each node's local
+                                  copy of the payload; S copies mirror
+                                  memory, a dirty M copy is the flush
+                                  source of truth
 
 Write-through vs write-back is a *structural* property of the state
 (presence of the ``dirty`` leaf), so the engine needs no extra static
-flag and a state can never be run under the wrong mode.
+flag and a state can never be run under the wrong mode.  The payload
+plane is structural the same way: ``make_state(..., payload_width=W)``
+adds the ``mem_data``/``cache_data`` leaves and every read the engine
+serves returns the line's W int32 payload lanes, not just a version.
 """
 
 from __future__ import annotations
@@ -22,10 +32,15 @@ import jax.numpy as jnp
 from .. import coherence as co
 
 
-def make_state(n_nodes: int, n_lines: int, *, write_back: bool = False):
+def make_state(n_nodes: int, n_lines: int, *, write_back: bool = False,
+               payload_width: int = 0):
     """Fresh round state.  Raises ``ValueError`` for node counts the
-    latch word cannot encode (pre-spec these silently aliased bits)."""
+    latch word cannot encode (pre-spec these silently aliased bits).
+    ``payload_width=W`` > 0 attaches the GCL data plane: ``mem_data``
+    [L, W] int32 and per-node ``cache_data`` [N, L, W] copies."""
     co.check_node_capacity(n_nodes)
+    if payload_width < 0:
+        raise ValueError(f"payload_width={payload_width} must be >= 0")
     state = {
         "words": jnp.zeros((n_lines, 2), jnp.int32),
         "cache_state": jnp.zeros((n_nodes, n_lines), jnp.int8),
@@ -34,12 +49,21 @@ def make_state(n_nodes: int, n_lines: int, *, write_back: bool = False):
     }
     if write_back:
         state["dirty"] = jnp.zeros((n_nodes, n_lines), bool)
+    if payload_width:
+        state["mem_data"] = jnp.zeros((n_lines, payload_width), jnp.int32)
+        state["cache_data"] = jnp.zeros((n_nodes, n_lines, payload_width),
+                                        jnp.int32)
     return state
 
 
 def is_write_back(state) -> bool:
     """Mode is structural: a state with a ``dirty`` leaf runs write-back."""
     return "dirty" in state
+
+
+def payload_width(state) -> int:
+    """Payload lanes per line; 0 = version-only state (no data plane)."""
+    return state["mem_data"].shape[1] if "mem_data" in state else 0
 
 
 # ------------------------------------------------------------ stripe layout
@@ -50,7 +74,7 @@ def is_write_back(state) -> bool:
 # table and the permutation helpers live here.
 
 LINE_AXIS = {"words": 0, "cache_state": 1, "cache_version": 1,
-             "mem_version": 0, "dirty": 1}
+             "mem_version": 0, "dirty": 1, "mem_data": 0, "cache_data": 1}
 
 
 def stripe_lines(x, n_shards: int, axis: int = 0):
@@ -113,3 +137,27 @@ def check_invariants(state) -> None:
         m_stale = np.logical_and(cs == co.M, cv != mv[None, :])
         assert not m_stale.any(), \
             "write-through holder diverged from memory"
+    if "mem_data" in state:
+        md = np.asarray(state["mem_data"])            # [L, W]
+        cd = np.asarray(state["cache_data"])          # [N, L, W]
+        # a shared copy's bytes ARE the memory bytes (version agreement
+        # already asserted above implies this; the data plane must too)
+        s_mismatch = np.logical_and(
+            sh, (cd != md[None, :, :]).any(axis=2))
+        assert not s_mismatch.any(), \
+            "shared copy's payload diverged from memory"
+        if "dirty" in state:
+            # only a DIRTY exclusive copy may run ahead of memory; a
+            # clean M copy (flushed but not yet downgraded never occurs,
+            # but eviction paths may leave one transiently) must match
+            dirty = np.asarray(state["dirty"])
+            clean_m = np.logical_and(cs == co.M, ~dirty)
+            cm_mismatch = np.logical_and(
+                clean_m, (cd != md[None, :, :]).any(axis=2))
+            assert not cm_mismatch.any(), \
+                "clean exclusive copy's payload diverged from memory"
+        else:
+            m_mismatch = np.logical_and(
+                cs == co.M, (cd != md[None, :, :]).any(axis=2))
+            assert not m_mismatch.any(), \
+                "write-through holder's payload diverged from memory"

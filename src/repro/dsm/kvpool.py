@@ -20,6 +20,18 @@ set-associative map local_slot -> (global_page, version); a cached page
 is VALID iff its version matches the directory version — the version
 check at round boundaries is the deterministic form of the invalidation
 message (DESIGN.md "what changed").
+
+Rounds-backed serving (:meth:`SELCCKVPool.open_rounds_plane`): the pool
+can serve its KV bytes straight from the rounds engine's GCL payload
+plane instead of the host-side shadow page copies above.  Pages become
+lines, replicas become nodes, and each page's k+v tensors are bitcast
+into the line's int32 payload lanes (``mem_data`` / per-replica
+``cache_data``).  ``pool.read`` then drives real coherence-plane read
+ops through ``rounds.run_rounds`` (or ``run_rounds_sharded`` on a
+mesh) and returns bytes whose freshness the protocol guarantees;
+``pool.append`` is a coherent read-modify-write (S grant -> token
+splice -> S->X upgrade write); ``pool.attend`` decodes the plane's
+memory image for ``pool_decode_attention``.
 """
 
 from __future__ import annotations
@@ -113,6 +125,48 @@ def make_replica_cache(cfg: KVPoolConfig):
 
 def _slot_of(page, cache_slots):
     return page % cache_slots        # direct-mapped (paper uses hashed LRU)
+
+
+# ------------------------------------- pages <-> GCL payload lanes (int32)
+
+def page_lanes(cfg: KVPoolConfig) -> int:
+    """int32 payload lanes per line for one (k, v) page pair — the
+    ``payload_width`` of the pool's rounds-plane coherence state."""
+    elems = cfg.page_size * cfg.n_kv_heads * cfg.head_dim
+    if _pool_dtype(cfg) == jnp.bfloat16:
+        if elems % 2:
+            raise ValueError(
+                f"bf16 page of {elems} elements cannot pack into int32 "
+                f"lanes (need an even element count)")
+        return elems                 # k: elems//2 lanes + v: elems//2
+    return 2 * elems                 # fp32: one lane per element
+
+
+def encode_kv(k, v, cfg: KVPoolConfig):
+    """Bitcast k/v page tensors [..., page_size, Hkv, hd] into the
+    line's int32 payload lanes [..., W] (k lanes then v lanes)."""
+    dt = _pool_dtype(cfg)
+
+    def enc(x):
+        flat = jnp.asarray(x).astype(dt).reshape(x.shape[:-3] + (-1,))
+        if dt == jnp.bfloat16:       # 2 bf16 elements per int32 lane
+            flat = flat.reshape(flat.shape[:-1] + (flat.shape[-1] // 2, 2))
+        return jax.lax.bitcast_convert_type(flat, jnp.int32)
+    return jnp.concatenate([enc(k), enc(v)], axis=-1)
+
+
+def decode_kv(data, cfg: KVPoolConfig):
+    """Inverse of :func:`encode_kv`: payload lanes [..., W] -> (k, v)
+    page tensors [..., page_size, Hkv, hd] in the pool dtype."""
+    dt = _pool_dtype(cfg)
+    data = jnp.asarray(data, jnp.int32)
+    half = data.shape[-1] // 2
+    page_shape = (cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+
+    def dec(lanes):
+        x = jax.lax.bitcast_convert_type(lanes, dt)
+        return x.reshape(lanes.shape[:-1] + page_shape)
+    return dec(data[..., :half]), dec(data[..., half:])
 
 
 # ---------------------------------------------------------------- appends
@@ -254,6 +308,26 @@ def pool_decode_attention(pool, q, page_tbl, lens, *, cfg: KVPoolConfig,
                         lens, backend=backend)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "n_shards", "backend"))
+def pool_decode_attention_rounds(rstate, q, page_tbl, lens, *,
+                                 cfg: KVPoolConfig, n_shards: int = 1,
+                                 backend: str = "ref"):
+    """Decode attention over the ROUNDS-PLANE memory image: the page
+    bytes come out of the coherence state's ``mem_data`` payload lanes
+    (unstriped back to page-major on a sharded plane), not the host-side
+    shadow ``k_pages``/``v_pages``.  Under write-through appends the
+    memory image is always protocol-fresh; under write-back a dirty
+    appender's bytes reach it on the next downgrade/invalidation/evict,
+    exactly like the DES."""
+    md = rstate["mem_data"]
+    if n_shards > 1:
+        from ..core.rounds.state import unstripe_lines
+        md = unstripe_lines(md, n_shards)
+    k_pages, v_pages = decode_kv(md, cfg)
+    return decode_paged(q, k_pages, v_pages, page_tbl, lens,
+                        backend=backend)
+
+
 class SELCCKVPool:
     """Convenience façade tying pool + replica caches together for the
     examples and tests (allocation is host-side bump allocation; the
@@ -266,6 +340,7 @@ class SELCCKVPool:
         self.axis = axis
         self.pool = make_pool(cfg, mesh=mesh, axis=axis)
         self.cache = make_replica_cache(cfg)
+        self.rounds_state = None     # set by open_rounds_plane()
         self._top = 0
 
     def as_rounds_state(self, *, write_back: bool = False, mesh=None,
@@ -289,6 +364,57 @@ class SELCCKVPool:
         return rounds.make_state(self.cfg.n_replicas, self.cfg.n_pages,
                                  write_back=write_back)
 
+    # ----------------------------------------- rounds-backed serving plane
+    def open_rounds_plane(self, *, write_back: bool = False):
+        """Switch this pool's read/append/attend paths onto the rounds
+        engine's GCL payload plane: a coherence state whose lines are
+        the pool's pages and whose ``mem_data`` payload lanes hold the
+        REAL page bytes (seeded from the current ``k_pages``/
+        ``v_pages`` by bitcast).  On a mesh-backed pool the plane is
+        the mesh-sharded engine (``home = page % n_shards``) and every
+        read/append crosses it through the two per-round all_to_alls.
+        Returns the state (also kept as ``self.rounds_state``)."""
+        from ..core import rounds
+        if self.rounds_state is not None:
+            # re-seeding from the shadow pages would silently discard
+            # every append made through the plane (rounds-mode appends
+            # never touch k_pages/v_pages)
+            raise RuntimeError(
+                "rounds plane already open; build a fresh SELCCKVPool "
+                "to re-open with different settings")
+        width = page_lanes(self.cfg)
+        state = rounds.make_state(self.cfg.n_replicas, self.cfg.n_pages,
+                                  write_back=write_back,
+                                  payload_width=width)
+        state["mem_data"] = encode_kv(jnp.asarray(self.pool["k_pages"]),
+                                      jnp.asarray(self.pool["v_pages"]),
+                                      self.cfg)
+        if self.mesh is not None:
+            state = rounds.shard_state(state, self.mesh, self.axis)
+        self.rounds_state = state
+        return state
+
+    def _plane_ops(self, node, line, isw, wdata):
+        """Drive one op batch through the pool's coherence plane (flat
+        or mesh-sharded) and return (versions, read payloads)."""
+        from ..core import rounds
+        self.rounds_state, vers, _, data = rounds.run_ops_to_completion(
+            self.rounds_state, node, line, isw, wdata,
+            n_nodes=self.cfg.n_replicas, mesh=self.mesh, axis=self.axis)
+        return vers, data
+
+    def _plane_held(self, replica: int, pages) -> np.ndarray:
+        """Rounds-mode hit mask: the replica already holds the page in
+        S or M (a lazy-latch local re-read — the plane's analogue of
+        the legacy tag/version match)."""
+        cs = np.asarray(self.rounds_state["cache_state"])
+        pos = np.maximum(pages, 0)
+        if self.mesh is not None:
+            s = self.mesh.shape[self.axis]
+            n_lines = cs.shape[1]                 # stripe layout
+            pos = (pos % s) * (n_lines // s) + pos // s
+        return np.logical_and(pages >= 0, cs[replica, pos] != 0)
+
     def allocate(self, n: int) -> np.ndarray:
         """Bump-allocate ``n`` pages.  Raises instead of wrapping past
         ``n_pages`` — the pre-guard modulo silently handed out pages that
@@ -305,23 +431,91 @@ class SELCCKVPool:
         """Structured address of a flat page index — the SAME vocabulary
         the DES facade speaks (``SELCCLayer.line_to_gaddr``), so serving
         pages and protocol GCLs are interchangeable identifiers."""
-        return GAddr.from_flat(int(page), n_homes)
+        page = int(page)
+        if not 0 <= page < self.cfg.n_pages:
+            raise ValueError(
+                f"page {page} outside this pool's 0..{self.cfg.n_pages - 1}")
+        return GAddr.from_flat(page, n_homes)
 
     def page_of(self, gaddr, n_homes: int = 1) -> int:
-        return GAddr(*gaddr).flat(n_homes)
+        """Flat page index of a :class:`GAddr`.  Raises ``ValueError``
+        for an address from a FOREIGN pool geometry (home id outside
+        ``n_homes`` or a page outside this pool) instead of silently
+        aliasing it onto a live page."""
+        g = GAddr(*gaddr)
+        if not 0 <= g.node_id < n_homes:
+            raise ValueError(
+                f"{g!r} is not from this pool's geometry: home "
+                f"{g.node_id} outside 0..{n_homes - 1}")
+        page = g.flat(n_homes)
+        if not 0 <= page < self.cfg.n_pages:
+            raise ValueError(
+                f"{g!r} maps to page {page}, outside this pool's "
+                f"0..{self.cfg.n_pages - 1}")
+        return page
 
     def append(self, pages, offsets, k_new, v_new, replica: int = 0):
-        self.pool = append_tokens(self.pool, jnp.int32(replica),
-                                  jnp.asarray(pages),
-                                  jnp.asarray(offsets), k_new, v_new,
-                                  cfg=self.cfg)
+        if self.rounds_state is None:
+            self.pool = append_tokens(self.pool, jnp.int32(replica),
+                                      jnp.asarray(pages),
+                                      jnp.asarray(offsets), k_new, v_new,
+                                      cfg=self.cfg)
+            return
+        # Rounds-plane append: a coherent read-modify-write.  1. read
+        # ops take the S grant and return protocol-fresh page bytes;
+        pages = np.asarray(pages, np.int32)
+        offsets = np.asarray(offsets, np.int32)
+        node = np.full(pages.shape, replica, np.int32)
+        width = page_lanes(self.cfg)
+        _, data = self._plane_ops(node, pages, np.zeros_like(pages),
+                                  np.zeros((pages.shape[0], width),
+                                           np.int32))
+        k_pg, v_pg = decode_kv(data, self.cfg)    # [B, ps, Hkv, hd]
+        # 2. splice ALL of the batch's tokens for each op's page, later
+        # slots winning — the engine serializes a coalesced group to its
+        # LAST write's payload, so every slot must carry the group total
+        t_idx = np.arange(pages.shape[0])
+        match = np.logical_and(pages[:, None] == pages[None, :],
+                               (pages >= 0)[:, None])       # [tok, row]
+        oh = offsets[:, None] == np.arange(self.cfg.page_size)[None, :]
+        win = np.where(match[:, :, None] & oh[:, None, :],
+                       t_idx[:, None, None], -1).max(axis=0)  # [B, ps]
+        sel = jnp.asarray(np.maximum(win, 0))
+        keep = jnp.asarray(win >= 0)[..., None, None]
+        k_pg = jnp.where(keep, jnp.asarray(k_new).astype(k_pg.dtype)[sel],
+                         k_pg)
+        v_pg = jnp.where(keep, jnp.asarray(v_new).astype(v_pg.dtype)[sel],
+                         v_pg)
+        # 3. write ops land the bytes through the S->X upgrade path
+        self._plane_ops(node, pages, np.ones_like(pages),
+                        np.asarray(encode_kv(k_pg, v_pg, self.cfg)))
 
     def read(self, replica: int, pages):
-        k, v, self.cache, self.pool, hit = read_through_cache(
-            self.pool, self.cache, replica, jnp.asarray(pages),
-            cfg=self.cfg)
-        return k, v, np.asarray(hit)
+        if self.rounds_state is None:
+            k, v, self.cache, self.pool, hit = read_through_cache(
+                self.pool, self.cache, replica, jnp.asarray(pages),
+                cfg=self.cfg)
+            return k, v, np.asarray(hit)
+        # Rounds-plane read: real coherence ops — the returned bytes
+        # come out of the engine's cache_data/mem_data payload lanes
+        # with protocol-guaranteed freshness (fetch-on-grant installs
+        # the replica's copy; a writer's invalidation drops it).
+        pages = np.asarray(pages, np.int32)
+        hit = self._plane_held(replica, pages)
+        node = np.full(pages.shape, replica, np.int32)
+        width = page_lanes(self.cfg)
+        _, data = self._plane_ops(node, pages, np.zeros_like(pages),
+                                  np.zeros((pages.shape[0], width),
+                                           np.int32))
+        k, v = decode_kv(data, self.cfg)
+        return k, v, hit
 
     def attend(self, q, page_tbl, lens):
+        if self.rounds_state is not None:
+            n_shards = (self.mesh.shape[self.axis]
+                        if self.mesh is not None else 1)
+            return pool_decode_attention_rounds(
+                self.rounds_state, q, jnp.asarray(page_tbl),
+                jnp.asarray(lens), cfg=self.cfg, n_shards=n_shards)
         return pool_decode_attention(self.pool, q, jnp.asarray(page_tbl),
                                      jnp.asarray(lens), cfg=self.cfg)

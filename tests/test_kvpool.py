@@ -3,7 +3,9 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dsm.kvpool import KVPoolConfig, SELCCKVPool
+from hypothesis_compat import given, settings, st
+from repro.dsm.kvpool import (KVPoolConfig, SELCCKVPool, decode_kv,
+                              encode_kv, page_lanes)
 
 
 def _pool():
@@ -180,6 +182,175 @@ def test_mesh_backed_pool_matches_unsharded():
         np.asarray([1], np.int32), n_nodes=cfg.n_replicas, mesh=mesh)
     assert vers.tolist() == [1]
     rp.check_invariants(state)
+
+
+# --------------------------------------------- rounds-backed data plane
+
+def test_encode_decode_roundtrip_both_dtypes():
+    for dtype in ("bfloat16", "float32"):
+        cfg = KVPoolConfig(n_pages=4, page_size=4, n_kv_heads=2,
+                           head_dim=8, n_replicas=2, cache_slots=4,
+                           dtype=dtype)
+        rng = np.random.default_rng(1)
+        k = jnp.asarray(rng.normal(size=(3, 4, 2, 8)),
+                        jnp.bfloat16 if dtype == "bfloat16"
+                        else jnp.float32)
+        v = -k
+        data = encode_kv(k, v, cfg)
+        assert data.dtype == jnp.int32
+        assert data.shape == (3, page_lanes(cfg))
+        k2, v2 = decode_kv(data, cfg)
+        assert k2.dtype == k.dtype
+        assert (k2 == k).all() and (v2 == v).all()
+
+
+def _rounds_pool(write_back=False, mesh=None):
+    cfg = KVPoolConfig(n_pages=16, page_size=4, n_kv_heads=2, head_dim=8,
+                       n_replicas=3, cache_slots=8, dtype="float32")
+    pool = SELCCKVPool(cfg, mesh=mesh)
+    pool.open_rounds_plane(write_back=write_back)
+    return cfg, pool
+
+
+def test_rounds_plane_read_returns_protocol_fresh_bytes():
+    """The serving read path on the coherence plane: bytes come out of
+    cache_data/mem_data via real rounds ops, appends invalidate cached
+    copies, and re-reads are local hits until a writer intervenes."""
+    cfg, pool = _rounds_pool()
+    pages = pool.allocate(2)
+    one = jnp.ones((1, 2, 8), jnp.float32)
+    pool.append(np.asarray([pages[0]]), np.asarray([0]), one, 2 * one,
+                replica=0)
+    k, v, hit = pool.read(1, np.asarray(pages, np.int32))
+    assert not hit.any()                       # first read: miss + fetch
+    np.testing.assert_allclose(np.asarray(k)[0, 0], 1.0)
+    np.testing.assert_allclose(np.asarray(v)[0, 0], 2.0)
+    np.testing.assert_allclose(np.asarray(k)[0, 1], 0.0)  # unwritten row
+    k, v, hit = pool.read(1, np.asarray(pages, np.int32))
+    assert hit.all()                           # lazy latch: local re-read
+    # a writer's append invalidates replica 1's copy; the next read
+    # misses and fetches the NEW bytes through the protocol
+    pool.append(np.asarray([pages[0]]), np.asarray([1]), 3 * one,
+                3 * one, replica=0)
+    k, v, hit = pool.read(1, np.asarray([pages[0]], np.int32))
+    assert not hit[0]
+    np.testing.assert_allclose(np.asarray(k)[0, 1], 3.0)
+    np.testing.assert_allclose(np.asarray(k)[0, 0], 1.0)  # old token kept
+
+
+def test_rounds_plane_duplicate_page_append_batch():
+    """Two tokens for ONE page in one append batch: the facade splices
+    the group total so the engine's last-writer coalescing is exact."""
+    cfg, pool = _rounds_pool()
+    pages = pool.allocate(1)
+    one = jnp.ones((1, 2, 8), jnp.float32)
+    pool.append(np.asarray([pages[0], pages[0]]), np.asarray([0, 1]),
+                jnp.concatenate([4 * one, 5 * one]),
+                jnp.concatenate([4 * one, 5 * one]), replica=1)
+    k, _, _ = pool.read(2, np.asarray([pages[0]], np.int32))
+    np.testing.assert_allclose(np.asarray(k)[0, 0], 4.0)
+    np.testing.assert_allclose(np.asarray(k)[0, 1], 5.0)
+
+
+def test_rounds_plane_mixed_trace_matches_oracle():
+    """THE acceptance check (in-process, 1-shard mesh): a concurrent
+    mixed append/read trace through the mesh-backed pool vs a
+    host-replayed numpy oracle — every read returns the oracle's
+    bytes."""
+    import jax
+    mesh = jax.make_mesh((1,), ("shards",))
+    cfg, pool = _rounds_pool(mesh=mesh)
+    pages = pool.allocate(8)
+    ok = np.zeros((8, cfg.page_size, cfg.n_kv_heads, cfg.head_dim),
+                  np.float32)
+    ov = np.zeros_like(ok)
+    rng = np.random.default_rng(5)
+    for t in range(10):
+        rep = t % cfg.n_replicas
+        pg = np.asarray([pages[t % 8], pages[(t + 3) % 8]], np.int32)
+        off = np.asarray([t % cfg.page_size, (t + 1) % cfg.page_size],
+                         np.int32)
+        kn = rng.normal(size=(2, cfg.n_kv_heads, cfg.head_dim)) \
+            .astype(np.float32)
+        vn = rng.normal(size=(2, cfg.n_kv_heads, cfg.head_dim)) \
+            .astype(np.float32)
+        pool.append(pg, off, kn, vn, replica=rep)
+        for i in range(2):
+            ok[pg[i], off[i]] = kn[i]
+            ov[pg[i], off[i]] = vn[i]
+        reader = (t + 1) % cfg.n_replicas
+        rd = np.asarray([pages[t % 8], pages[(t + 5) % 8]], np.int32)
+        k, v, _ = pool.read(reader, rd)
+        np.testing.assert_array_equal(np.asarray(k), ok[rd])
+        np.testing.assert_array_equal(np.asarray(v), ov[rd])
+    from repro.core import rounds as rp
+    rp.check_invariants(rp.unshard_state(pool.rounds_state, mesh))
+
+
+def test_rounds_plane_write_back_reads_still_fresh():
+    """Write-back plane: memory bytes lag the dirty appender, but READS
+    are protocol-fresh (downgrade flushes bytes with the version)."""
+    cfg, pool = _rounds_pool(write_back=True)
+    pages = pool.allocate(1)
+    one = jnp.ones((1, 2, 8), jnp.float32)
+    pool.append(np.asarray([pages[0]]), np.asarray([0]), 7 * one,
+                7 * one, replica=0)
+    k, v, hit = pool.read(2, np.asarray([pages[0]], np.int32))
+    np.testing.assert_allclose(np.asarray(k)[0, 0], 7.0)
+    from repro.core import rounds as rp
+    rp.check_invariants(pool.rounds_state)
+
+
+def test_rounds_plane_attention_consumes_plane_bytes():
+    cfg, pool = _rounds_pool()
+    rng = np.random.default_rng(3)
+    pages = pool.allocate(2)
+    ks, vs = [], []
+    for t in range(8):
+        k = jnp.asarray(rng.normal(size=(1, 2, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 2, 8)), jnp.float32)
+        pool.append(np.asarray([pages[t // 4]]), np.asarray([t % 4]),
+                    k, v)
+        ks.append(np.asarray(k)[0])
+        vs.append(np.asarray(v)[0])
+    q = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+    out = pool.attend(q, np.asarray([[pages[0], pages[1]]], np.int32),
+                      np.asarray([8], np.int32))
+    from repro.models.attention import decode_attention
+    kc = jnp.asarray(np.stack(ks))[None]
+    vc = jnp.asarray(np.stack(vs))[None]
+    ref = decode_attention(q[:, None, :, :], kc, vc, jnp.asarray([8]))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref)[:, 0],
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- GAddr round trips
+
+@settings(max_examples=100, deadline=None)
+@given(page=st.integers(0, 63), n_homes=st.integers(1, 8))
+def test_gaddr_roundtrip_across_home_counts(page, n_homes):
+    cfg = KVPoolConfig(n_pages=64, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=2, cache_slots=4)
+    pool = SELCCKVPool(cfg)
+    assert pool.page_of(pool.gaddr_of(page, n_homes), n_homes) == page
+
+
+def test_page_of_rejects_foreign_geometry():
+    cfg = KVPoolConfig(n_pages=16, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=2, cache_slots=4)
+    pool = SELCCKVPool(cfg)
+    g = pool.gaddr_of(9, n_homes=4)          # home 1, offset 2
+    assert pool.page_of(g, n_homes=4) == 9
+    with np.testing.assert_raises(ValueError):
+        pool.page_of(g, n_homes=1)           # foreign home count
+    big = SELCCKVPool(KVPoolConfig(n_pages=64, page_size=4, n_kv_heads=1,
+                                   head_dim=8, n_replicas=2,
+                                   cache_slots=4))
+    g_big = big.gaddr_of(40, n_homes=2)
+    with np.testing.assert_raises(ValueError):
+        pool.page_of(g_big, n_homes=2)       # page beyond this pool
+    with np.testing.assert_raises(ValueError):
+        pool.gaddr_of(16)                    # out-of-range page
 
 
 def test_mesh_backed_pool_rejects_indivisible_pages():

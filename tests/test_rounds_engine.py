@@ -139,8 +139,8 @@ def test_run_rounds_compiles_once_per_shape():
                 r.integers(0, 2, 8).astype(np.int32))
 
     state, _, rounds1 = _run(state, *batch(1), 4)
-    round_key = ("round", 4, 16, 8, "ref", False)
-    driver_key = ("driver", 4, 8, 64, "ref", False)
+    round_key = ("round", 4, 16, 8, "ref", False, 0)
+    driver_key = ("driver", 4, 8, 64, "ref", False, 0)
     baseline = dict(engine.TRACE_COUNTS)
     assert baseline.get(round_key, 0) == 1, \
         "round engine must trace once inside the while_loop body"
@@ -182,6 +182,124 @@ def test_random_mixed_trace_invariants(backend, write_back):
             state, node, line, isw, n_nodes=n_nodes, max_rounds=128,
             backend=backend)
         rp.check_invariants(state)
+
+
+# --------------------------------------------------------- payload plane
+
+def _wd(rows):
+    return np.asarray(rows, np.int32)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_payload_write_apply_and_fetch_on_grant(backend):
+    state = rp.make_state(3, 4, payload_width=2)
+    assert rp.payload_width(state) == 2
+    # write lands bytes in the writer's cache AND (write-through) memory
+    state, v, _, d = rp.run_ops_to_completion(
+        state, *_ops([0], [1], [1]), _wd([[7, 9]]), n_nodes=3,
+        backend=backend)
+    assert d.tolist() == [[7, 9]]
+    assert np.asarray(state["mem_data"])[1].tolist() == [7, 9]
+    rp.check_invariants(state)
+    # another node's read miss fetches the bytes on grant
+    state, v, _, d = rp.run_ops_to_completion(
+        state, *_ops([2], [1], [0]), _wd([[0, 0]]), n_nodes=3,
+        backend=backend)
+    assert d.tolist() == [[7, 9]]
+    assert np.asarray(state["cache_data"])[2, 1].tolist() == [7, 9]
+    rp.check_invariants(state)
+
+
+def test_payload_coalesced_group_serializes_to_last_write():
+    state = rp.make_state(2, 4, payload_width=1)
+    # one node, two writes + one read on one line in a single call: the
+    # group serializes in slot order, so slot 1's bytes are final and
+    # EVERY slot's reply carries them (reads observe start+k)
+    state, v, _, d = rp.run_ops_to_completion(
+        state, *_ops([0, 0, 0], [2, 2, 2], [1, 1, 0]),
+        _wd([[11], [22], [0]]), n_nodes=2)
+    assert v.tolist() == [1, 2, 2]
+    assert d.tolist() == [[22], [22], [22]]
+    assert np.asarray(state["mem_data"])[2].tolist() == [22]
+    rp.check_invariants(state)
+
+
+def test_payload_write_back_flush_paths():
+    state = rp.make_state(3, 4, write_back=True, payload_width=2)
+    state, _, _, _ = rp.run_ops_to_completion(
+        state, *_ops([0], [1], [1]), _wd([[5, 6]]), n_nodes=3)
+    # dirty: memory bytes still stale
+    assert np.asarray(state["mem_data"])[1].tolist() == [0, 0]
+    rp.check_invariants(state)
+    # a reader forces downgrade: bytes flush WITH the version, and the
+    # reader's reply carries them
+    state, v, _, d = rp.run_ops_to_completion(
+        state, *_ops([1], [1], [0]), _wd([[0, 0]]), n_nodes=3)
+    assert d.tolist() == [[5, 6]]
+    assert np.asarray(state["mem_data"])[1].tolist() == [5, 6]
+    rp.check_invariants(state)
+    # invalidation (steal) flushes too: the stealing writer starts from
+    # the flushed memory image
+    state, _, _, _ = rp.run_ops_to_completion(
+        state, *_ops([2], [1], [1]), _wd([[8, 8]]), n_nodes=3)
+    rp.check_invariants(state)
+    assert np.asarray(state["mem_data"])[1].tolist() == [5, 6]  # dirty again
+    state = rp.evict_lines(state, jnp.asarray([2], jnp.int32),
+                           jnp.asarray([1], jnp.int32))
+    assert np.asarray(state["mem_data"])[1].tolist() == [8, 8]  # evict flush
+    rp.check_invariants(state)
+
+
+@pytest.mark.parametrize("write_back", [False, True])
+def test_payload_random_soup_invariants(write_back):
+    rng = np.random.default_rng(11)
+    n_nodes, n_lines, width = 4, 8, 3
+    state = rp.make_state(n_nodes, n_lines, write_back=write_back,
+                          payload_width=width)
+    for it in range(4):
+        r = 10
+        node = rng.integers(0, n_nodes, r).astype(np.int32)
+        line = rng.integers(-1, n_lines, r).astype(np.int32)
+        isw = rng.integers(0, 2, r).astype(np.int32)
+        wd = rng.integers(1, 1000, (r, width)).astype(np.int32)
+        state, _, _, _ = rp.run_ops_to_completion(
+            state, node, line, isw, wd, n_nodes=n_nodes, max_rounds=128)
+        rp.check_invariants(state)
+
+
+def test_payload_width_rejects_negative():
+    with pytest.raises(ValueError, match="payload_width"):
+        rp.make_state(2, 4, payload_width=-1)
+
+
+def test_payload_driver_compiles_once_per_shape():
+    """The payload plane rides INSIDE the fused while_loop: same
+    zero-sync driver, one trace per (shape, width) — no per-batch
+    retrace, no extra host round trip for the bytes."""
+    rng = np.random.default_rng(2)
+    state = rp.make_state(4, 16, payload_width=8)
+
+    def batch(seed):
+        r = np.random.default_rng(seed)
+        return (r.integers(0, 4, 8).astype(np.int32),
+                r.integers(0, 16, 8).astype(np.int32),
+                r.integers(0, 2, 8).astype(np.int32),
+                r.integers(1, 99, (8, 8)).astype(np.int32))
+
+    state, _, _, _ = rp.run_ops_to_completion(state, *batch(1),
+                                              n_nodes=4)
+    round_key = ("round", 4, 16, 8, "ref", False, 8)
+    driver_key = ("driver", 4, 8, 64, "ref", False, 8)
+    baseline = dict(engine.TRACE_COUNTS)
+    assert baseline.get(round_key, 0) == 1
+    assert baseline.get(driver_key, 0) == 1
+    for seed in range(2, 6):
+        state, _, _, _ = rp.run_ops_to_completion(state, *batch(seed),
+                                                  n_nodes=4)
+    assert engine.TRACE_COUNTS[round_key] == baseline[round_key]
+    assert engine.TRACE_COUNTS[driver_key] == baseline[driver_key]
+    del rng
+    rp.check_invariants(state)
 
 
 def test_unencodable_node_count_rejected():

@@ -58,6 +58,27 @@ def _replay(state, *, mesh=None, **kw):
     return out, state
 
 
+def _wdata(batch_idx, batch, width=2):
+    """Deterministic write payloads: lane 0 = batch*16+slot+1, lane 1 =
+    the writing node (zeros for reads)."""
+    return np.asarray(
+        [[batch_idx * 16 + slot + 1, node] if isw else [0] * width
+         for slot, (node, _, isw) in enumerate(batch)], np.int32)
+
+
+def _replay_bytes(state, *, mesh=None, **kw):
+    out = []
+    for b, batch in enumerate(TRACE):
+        node, line, isw = _batch_arrays(batch)
+        state, vers, _, data = rp.run_ops_to_completion(
+            state, node, line, isw, _wdata(b, batch), n_nodes=N_NODES,
+            mesh=mesh, **kw)
+        rp.check_invariants(state)
+        out.append([(int(v),) + tuple(int(x) for x in d)
+                    for v, d in zip(vers, data)])
+    return out, state
+
+
 # ------------------------------------------------------ stripe layout
 
 def test_stripe_state_roundtrip():
@@ -98,6 +119,27 @@ def test_single_shard_mesh_matches_flat_engine(write_back):
                                       np.asarray(gathered[k]), err_msg=k)
 
 
+@pytest.mark.parametrize("write_back", [False, True])
+def test_single_shard_mesh_matches_flat_engine_bytes(write_back):
+    """Byte-content differential: the payload-plane trace through the
+    flat and 1-shard engines — identical (version, bytes) per op and
+    bit-identical payload leaves (mem_data/cache_data included)."""
+    mesh = _mesh1()
+    flat, flat_state = _replay_bytes(
+        rp.make_state(N_NODES, N_LINES, write_back=write_back,
+                      payload_width=2))
+    shd, shd_state = _replay_bytes(
+        rp.make_sharded_state(N_NODES, N_LINES, mesh,
+                              write_back=write_back, payload_width=2),
+        mesh=mesh)
+    assert flat == shd
+    gathered = rp.unshard_state(shd_state, mesh)
+    assert set(gathered) == set(flat_state) >= {"mem_data", "cache_data"}
+    for k in flat_state:
+        np.testing.assert_array_equal(np.asarray(flat_state[k]),
+                                      np.asarray(gathered[k]), err_msg=k)
+
+
 # -------------------------------------------------- overflow deferral
 
 def test_bucket_overflow_defers_and_completes():
@@ -117,6 +159,32 @@ def test_bucket_overflow_defers_and_completes():
     assert rounds > 3          # it actually had to respin
     assert int(np.asarray(state["mem_version"])[1]) == 6
     rp.check_invariants(state)
+
+
+def test_bucket_overflow_defers_and_carries_payloads():
+    """The defer/respin path must carry BYTES too: a deferred write's
+    payload re-presents with it and lands when its CAS finally wins,
+    and each op's reply bytes match its group's serialized write."""
+    mesh = _mesh1()
+    state = rp.make_sharded_state(2, 4, mesh, payload_width=2)
+    node = np.asarray([0, 1, 0, 1, 0, 1], np.int32)
+    line = np.full(6, 1, np.int32)
+    isw = np.ones(6, np.int32)
+    wd = np.stack([10 * np.arange(1, 7), np.arange(1, 7)],
+                  axis=1).astype(np.int32)
+    state, vers, rounds, data = rp.run_ops_to_completion(
+        state, node, line, isw, wd, n_nodes=2, mesh=mesh, bucket_cap=2,
+        max_rounds=64)
+    assert sorted(vers.tolist()) == [1, 2, 3, 4, 5, 6]
+    assert rounds > 3
+    rp.check_invariants(state)
+    # with cap=2 and alternating nodes, each deferred write re-presents
+    # alone and serializes as its own group: its reply bytes are its OWN
+    # payload, and memory ends with the last-serialized write's bytes
+    for i in range(6):
+        assert data[i].tolist() == wd[i].tolist(), i
+    last = int(np.argmax(vers))
+    assert np.asarray(state["mem_data"])[1].tolist() == wd[last].tolist()
 
 
 def test_overflow_unserved_slots_report_at_bound():
@@ -144,7 +212,7 @@ def test_sharded_loop_compiles_once_per_shape():
 
     state, _, rounds1 = rp.run_ops_to_completion(
         state, *batch(1), n_nodes=4, mesh=mesh)
-    key = ("sharded", 1, 4, 16, 8, 8, 64, "ref", False)
+    key = ("sharded", 1, 4, 16, 8, 8, 64, "ref", False, 0)
     baseline = dict(engine.TRACE_COUNTS)
     assert baseline.get(key, 0) == 1, \
         "sharded driver must trace once per shape"
@@ -219,11 +287,22 @@ def test_multi_shard_parity_subprocess():
                     np.asarray([b[1] for b in batch], np.int32),
                     np.asarray([b[2] for b in batch], np.int32))
 
+        def wdata(b, batch):
+            return np.asarray(
+                [[b * 16 + s + 1, n] if w else [0, 0]
+                 for s, (n, _, w) in enumerate(batch)], np.int32)
+
         for write_back in (False, True):
+            # version-only plane AND payload plane: flat vs 4 shards
             flat = rp.make_state(N_NODES, N_LINES, write_back=write_back)
             shd = rp.make_sharded_state(N_NODES, N_LINES, mesh,
                                         write_back=write_back)
-            for batch in TRACE:
+            flat_p = rp.make_state(N_NODES, N_LINES,
+                                   write_back=write_back, payload_width=2)
+            shd_p = rp.make_sharded_state(N_NODES, N_LINES, mesh,
+                                          write_back=write_back,
+                                          payload_width=2)
+            for b, batch in enumerate(TRACE):
                 node, line, isw = arrays(batch)
                 flat, v1, _ = rp.run_ops_to_completion(
                     flat, node, line, isw, n_nodes=N_NODES)
@@ -232,10 +311,28 @@ def test_multi_shard_parity_subprocess():
                 assert v1.tolist() == v2.tolist(), (
                     write_back, batch, v1.tolist(), v2.tolist())
                 rp.check_invariants(shd)
+                wd = wdata(b, batch)
+                flat_p, v3, _, d3 = rp.run_ops_to_completion(
+                    flat_p, node, line, isw, wd, n_nodes=N_NODES)
+                shd_p, v4, _, d4 = rp.run_ops_to_completion(
+                    shd_p, node, line, isw, wd, n_nodes=N_NODES,
+                    mesh=mesh)
+                # byte-content differential: (version, bytes) agree
+                # between the flat and 4-shard payload planes, and the
+                # payload plane serializes exactly like the bare one
+                assert v3.tolist() == v1.tolist()
+                assert v4.tolist() == v1.tolist()
+                assert d3.tolist() == d4.tolist(), (write_back, batch)
+                rp.check_invariants(shd_p)
             g = rp.unshard_state(shd, mesh)
             for k in flat:
                 np.testing.assert_array_equal(
                     np.asarray(flat[k]), np.asarray(g[k]), err_msg=k)
+            gp = rp.unshard_state(shd_p, mesh)
+            assert "mem_data" in gp and "cache_data" in gp
+            for k in flat_p:
+                np.testing.assert_array_equal(
+                    np.asarray(flat_p[k]), np.asarray(gp[k]), err_msg=k)
 
         # hot home + tiny buckets: every source shard overflows toward
         # home 0, the loop defers and respins, history stays complete
@@ -250,8 +347,25 @@ def test_multi_shard_parity_subprocess():
         assert sorted(vers.tolist()) == list(range(1, R + 1))
         rp.check_invariants(state)
 
+        # same hot-home overflow storm, payload-carrying: the deferred
+        # slots respin WITH their bytes, and the final memory image is
+        # the payload of whichever write serialized last
+        state_p = rp.make_sharded_state(4, 8, mesh, payload_width=2)
+        wd = np.stack([7 * np.arange(1, R + 1), np.arange(1, R + 1)],
+                      axis=1).astype(np.int32)
+        state_p, vers_p, _, data_p = rp.run_ops_to_completion(
+            state_p, node, line, isw, wd, n_nodes=4, mesh=mesh,
+            bucket_cap=1, max_rounds=256)
+        assert sorted(vers_p.tolist()) == list(range(1, R + 1))
+        rp.check_invariants(state_p)
+        # the reply of the last-serialized slot carries its group's
+        # final bytes — exactly what write-through left in memory
+        md = rp.unshard_state(state_p, mesh)["mem_data"]
+        last = int(np.argmax(vers_p))
+        assert np.asarray(md)[0].tolist() == data_p[last].tolist()
+
         # trace-count proof at 4 shards: shapes repeat, no retrace
-        key = ("sharded", 4, 4, 8, 16, 1, 128, "ref", False)
+        key = ("sharded", 4, 4, 8, 16, 1, 128, "ref", False, 0)
         assert engine.TRACE_COUNTS.get(key, 0) == 1
         state2 = rp.make_sharded_state(4, 8, mesh)
         state2, _, _ = rp.run_ops_to_completion(
@@ -285,6 +399,54 @@ def test_multi_shard_parity_subprocess():
                 soup, node, line, isw, n_nodes=4, mesh=mesh,
                 max_rounds=128)
             rp.check_invariants(soup)
+
+        # payload soup on 4 shards: random mixed ops with random bytes,
+        # data/version agreement checked on every materialized state
+        cfgp = DeviceRoundsConfig(n_nodes=4, n_lines=16, r_slots=12,
+                                  read_ratio=0.5, zipf_theta=0.9,
+                                  iters=4, payload_width=3)
+        soup_p = rp.make_sharded_state(4, 16, mesh, write_back=True,
+                                       payload_width=3)
+        for node, line, isw, wd in device_rounds_batches(cfgp, seed=6):
+            soup_p, _, _, _ = rp.run_ops_to_completion(
+                soup_p, node, line, isw, wd, n_nodes=4, mesh=mesh,
+                max_rounds=128)
+            rp.check_invariants(soup_p)
+
+        # mesh-backed SELCCKVPool on the rounds data plane: a mixed
+        # append/read trace vs a host-replayed numpy oracle — reads
+        # must return the exact bytes the serialized appends left
+        from repro.dsm.kvpool import KVPoolConfig, SELCCKVPool
+        kcfg = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1,
+                            head_dim=8, n_replicas=4, cache_slots=4,
+                            dtype="float32")
+        kpool = SELCCKVPool(kcfg, mesh=mesh)
+        pages = kpool.allocate(8)
+        kpool.open_rounds_plane()
+        ok = np.zeros((8, 4, 1, 8), np.float32)
+        ov = np.zeros((8, 4, 1, 8), np.float32)
+        rng = np.random.default_rng(9)
+        for t in range(10):
+            rep = t % 4
+            pg = np.asarray([pages[t % 8], pages[(t + 3) % 8]], np.int32)
+            off = np.asarray([t % 4, (t + 1) % 4], np.int32)
+            kn = rng.normal(size=(2, 1, 8)).astype(np.float32)
+            vn = rng.normal(size=(2, 1, 8)).astype(np.float32)
+            kpool.append(pg, off, kn, vn, replica=rep)
+            for i in range(2):
+                ok[pg[i], off[i]] = kn[i]
+                ov[pg[i], off[i]] = vn[i]
+            reader = (t + 1) % 4
+            rd = np.asarray([pages[t % 8], pages[(t + 5) % 8]], np.int32)
+            k, v, _ = kpool.read(reader, rd)
+            np.testing.assert_array_equal(np.asarray(k), ok[rd])
+            np.testing.assert_array_equal(np.asarray(v), ov[rd])
+        # attention consumes the same plane bytes
+        q = rng.normal(size=(1, 2, 8)).astype(np.float32)
+        out = kpool.attend(q, np.asarray([[pages[0], pages[1]]],
+                                         np.int32),
+                           np.asarray([8], np.int32))
+        assert np.isfinite(np.asarray(out)).all()
         print("SHARDED_PARITY_OK")
     """)
     out = subprocess.run([sys.executable, "-c", code], cwd=".",
