@@ -18,8 +18,10 @@ The speedup checks are within-run ratios and therefore
 machine-independent; the throughput checks compare against seed values
 recorded on whatever machine committed them, so they ALSO gate runner
 speed — if CI runners prove systematically slower than the seed
-machine, re-record the seeds from a CI artifact (or widen
-``BENCH_GATE_MAX_REGRESS``) rather than letting the gate rot as always
+machine, re-record the seeds from a CI artifact (``python -m
+benchmarks.record_seeds --out benchmarks/seeds-<runner-class>/`` on
+that runner, pooled over several runs) or widen
+``BENCH_GATE_MAX_REGRESS``, rather than letting the gate rot as always
 red.
 
 Calibration knobs (all env-overridable, CLI flags win):
@@ -32,9 +34,18 @@ Calibration knobs (all env-overridable, CLI flags win):
   thresholds;
 * ``BENCH_GATE_MAX_REGRESS_DATA`` — a WIDER regression budget for
   payload-carrying trajectories (seed ``meta.payload`` true, or a
-  ``*_data`` bench name): their medians move with memory bandwidth and
-  payload-width sweeps, which jitter more across runners than the
-  latch-only configs.
+  ``*_data`` bench name — ``BENCH_rounds_data.json`` and the B-link
+  tree's ``BENCH_btree_rounds.json`` both declare ``meta.payload``):
+  their medians move with memory bandwidth and payload-width sweeps,
+  which jitter more across runners than the latch-only configs.
+
+A seed can also DECLARE its own budget: ``meta.gate_max_regress``
+widens (never narrows) the effective threshold for that trajectory.
+The B-link tree bench declares 0.65 — its per-level descent loop is
+many small jit dispatches, whose latency swings harder under CPU
+contention than any other trajectory (measured 2x run-to-run on an
+otherwise idle container) while its within-run ``fused_host_speedup``
+ratio stays the sharp check.
 
 Every seed file must have a fresh counterpart — a silently missing
 benchmark is itself a regression.
@@ -81,6 +92,10 @@ def check_file(seed_path: str, fresh_path: str, max_regress: float,
     if max_regress_data is not None and _is_payload_bench(seed_path,
                                                           seed_doc):
         max_regress = max(max_regress, max_regress_data)
+    # a trajectory may declare its own (wider, never narrower) budget
+    declared = seed_doc.get("meta", {}).get("gate_max_regress")
+    if declared is not None:
+        max_regress = max(max_regress, float(declared))
     with open(fresh_path) as f:
         fresh = _medians(json.load(f))
     report, failures = [], []

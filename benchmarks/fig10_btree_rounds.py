@@ -1,0 +1,176 @@
+"""fig10_btree_rounds — the paper's Fig. 10 B-tree, on the rounds plane.
+
+The flagship application (a concurrent B-link tree over the SELCC
+abstraction, Sec. 8.1) served from the DEVICE coherence engine: YCSB
+A/B/C (read ratios 0.5 / 0.95 / 1.0, Zipf-skewed keys) over four trees
+sharing one op stream per workload:
+
+* ``flat``    — ``index.DeviceBTree`` on the flat fused plane
+  (``run_rounds`` descents, ``run_rmw`` leaf inserts);
+* ``sharded`` — the same tree on a mesh-sharded plane (nodes striped
+  ``line % n_shards``; 1 shard on CPU CI — the multi-device scaling
+  story is fig7_rounds' job);
+* ``host``    — the SAME tree logic with ``driver="host"``: every
+  rounds batch re-dispatched from a host loop with a sync after every
+  round, and the insert RMW as the pre-fuse two-phase
+  read/modify/write.  The gated ``fused_host_speedup`` row (workload
+  A) is med(host)/med(flat) — the fused plane must beat the host-
+  synced baseline where there is multi-round work to fuse; B (~2x but
+  jittery at 5% writes) and pure-read C (one round per level on both
+  drivers — parity expected) emit ungated ``fused_host_ratio`` rows;
+* ``des``     — the host ``apps/btree.BLinkTree`` on the DES simulator
+  (the paper-figure reference plane).
+
+Timing methodology (same as fig7_rounds / fig_rounds_data): all trees
+of a workload run INTERLEAVED, batch by batch, and each cell is
+summarized by its MEDIAN per-batch time.  Emits CSV rows plus
+``BENCH_btree_rounds.json`` with ``meta.payload`` = true (tree nodes
+ride the payload lanes), so benchmarks/check_regression.py applies the
+wider ``BENCH_GATE_MAX_REGRESS_DATA`` budget.
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, write_bench_json
+
+N_NODES = 4
+N_LINES = 2048
+FANOUT = 16
+R_SLOTS = 64
+N_KEYS = 4096
+ZIPF_THETA = 0.99
+PREPOP = 256
+WORKLOADS = (("a", 0.5), ("b", 0.95), ("c", 1.0))
+
+
+def _prepop_keys():
+    import numpy as np
+    rng = np.random.default_rng(42)
+    keys = rng.choice(N_KEYS, size=PREPOP, replace=False) \
+        .astype(np.int32)
+    return keys, (keys * 7 + 1).astype(np.int32)
+
+
+def _device_cell(driver: str, mesh=None):
+    import numpy as np
+
+    from repro.index import DeviceBTree
+    tree = DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT,
+                              mesh=mesh, driver=driver)
+    keys, vals = _prepop_keys()
+    for i in range(0, PREPOP, R_SLOTS):
+        tree.insert_batch(keys[i:i + R_SLOTS], vals[i:i + R_SLOTS])
+
+    def step(keys, is_read, vals):
+        node = int(np.sum(is_read)) % N_NODES     # deterministic client
+        if (~is_read).any():
+            tree.insert_batch(keys[~is_read], vals[~is_read], node=node)
+        if is_read.any():
+            tree.lookup_batch(keys[is_read], node=node)
+    return step
+
+
+def _des_cell():
+    from repro.apps.btree import BLinkTree
+    from repro.core import ClusterConfig, SELCCConfig, SELCCLayer
+    layer = SELCCLayer(ClusterConfig(
+        n_compute=N_NODES, n_memory=2, threads_per_node=2,
+        selcc=SELCCConfig(cache_capacity=4096)))
+    trees = [BLinkTree(layer, n, fanout=FANOUT) for n in layer.nodes]
+
+    def run(gen):
+        p = layer.env.process(gen)
+        layer.env.run_until_complete([p], hard_limit=10_000)
+
+    keys, vals = _prepop_keys()
+
+    def prepop():
+        for k, v in zip(keys, vals):
+            yield from trees[0].insert(int(k), int(v))
+    run(prepop())
+
+    def step(keys, is_read, vals):
+        node = int(is_read.sum()) % N_NODES
+
+        def g():
+            for k, r, v in zip(keys, is_read, vals):
+                if r:
+                    yield from trees[node].lookup(int(k))
+                else:
+                    yield from trees[node].insert(int(k), int(v))
+        run(g())
+    return step
+
+
+def main(quick: bool = False, smoke: bool = False) -> list:
+    import jax
+
+    from repro.apps.workloads import BTreeBatchConfig, btree_kv_batches
+    iters = 6 if (smoke or quick) else 16
+    n_shards = max(d for d in range(1, jax.device_count() + 1)
+                   if R_SLOTS % d == 0 and N_LINES % d == 0)
+    mesh = jax.make_mesh((n_shards,), ("shards",))
+
+    rows: list = []
+    speedups: dict = {}
+    for wl, read_ratio in WORKLOADS:
+        cfg = BTreeBatchConfig(n_keys=N_KEYS, r_slots=R_SLOTS,
+                               read_ratio=read_ratio,
+                               zipf_theta=ZIPF_THETA, iters=iters + 1)
+        batches = btree_kv_batches(cfg, seed=29)
+        cells = {
+            "flat": _device_cell("fused"),
+            "sharded": _device_cell("fused", mesh=mesh),
+            "host": _device_cell("host"),
+            "des": _des_cell(),
+        }
+        times: dict = {k: [] for k in cells}
+        for key, step in cells.items():              # warmup = compile
+            step(*batches[0])
+        for batch in batches[1:]:
+            for key, step in cells.items():
+                t0 = time.perf_counter()
+                step(*batch)
+                times[key].append(time.perf_counter() - t0)
+
+        def med(key):
+            ts = sorted(times[key])
+            return ts[len(ts) // 2]
+
+        for key in cells:
+            series = f"{key}_{wl}"
+            emit("fig10_btree_rounds", series, read_ratio, "btree_mops",
+                 R_SLOTS / med(key) / 1e6, rows=rows)
+            emit("fig10_btree_rounds", series, read_ratio, "wall_s",
+                 sum(times[key]), rows=rows)
+        speedups[wl] = med("host") / med("flat")
+        # Write-heavy A is the fused loop's structural case (multi-round
+        # spins + the two-phase RMWs it deletes, ~4x here) and is GATED
+        # >= 1.5x.  B's ~5% writes fuse less (~2x but jittery) and
+        # pure-read C serves every op in ONE round, so parity (~1.0) is
+        # its EXPECTED result — both emitted ungated ("ratio", not
+        # "speedup"/"mops") as trajectory diagnostics.
+        metric = ("fused_host_speedup" if read_ratio <= 0.5
+                  else "fused_host_ratio")
+        emit("fig10_btree_rounds", f"flat_{wl}", read_ratio, metric,
+             speedups[wl], rows=rows)
+    # gate_max_regress 0.65: the descent level loop is many SMALL jit
+    # dispatches whose latency swings ~2x run-to-run under container
+    # CPU contention (far more than the one-big-dispatch rounds
+    # benches); the within-run fused_host_speedup ratio stays the
+    # sharp, machine-independent check
+    write_bench_json("btree_rounds", rows,
+                     meta={"payload": True, "gate_max_regress": 0.65,
+                           "n_nodes": N_NODES,
+                           "n_lines": N_LINES, "fanout": FANOUT,
+                           "r_slots": R_SLOTS, "n_keys": N_KEYS,
+                           "n_shards": n_shards, "prepop": PREPOP,
+                           "zipf_theta": ZIPF_THETA, "smoke": smoke,
+                           "quick": quick})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Record pooled benchmark seed trajectories for the perf gate.
+
+``python -m benchmarks.record_seeds [--runs 3] [--out benchmarks/seeds]
+[--only btree_rounds,...]``
+
+Runs the benchmark suite ``--runs`` times in a scratch directory
+(``--smoke`` by default, or ``benchmarks.run --only ...`` for a
+subset), POOLS the rows of each run into one trajectory per bench
+(medians over the pooled rows are what ``check_regression`` compares —
+pooling over several runs is how every committed seed family absorbs
+run-to-run scheduler drift), and writes the pooled ``BENCH_*.json``
+files to ``--out``.
+
+This is also how a CI-RUNNER seed family is recorded (the ROADMAP /
+PR-4 TODO): run it ON the runner class with
+``--out benchmarks/seeds-<runner-class>/``, commit the directory, and
+point that runner's gate at it with ``BENCH_SEED_DIR`` (see
+benchmarks/check_regression.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+
+def pool_runs(run_docs: dict[str, list[dict]]) -> dict[str, dict]:
+    """{bench filename: [doc per run]} -> {filename: pooled doc} —
+    rows concatenate (so medians pool across runs), meta comes from
+    the last run plus a ``pooled_runs`` count."""
+    pooled = {}
+    for name, docs in run_docs.items():
+        rows = [row for doc in docs for row in doc["rows"]]
+        meta = dict(docs[-1].get("meta", {}), pooled_runs=len(docs))
+        pooled[name] = {"bench": docs[-1]["bench"], "meta": meta,
+                        "rows": rows}
+    return pooled
+
+
+def record(runs: int, out_dir: str, only: str = "", quick: bool = False,
+           python: str = sys.executable) -> list[str]:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    args = [python, "-m", "benchmarks.run"]
+    args += ["--only", only] if only else ["--smoke"]
+    if quick and only:
+        args.append("--quick")     # smoke-scale iters for --only subsets
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [repo, os.path.join(repo, "src"),
+                    os.environ.get("PYTHONPATH", "")]))
+    run_docs: dict[str, list[dict]] = {}
+    for i in range(runs):
+        with tempfile.TemporaryDirectory() as scratch:
+            print(f"# seed run {i + 1}/{runs}: {' '.join(args[1:])}",
+                  flush=True)
+            subprocess.run(args, cwd=scratch, env=env, check=True)
+            fresh = sorted(glob.glob(os.path.join(scratch,
+                                                  "BENCH_*.json")))
+            if not fresh:
+                raise SystemExit("run emitted no BENCH_*.json — "
+                                 "nothing to record")
+            for path in fresh:
+                with open(path) as f:
+                    run_docs.setdefault(os.path.basename(path),
+                                        []).append(json.load(f))
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, doc in pool_runs(run_docs).items():
+        out = os.path.join(out_dir, name)
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1, default=float)
+            f.write("\n")
+        print(f"# recorded {out} ({len(doc['rows'])} pooled rows, "
+              f"{doc['meta']['pooled_runs']} runs)", flush=True)
+        written.append(out)
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=3,
+                    help="independent runs to pool (default 3 — how "
+                         "every committed seed family was recorded)")
+    ap.add_argument("--out",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "seeds"),
+                    help="seed-family directory to write (use "
+                         "benchmarks/seeds-<runner-class>/ + "
+                         "BENCH_SEED_DIR for per-runner families)")
+    ap.add_argument("--only", default="",
+                    help="record a subset via benchmarks.run --only "
+                         "(default: the full --smoke suite)")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --only: smoke-scale iteration counts, so "
+                         "the recorded medians match what the CI smoke "
+                         "gate re-measures")
+    args = ap.parse_args(argv)
+    record(args.runs, args.out, args.only, args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,7 +21,8 @@ def smoke() -> None:
     (flat + mesh-sharded + the payload data plane), all persisted as
     BENCH_*.json for the per-commit perf trajectory (gated by
     benchmarks.check_regression)."""
-    from . import fig7_rounds, fig_rounds, fig_rounds_data
+    from . import (fig7_rounds, fig10_btree_rounds, fig_rounds,
+                   fig_rounds_data)
     from .common import MicroConfig, emit, run_micro, timer, \
         write_bench_json
 
@@ -45,6 +46,7 @@ def smoke() -> None:
     fig_rounds.main(smoke=True)              # writes BENCH_rounds.json
     fig7_rounds.main(smoke=True)      # writes BENCH_rounds_sharded.json
     fig_rounds_data.main(smoke=True)     # writes BENCH_rounds_data.json
+    fig10_btree_rounds.main(smoke=True)  # writes BENCH_btree_rounds.json
 
 
 def main() -> None:
@@ -54,8 +56,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset emitting BENCH_*.json artifacts")
     ap.add_argument("--only", default="",
-                    help="comma list: fig7,fig7r,fig8,fig9,fig10,fig11,"
-                         "fig12,rounds,rounds_data,roofline")
+                    help="comma list: fig7,fig7r,fig8,fig9,fig10,"
+                         "btree_rounds,fig11,fig12,rounds,rounds_data,"
+                         "roofline")
     args = ap.parse_args()
 
     print("figure,series,x,metric,value")
@@ -66,14 +69,16 @@ def main() -> None:
         return
 
     from . import (fig7_rounds, fig7_scalability, fig8_locality,
-                   fig9_skew, fig10_ycsb_btree, fig11_tpcc, fig12_2pc,
-                   fig_rounds, fig_rounds_data, roofline_report)
+                   fig9_skew, fig10_btree_rounds, fig10_ycsb_btree,
+                   fig11_tpcc, fig12_2pc, fig_rounds, fig_rounds_data,
+                   roofline_report)
     figures = {
         "fig7": fig7_scalability.main,
         "fig7r": fig7_rounds.main,
         "fig8": fig8_locality.main,
         "fig9": fig9_skew.main,
         "fig10": fig10_ycsb_btree.main,
+        "btree_rounds": fig10_btree_rounds.main,
         "fig11": fig11_tpcc.main,
         "fig12": fig12_2pc.main,
         "rounds": fig_rounds.main,

@@ -148,6 +148,37 @@ def device_rounds_batches(cfg: DeviceRoundsConfig, seed: int = 0):
     return out
 
 
+@dataclass
+class BTreeBatchConfig:
+    """YCSB-shaped key workload for the device B-link tree (Fig. 10):
+    each batch is ``(keys [R], is_read [R], vals [R])`` with Zipf-skewed
+    key choice — A/B/C are ``read_ratio`` 0.5 / 0.95 / 1.0."""
+    n_keys: int = 4096
+    r_slots: int = 64
+    read_ratio: float = 0.5
+    zipf_theta: float = 0.99
+    iters: int = 8
+
+
+def btree_kv_batches(cfg: BTreeBatchConfig, seed: int = 0):
+    """Pre-generated key/val batches for ``index.DeviceBTree`` (and the
+    host oracle): reads are point lookups, writes are upserts."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    zipf = Zipf(cfg.n_keys, cfg.zipf_theta) if cfg.zipf_theta else None
+    out = []
+    for _ in range(cfg.iters):
+        if zipf is None:
+            keys = rng.integers(0, cfg.n_keys,
+                                cfg.r_slots).astype(np.int32)
+        else:
+            keys = zipf.sample_batch(rng, cfg.r_slots)
+        is_read = rng.random(cfg.r_slots) < cfg.read_ratio
+        vals = rng.integers(1, 1 << 20, cfg.r_slots).astype(np.int32)
+        out.append((keys, is_read, vals))
+    return out
+
+
 # ------------------------------------------------- cross-backend parity
 
 def parity_worker(node, gcls: Sequence[GAddr], rounds: int, stride: int):

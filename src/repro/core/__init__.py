@@ -40,9 +40,9 @@ __all__ = [
 def __getattr__(name):
     # The bulk-synchronous JAX path is part of the same facade but drags
     # in jax; resolve it lazily so pure-DES users stay light.
-    # `latchword` is lazy for a different reason: the shim warns
-    # (DeprecationWarning -> use core/coherence.py) at import, and only
-    # actual users should see that warning.
+    # `latchword` and `jax_protocol` are lazy for a second reason: both
+    # shims warn (DeprecationWarning -> core/coherence.py resp.
+    # core/rounds) at import, and only actual users should see that.
     if name in ("jax_protocol", "rounds", "latchword"):
         import importlib
         return importlib.import_module(f".{name}", __name__)

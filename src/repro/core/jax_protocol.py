@@ -8,16 +8,25 @@ live once: the spec in ``core/coherence.py`` (shared with the DES plane
 and dsm/kvpool.py) and the engine in ``core/rounds/{state,engine,
 driver}.py`` (which added S->X upgrades, write-back mode, multi-op
 coalescing, and the fused zero-sync ``run_rounds`` driver).  Importing
-from here keeps working; new code should import ``repro.core.rounds``.
+from here keeps working but emits a ``DeprecationWarning`` (once per
+import, like ``core/latchword.py``); new code should import
+``repro.core.rounds``.
 """
 
 from __future__ import annotations
+
+import warnings
 
 from .coherence import (I, M, S, WRITER_SHIFT_HI, bit_lanes as _bit_lanes,
                         writer_field_hi as _writer_field_hi,
                         writer_of_hi as _writer_of_hi)
 from .rounds import (check_invariants, coherence_round, evict_lines,
                      make_state, run_ops_to_completion, run_rounds)
+
+warnings.warn(
+    "repro.core.jax_protocol is a compatibility shim; the engine lives "
+    "in repro.core.rounds — import from there instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "I", "S", "M", "WRITER_SHIFT_HI", "check_invariants",

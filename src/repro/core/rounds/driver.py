@@ -71,6 +71,114 @@ def run_rounds(state, node_id, line, is_write, wdata=None, *,
     return state, versions, data, rounds, jnp.all(pending < 0)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("modify", "n_nodes", "max_rounds",
+                                    "backend"))
+def run_rmw(state, node_id, line, operands=(), *, modify, n_nodes: int,
+            max_rounds: int = 64, backend: str = "ref"):
+    """Fused coherent read-modify-write — ONE jit call, zero host syncs.
+
+    Two :func:`run_rounds` phases with the caller's transform in
+    between, all inside one trace:
+
+    1. READ phase — every slot presents a read op; the grant registers
+       the node's S copy and returns the line's current payload bytes;
+    2. ``modify(data, line, *operands)`` computes the new payload
+       ``[R, W]`` from the freshly-read bytes (pure jnp — it runs on
+       device between the phases; ``line`` is passed so the transform
+       can mask padded ``line = -1`` rows);
+    3. WRITE phase — every slot presents a write op carrying the new
+       bytes, which lands through the engine's S->X upgrade path (the
+       node holds S from phase 1, so an uncontended upgrade is a
+       single CAS).
+
+    This is the device-side form of the DES read-modify-write idiom
+    (``xlocked`` + ``h.value`` + ``h.store``): pre-refactor callers
+    (kvpool append, and any index wanting in-place node edits) ran the
+    two phases as separate host-synced calls with the splice on the
+    host in between — two dispatches and a full host round trip per
+    batch.  ``modify`` must be a STATIC callable (pass the same
+    function object per shape — e.g. an ``lru_cache``-kept closure —
+    or every call retraces).
+
+    Atomicity is per CALL: the RMW is coherent against every op outside
+    this call (phase 2's upgrade fails if a peer intervened, and the
+    spin re-acquires — but ``modify`` is not re-run, so slots of
+    DIFFERENT nodes targeting the SAME line within one call would each
+    write bytes derived from the shared phase-1 read, last writer
+    winning.  Present cross-node conflicts as separate calls (the DES
+    analogue: one latch scope per client RMW); duplicate (node, line)
+    slots within a call must carry group-total bytes on every slot
+    (write coalescing serializes to the LAST slot's payload — see
+    kvpool's token splice).
+
+    Returns ``(state', versions[R], data[R, W], rounds_used,
+    all_served)`` where ``versions``/``data`` are the WRITE phase's
+    replies (the bytes the final versions name)."""
+    node_id = jnp.asarray(node_id, jnp.int32)
+    line = jnp.asarray(line, jnp.int32)
+    # modify is a static arg: a fresh callable per call retraces, so it
+    # belongs in the trace key or the TRACE_COUNTS guard tests go blind
+    _note_trace(("rmw", modify, n_nodes, line.shape[0], max_rounds,
+                 backend, "dirty" in state, payload_width(state)))
+    state, _, data, r1, ok1 = run_rounds(
+        state, node_id, line, jnp.zeros_like(line), None,
+        n_nodes=n_nodes, max_rounds=max_rounds, backend=backend)
+    new_data = jnp.asarray(modify(data, line, *operands), jnp.int32)
+    state, versions, data2, r2, ok2 = run_rounds(
+        state, node_id, line, jnp.ones_like(line), new_data,
+        n_nodes=n_nodes, max_rounds=max_rounds, backend=backend)
+    return (state, versions, data2, r1 + r2,
+            jnp.logical_and(ok1, ok2))
+
+
+def run_rmw_to_completion(state, node_id, line, modify, operands=(), *,
+                          n_nodes, max_rounds: int = 64,
+                          backend: str = "ref", mesh=None,
+                          axis: str = "shards",
+                          bucket_cap: int | None = None):
+    """Host-facing wrapper over :func:`run_rmw` mirroring
+    :func:`run_ops_to_completion`: returns ``(state, versions, rounds,
+    data)`` with host arrays and raises if the round bound was hit.
+
+    With ``mesh`` the fused RMW runs on the sharded plane
+    (:func:`repro.core.rounds.sharded.run_rmw_sharded`): op slots are
+    padded to the shard count and every operand is row-padded with
+    zeros alongside them — operands must therefore be ``[R, ...]``
+    row-aligned with the op slots, and ``modify`` must treat a
+    ``line = -1`` row as a no-op (its zero-padded operands are
+    garbage)."""
+    import numpy as np
+    if mesh is not None:
+        from .sharded import pad_ops, run_rmw_sharded
+        r = np.asarray(line).shape[0]
+        n_shards = mesh.shape[axis]
+        node_id, line, isw = pad_ops(node_id, line,
+                                     np.zeros(r, np.int32), n_shards)
+        pad = line.shape[0] - r
+        if pad:
+            operands = tuple(
+                np.concatenate(
+                    [np.asarray(op),
+                     np.zeros((pad,) + np.asarray(op).shape[1:],
+                              np.asarray(op).dtype)])
+                for op in operands)
+        state, versions, data, rounds, done = run_rmw_sharded(
+            state, node_id, line, tuple(operands), modify=modify,
+            mesh=mesh, axis=axis, n_nodes=n_nodes, max_rounds=max_rounds,
+            bucket_cap=bucket_cap, backend=backend)
+        versions = versions[:r]
+        data = data[:r]
+    else:
+        state, versions, data, rounds, done = run_rmw(
+            state, node_id, line, tuple(operands), modify=modify,
+            n_nodes=n_nodes, max_rounds=max_rounds, backend=backend)
+    if not bool(done):
+        raise RuntimeError(f"RMW ops not served after {max_rounds} "
+                           f"rounds per phase")
+    return state, np.asarray(versions), int(rounds), np.asarray(data)
+
+
 def run_ops_to_completion(state, node_id, line, is_write, wdata=None, *,
                           n_nodes, max_rounds: int = 64,
                           backend: str = "ref", mesh=None,

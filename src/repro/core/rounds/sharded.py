@@ -312,6 +312,39 @@ def run_rounds_sharded(state, node_id, line, is_write, wdata=None, *,
     )(state, node_id, line, is_write, wdata)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("modify", "mesh", "axis", "n_nodes",
+                              "max_rounds", "bucket_cap", "backend"))
+def run_rmw_sharded(state, node_id, line, operands=(), *, modify, mesh,
+                    axis: str = "shards", n_nodes: int,
+                    max_rounds: int = 64, bucket_cap: int | None = None,
+                    backend: str = "ref"):
+    """Sharded mirror of :func:`repro.core.rounds.driver.run_rmw`: the
+    coherent read-modify-write's two fused spin loops (S-grant read,
+    ``modify``, S->X upgrade write) run back to back inside ONE jit
+    call, each crossing the mesh through the usual two all_to_alls per
+    round.  ``modify(data, line, *operands)`` runs replicated between
+    the phases on the gathered ``[R, W]`` reply bytes.  Same return
+    contract as :func:`run_rounds_sharded`, with the write phase's
+    versions/bytes."""
+    node_id = jnp.asarray(node_id, jnp.int32)
+    line = jnp.asarray(line, jnp.int32)
+    _note_trace(("rmw_sharded", modify, mesh.shape[axis], n_nodes,
+                 state["words"].shape[0], line.shape[0], bucket_cap,
+                 backend, "dirty" in state, st.payload_width(state)))
+    state, _, data, r1, ok1 = run_rounds_sharded(
+        state, node_id, line, jnp.zeros_like(line), None, mesh=mesh,
+        axis=axis, n_nodes=n_nodes, max_rounds=max_rounds,
+        bucket_cap=bucket_cap, backend=backend)
+    new_data = jnp.asarray(modify(data, line, *operands), jnp.int32)
+    state, versions, data2, r2, ok2 = run_rounds_sharded(
+        state, node_id, line, jnp.ones_like(line), new_data, mesh=mesh,
+        axis=axis, n_nodes=n_nodes, max_rounds=max_rounds,
+        bucket_cap=bucket_cap, backend=backend)
+    return (state, versions, data2, r1 + r2,
+            jnp.logical_and(ok1, ok2))
+
+
 # --------------------------------------------------------------- eviction
 
 @functools.partial(

@@ -1,7 +1,8 @@
 # Disaggregated-shared-memory data plane: typed addresses (shared with
 # the DES facade — repro.core.GAddr) and the SELCC-coherent KV-page pool.
-from .address import GAddr, GlobalAddress, as_gaddr, home_of
+from .address import (GAddr, GlobalAddress, LineAllocator, as_gaddr,
+                      home_of)
 from .kvpool import KVPoolConfig, SELCCKVPool
 
-__all__ = ["GAddr", "GlobalAddress", "as_gaddr", "home_of",
-           "KVPoolConfig", "SELCCKVPool"]
+__all__ = ["GAddr", "GlobalAddress", "LineAllocator", "as_gaddr",
+           "home_of", "KVPoolConfig", "SELCCKVPool"]

@@ -169,6 +169,38 @@ def decode_kv(data, cfg: KVPoolConfig):
     return dec(data[..., :half]), dec(data[..., half:])
 
 
+@functools.lru_cache(maxsize=None)
+def _append_splice(cfg: KVPoolConfig):
+    """The rounds-plane append's token splice as a ``run_rmw`` lane
+    transform: decode the freshly-read page bytes, land every token of
+    the batch on its page (later slots winning — the engine serializes
+    a coalesced write group to its LAST slot's payload, so EVERY slot
+    of a duplicate-page group must carry the group total), re-encode.
+    Cached per config so repeated appends of one shape share one jit
+    trace (``rounds.TRACE_COUNTS`` proves it).  A ``line = -1`` row is
+    padding and keeps its (zero) bytes."""
+    def modify(data, line, offsets, k_new, v_new):
+        k_pg, v_pg = decode_kv(data, cfg)          # [B, ps, Hkv, hd]
+        b = line.shape[0]
+        tok = jnp.arange(b)
+        match = jnp.logical_and(line[:, None] == line[None, :],
+                                (line >= 0)[:, None])     # [tok, row]
+        oh = offsets[:, None] == jnp.arange(cfg.page_size)[None, :]
+        win = jnp.max(jnp.where(
+            jnp.logical_and(match[:, :, None], oh[:, None, :]),
+            tok[:, None, None], -1), axis=0)              # [B, ps]
+        keep = (win >= 0)[..., None, None]
+        sel = jnp.maximum(win, 0)
+        k_pg = jnp.where(keep,
+                         jnp.asarray(k_new).astype(k_pg.dtype)[sel],
+                         k_pg)
+        v_pg = jnp.where(keep,
+                         jnp.asarray(v_new).astype(v_pg.dtype)[sel],
+                         v_pg)
+        return encode_kv(k_pg, v_pg, cfg)
+    return modify
+
+
 # ---------------------------------------------------------------- appends
 
 @functools.partial(jax.jit, static_argnames=("cfg", "backend"))
@@ -461,34 +493,21 @@ class SELCCKVPool:
                                       jnp.asarray(offsets), k_new, v_new,
                                       cfg=self.cfg)
             return
-        # Rounds-plane append: a coherent read-modify-write.  1. read
-        # ops take the S grant and return protocol-fresh page bytes;
+        # Rounds-plane append: ONE fused coherent read-modify-write
+        # (rounds.run_rmw) — the S-grant read, the token splice
+        # (_append_splice, on device between the phases), and the S->X
+        # upgrade write all inside a single jitted rounds call.
+        # Pre-fuse this was a host-side two-phase: a read rounds call,
+        # a numpy splice, and a write rounds call — two dispatches and
+        # a full host round trip per appended batch.
+        from ..core import rounds
         pages = np.asarray(pages, np.int32)
         offsets = np.asarray(offsets, np.int32)
         node = np.full(pages.shape, replica, np.int32)
-        width = page_lanes(self.cfg)
-        _, data = self._plane_ops(node, pages, np.zeros_like(pages),
-                                  np.zeros((pages.shape[0], width),
-                                           np.int32))
-        k_pg, v_pg = decode_kv(data, self.cfg)    # [B, ps, Hkv, hd]
-        # 2. splice ALL of the batch's tokens for each op's page, later
-        # slots winning — the engine serializes a coalesced group to its
-        # LAST write's payload, so every slot must carry the group total
-        t_idx = np.arange(pages.shape[0])
-        match = np.logical_and(pages[:, None] == pages[None, :],
-                               (pages >= 0)[:, None])       # [tok, row]
-        oh = offsets[:, None] == np.arange(self.cfg.page_size)[None, :]
-        win = np.where(match[:, :, None] & oh[:, None, :],
-                       t_idx[:, None, None], -1).max(axis=0)  # [B, ps]
-        sel = jnp.asarray(np.maximum(win, 0))
-        keep = jnp.asarray(win >= 0)[..., None, None]
-        k_pg = jnp.where(keep, jnp.asarray(k_new).astype(k_pg.dtype)[sel],
-                         k_pg)
-        v_pg = jnp.where(keep, jnp.asarray(v_new).astype(v_pg.dtype)[sel],
-                         v_pg)
-        # 3. write ops land the bytes through the S->X upgrade path
-        self._plane_ops(node, pages, np.ones_like(pages),
-                        np.asarray(encode_kv(k_pg, v_pg, self.cfg)))
+        self.rounds_state, _, _, _ = rounds.run_rmw_to_completion(
+            self.rounds_state, node, pages, _append_splice(self.cfg),
+            (offsets, np.asarray(k_new), np.asarray(v_new)),
+            n_nodes=self.cfg.n_replicas, mesh=self.mesh, axis=self.axis)
 
     def read(self, replica: int, pages):
         if self.rounds_state is None:

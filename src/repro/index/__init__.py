@@ -1,0 +1,13 @@
+"""Device-resident index structures served from the rounds payload plane.
+
+The paper's flagship workload (Sec. 8.1, Fig. 10) — a concurrent B-link
+tree over the SELCC abstraction — realized directly on the device
+coherence engine: tree nodes are GCL lines whose payload lanes carry a
+fixed node codec, descents are batched S-latch read rounds, and leaf
+inserts are fused coherent read-modify-writes (``rounds.run_rmw``).
+"""
+
+from .codec import NodeCodec
+from .tree import DeviceBTree
+
+__all__ = ["DeviceBTree", "NodeCodec"]

@@ -1,0 +1,203 @@
+"""Fixed node codec: one B-link tree node per GCL payload line.
+
+A tree node serializes into the line's ``payload_width`` int32 lanes —
+the same ``mem_data``/``cache_data`` plane kvpool bitcasts KV pages
+into, so the index rides the rounds engine's fetch-on-grant /
+write-apply / dirty-flush machinery with zero index-specific protocol
+code.  Lane layout (``W = 2 * (fanout + 1) + 6``)::
+
+    lane 0              leaf flag (1 = leaf, 0 = internal)
+    lane 1              nkeys
+    lane 2              right-link line (-1 = rightmost at this level)
+    lane 3              has_high (1 = a high key is present)
+    lane 4              high key (valid iff has_high) — Lehman-Yao: a
+                        descent holding key >= high follows the right
+                        link instead of trusting this node
+    lanes 5 .. 5+C-1    keys, ascending (C = fanout + 1: one overflow
+                        slot so an insert lands BEFORE the split)
+    lanes 5+C .. 5+2C   vals — a leaf uses slots 0..nkeys-1 for
+                        values, an internal node slots 0..nkeys for
+                        child lines
+
+Keys and values are int32 (the YCSB-shaped key/value space of the
+Fig. 10 sweep); child pointers are flat line indices, identical on the
+flat and mesh-sharded planes.
+
+The in-place insert runs ON DEVICE between the two phases of the fused
+read-modify-write (:func:`repro.core.rounds.run_rmw`):
+:func:`insert_modify` builds the jitted lane transform for a codec
+geometry and caches it per fanout, so repeated RMW batches of one
+shape reuse one trace (``rounds.TRACE_COUNTS`` proves it).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+LEAF, NKEYS, RIGHT, HAS_HIGH, HIGH = 0, 1, 2, 3, 4
+KEYS_OFF = 5
+
+
+@dataclass
+class DecodedNode:
+    """Host-side view of one node line (numpy decode)."""
+    leaf: bool
+    keys: list = field(default_factory=list)
+    vals: list = field(default_factory=list)   # values or child lines
+    right: int = -1
+    high: int | None = None
+
+    @property
+    def nkeys(self) -> int:
+        return len(self.keys)
+
+
+@dataclass(frozen=True)
+class NodeCodec:
+    """Geometry of the node <-> lane mapping for one fanout."""
+    fanout: int
+
+    @property
+    def cap(self) -> int:
+        """Key slots per node: fanout + 1 (one overflow slot — a node
+        holds at most ``fanout`` keys between batches; the extra slot
+        absorbs the insert that triggers the split)."""
+        return self.fanout + 1
+
+    @property
+    def vals_off(self) -> int:
+        return KEYS_OFF + self.cap
+
+    @property
+    def width(self) -> int:
+        """Payload lanes per line (``vals`` has cap + 1 slots: an
+        internal node carries nkeys + 1 children)."""
+        return self.vals_off + self.cap + 1
+
+    # ------------------------------------------------------------ encode
+    def encode(self, *, leaf: bool, keys=(), vals=(), right: int = -1,
+               high: int | None = None) -> np.ndarray:
+        keys = list(keys)
+        vals = list(vals)
+        if len(keys) > self.cap:
+            raise ValueError(f"{len(keys)} keys exceed cap {self.cap}")
+        want = len(keys) if leaf else (len(keys) + 1 if keys or vals
+                                       else 0)
+        if len(vals) != want:
+            raise ValueError(
+                f"{'leaf' if leaf else 'internal'} node with "
+                f"{len(keys)} keys needs {want} vals, got {len(vals)}")
+        lanes = np.zeros(self.width, np.int32)
+        lanes[LEAF] = 1 if leaf else 0
+        lanes[NKEYS] = len(keys)
+        lanes[RIGHT] = right
+        lanes[HAS_HIGH] = 0 if high is None else 1
+        lanes[HIGH] = 0 if high is None else high
+        lanes[KEYS_OFF:KEYS_OFF + len(keys)] = keys
+        lanes[self.vals_off:self.vals_off + len(vals)] = vals
+        return lanes
+
+    # ------------------------------------------------------------ decode
+    def decode(self, lanes) -> DecodedNode:
+        lanes = np.asarray(lanes)
+        nk = int(lanes[NKEYS])
+        leaf = bool(lanes[LEAF])
+        nv = nk if leaf else (nk + 1 if nk else 0)
+        return DecodedNode(
+            leaf=leaf,
+            keys=[int(k) for k in lanes[KEYS_OFF:KEYS_OFF + nk]],
+            vals=[int(v) for v in
+                  lanes[self.vals_off:self.vals_off + nv]],
+            right=int(lanes[RIGHT]),
+            high=int(lanes[HIGH]) if lanes[HAS_HIGH] else None)
+
+    # -------------------------------------------- batch (numpy) accessors
+    def fields(self, data: np.ndarray) -> dict:
+        """Vectorized field view of a ``[B, W]`` batch of node lines —
+        the descent loop's per-level decode."""
+        data = np.asarray(data)
+        return {
+            "leaf": data[:, LEAF] == 1,
+            "nkeys": data[:, NKEYS],
+            "right": data[:, RIGHT],
+            "has_high": data[:, HAS_HIGH] == 1,
+            "high": data[:, HIGH],
+            "keys": data[:, KEYS_OFF:KEYS_OFF + self.cap],
+            "vals": data[:, self.vals_off:self.vals_off + self.cap + 1],
+        }
+
+    @property
+    def insert_modify(self):
+        """The jitted RMW lane transform for this geometry (cached per
+        fanout so every insert batch of one shape shares one trace)."""
+        return insert_modify(self.fanout)
+
+
+@functools.lru_cache(maxsize=None)
+def insert_modify(fanout: int):
+    """Build ``modify(data, line, keys, vals)`` for ``run_rmw``: insert
+    one (key, val) per slot into the slot's freshly-read node lanes, on
+    device, between the RMW's S-grant read and S->X upgrade write.
+
+    Semantics mirror the host ``BLinkTree``: a leaf replaces the value
+    when the key exists, else shifts and inserts at the sorted position
+    (``count(keys < key)``); an internal node inserts the separator at
+    ``count(keys <= sep)`` with the new child at ``pos + 1``.  A
+    ``line = -1`` row is a no-op (its operands are padding garbage).
+    Callers guarantee at most ONE slot per line per batch — duplicate
+    (node, line) write slots would coalesce to the last slot's payload.
+    """
+    import jax.numpy as jnp
+
+    codec = NodeCodec(fanout)
+    c, v0, vcap = codec.cap, codec.vals_off, codec.cap + 1
+
+    def modify(data, line, keys, vals):
+        data = jnp.asarray(data, jnp.int32)   # host baseline passes numpy
+        line = jnp.asarray(line, jnp.int32)
+        keys = jnp.asarray(keys, jnp.int32)
+        vals = jnp.asarray(vals, jnp.int32)
+        valid = line >= 0
+        leaf = data[:, LEAF] == 1
+        nk = data[:, NKEYS]
+        karr = data[:, KEYS_OFF:KEYS_OFF + c]          # [B, C]
+        varr = data[:, v0:v0 + vcap]                   # [B, C+1]
+        j = jnp.arange(c)
+        jv = jnp.arange(vcap)
+        occ = j[None, :] < nk[:, None]
+        lt = jnp.logical_and(occ, karr < keys[:, None])
+        le = jnp.logical_and(occ, karr <= keys[:, None])
+        eq = jnp.logical_and(occ, karr == keys[:, None])
+        exists = jnp.logical_and(leaf, jnp.any(eq, axis=1))
+        # leaf inserts at count(keys < key); internal separator inserts
+        # at count(keys <= sep) — the host _child_index rule
+        pos = jnp.where(leaf, jnp.sum(lt, axis=1),
+                        jnp.sum(le, axis=1)).astype(jnp.int32)
+        # shifted key row: slots < pos keep, slot pos takes the key,
+        # slots > pos pull from the left neighbour
+        prev_k = jnp.concatenate([karr[:, :1], karr[:, :-1]], axis=1)
+        ins_k = jnp.where(j[None, :] < pos[:, None], karr,
+                          jnp.where(j[None, :] == pos[:, None],
+                                    keys[:, None], prev_k))
+        # value row: a leaf's value rides at pos, an internal child at
+        # pos + 1 (slots <= pos keep — the left child stays in place)
+        vpos = jnp.where(leaf, pos, pos + 1)
+        prev_v = jnp.concatenate([varr[:, :1], varr[:, :-1]], axis=1)
+        ins_v = jnp.where(jv[None, :] < vpos[:, None], varr,
+                          jnp.where(jv[None, :] == vpos[:, None],
+                                    vals[:, None], prev_v))
+        # existing leaf key: replace the value in place, no shift
+        rep_v = jnp.where(
+            jnp.pad(eq, ((0, 0), (0, 1))), vals[:, None], varr)
+        new_k = jnp.where(exists[:, None], karr, ins_k)
+        new_v = jnp.where(exists[:, None], rep_v, ins_v)
+        new_nk = nk + jnp.where(exists, 0, 1).astype(nk.dtype)
+        out = data.at[:, NKEYS].set(new_nk)
+        out = out.at[:, KEYS_OFF:KEYS_OFF + c].set(new_k)
+        out = out.at[:, v0:v0 + vcap].set(new_v)
+        return jnp.where(valid[:, None], out, data)
+
+    return modify

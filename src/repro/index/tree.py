@@ -1,0 +1,536 @@
+"""DeviceBTree — a concurrent B-link tree served from the rounds plane.
+
+The paper's flagship application (Sec. 8.1, Fig. 10) on our fastest
+plane: every tree node is one GCL line of a payload-plane round state
+(flat ``rounds.run_rounds`` or mesh-sharded ``run_rounds_sharded`` —
+nodes stripe ``line % n_shards`` like every other line), and every
+structural rule of the host ``apps/btree.BLinkTree`` maps onto a
+coherence-plane op sequence:
+
+* **descent** — one fused device step per level: the whole key batch
+  presents S-latch read ops for its current (heterogeneous) lines in
+  ONE ``run_rounds`` call, the engine serves grants + payload bytes
+  inside its fused spin loop, and the host computes each key's next
+  line (child, or right-link hop when ``key >= high`` — the Lehman-Yao
+  recovery) from the returned lanes.  The only host sync per level is
+  the level loop itself;
+* **leaf insert** — a fused coherent read-modify-write
+  (:func:`repro.core.rounds.run_rmw`): S-grant read, on-device sorted
+  insert into the node lanes (``codec.insert_modify``), S->X upgrade
+  write — one jit call, zero host syncs between the phases;
+* **split** — a multi-line allocate-publish-link sequence: the sibling
+  line is allocated (``dsm.LineAllocator``) and PUBLISHED with its
+  full image before the overfull node is re-written to link to it, so
+  a concurrent reader that lands on the old node either sees the
+  pre-split image or a high key routing it right — the Lehman-Yao
+  invariant, now enforced by coherence-plane write ordering;
+* **metadata** — line 0 holds the tree's root/height/fanout/allocator
+  top, updated through ordinary coherent writes, so
+  :meth:`DeviceBTree.open` can adopt an existing plane with no side
+  channel.
+
+``driver="host"`` replays every rounds batch through a host-synced
+per-round loop over ``coherence_round`` (and the insert RMW as the
+pre-fuse two-phase read/modify/write) — the baseline
+``benchmarks/fig10_btree_rounds.py`` measures the fused plane against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import rounds
+from ..core.rounds.engine import coherence_round
+from ..dsm.address import LineAllocator
+from .codec import DecodedNode, NodeCodec
+
+META_LINE = 0
+META_MAGIC = 0x0B713EE   # "B(link)tree" plane marker
+M_MAGIC, M_ROOT, M_FANOUT, M_HEIGHT, M_TOP = 0, 1, 2, 3, 4
+_MAX_LINK_HOPS = 64      # safety bound on level loops and link walks
+
+
+class DeviceBTree:
+    """One B-link tree bound to a rounds payload plane.
+
+    All public entry points are BATCHED and keyed by the coherence
+    ``node`` performing them (default 0) — concurrent clients are
+    distinct nodes whose latch traffic contends through the engine
+    exactly like the DES tree's per-node workers."""
+
+    def __init__(self, state, codec: NodeCodec, alloc: LineAllocator, *,
+                 mesh=None, axis: str = "shards", n_nodes: int,
+                 backend: str = "ref", max_rounds: int = 128,
+                 driver: str = "fused"):
+        if driver not in ("fused", "host"):
+            raise ValueError(f"unknown driver {driver!r}")
+        if driver == "host" and mesh is not None:
+            raise ValueError("the host-synced baseline driver is "
+                             "flat-plane only")
+        self.state = state
+        self.codec = codec
+        self.alloc = alloc
+        self.mesh = mesh
+        self.axis = axis
+        self.n_nodes = n_nodes
+        self.backend = backend
+        self.max_rounds = max_rounds
+        self.driver = driver
+        self.root = -1
+        self.height = 0
+        self.stats = {"splits": 0, "link_hops": 0, "level_steps": 0,
+                      "rmw_steps": 0}
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def create(cls, n_nodes: int = 4, n_lines: int = 256, *,
+               fanout: int = 8, write_back: bool = False, mesh=None,
+               axis: str = "shards", backend: str = "ref",
+               max_rounds: int = 128, driver: str = "fused",
+               node: int = 0) -> "DeviceBTree":
+        """Fresh tree on a fresh plane: builds the payload-plane state
+        (flat, or mesh-sharded when ``mesh`` is given), reserves line 0
+        for metadata, and publishes an empty root leaf."""
+        codec = NodeCodec(fanout)
+        if mesh is None:
+            state = rounds.make_state(n_nodes, n_lines,
+                                      write_back=write_back,
+                                      payload_width=codec.width)
+        else:
+            state = rounds.make_sharded_state(n_nodes, n_lines, mesh,
+                                              axis,
+                                              write_back=write_back,
+                                              payload_width=codec.width)
+        n_lines = state["words"].shape[0]      # sharded: rounded up
+        alloc = LineAllocator(n_lines, start=META_LINE + 1)
+        tree = cls(state, codec, alloc, mesh=mesh, axis=axis,
+                   n_nodes=n_nodes, backend=backend,
+                   max_rounds=max_rounds, driver=driver)
+        tree.root = int(alloc.alloc(1)[0])
+        tree.height = 1
+        tree._write_lines([tree.root], [codec.encode(leaf=True)], node)
+        tree._write_meta(node)
+        return tree
+
+    @classmethod
+    def open(cls, state, *, mesh=None, axis: str = "shards",
+             n_nodes: int | None = None, backend: str = "ref",
+             max_rounds: int = 128, driver: str = "fused",
+             node: int = 0) -> "DeviceBTree":
+        """Adopt an existing plane: reads the metadata line through a
+        real coherence op and reconstructs codec + allocator from it —
+        the state is the whole tree, no side channel."""
+        if n_nodes is None:
+            n_nodes = state["cache_state"].shape[0]
+        width = rounds.payload_width(state)
+        if not width:
+            raise ValueError("state has no payload plane "
+                             "(payload_width=0) — not a tree plane")
+        tree = cls(state, NodeCodec(1), LineAllocator(1), mesh=mesh,
+                   axis=axis, n_nodes=n_nodes, backend=backend,
+                   max_rounds=max_rounds, driver=driver)
+        _, meta = tree._ops(np.full(1, node, np.int32),
+                            np.full(1, META_LINE, np.int32),
+                            np.zeros(1, np.int32))
+        meta = meta[0]
+        if int(meta[M_MAGIC]) != META_MAGIC:
+            raise ValueError("line 0 carries no DeviceBTree metadata "
+                             f"(magic {int(meta[M_MAGIC]):#x})")
+        codec = NodeCodec(int(meta[M_FANOUT]))
+        if codec.width != width:
+            raise ValueError(
+                f"metadata fanout {codec.fanout} needs payload width "
+                f"{codec.width}, state has {width}")
+        tree.codec = codec
+        tree.root = int(meta[M_ROOT])
+        tree.height = int(meta[M_HEIGHT])
+        tree.alloc = LineAllocator(state["words"].shape[0],
+                                   start=META_LINE + 1,
+                                   top=int(meta[M_TOP]))
+        return tree
+
+    # --------------------------------------------------------- plane I/O
+    def _ops(self, node, line, isw, wdata=None):
+        """One op batch through the plane; returns (versions, data)."""
+        width = rounds.payload_width(self.state)
+        if wdata is None:
+            wdata = np.zeros((len(line), width), np.int32)
+        if self.driver == "host":
+            return self._ops_host(node, line, isw, wdata)
+        self.state, vers, _, data = rounds.run_ops_to_completion(
+            self.state, node, line, isw, wdata, n_nodes=self.n_nodes,
+            max_rounds=self.max_rounds, backend=self.backend,
+            mesh=self.mesh, axis=self.axis)
+        return vers, data
+
+    def _ops_host(self, node, line, isw, wdata):
+        """The pre-fuse baseline: re-dispatch ``coherence_round`` from a
+        host loop with a sync after EVERY round."""
+        node = np.asarray(node, np.int32)
+        pending = np.asarray(line, np.int32).copy()
+        isw = np.asarray(isw, np.int32)
+        versions = np.zeros(pending.shape, np.int32)
+        data = np.zeros(wdata.shape, np.int32)
+        for _ in range(self.max_rounds):
+            if not (pending >= 0).any():
+                break
+            self.state, served, ver, d = coherence_round(
+                self.state, node, pending, isw, wdata,
+                n_nodes=self.n_nodes, backend=self.backend)
+            served = np.asarray(served)            # the per-round sync
+            versions = np.where(served, np.asarray(ver), versions)
+            data = np.where(served[:, None], np.asarray(d), data)
+            pending = np.where(served, -1, pending)
+        if (pending >= 0).any():
+            raise RuntimeError(
+                f"ops not served after {self.max_rounds} rounds")
+        return versions, data
+
+    def _rmw_insert(self, node, line, keys, vals):
+        """Fused coherent read-modify-write of one (key, val) per slot
+        (unique lines per batch); returns the written node bytes.
+        Slots are padded to the next power of two so the per-leaf
+        sub-batching of ``insert_batch`` (whose size is data-dependent)
+        hits a bounded set of jit shapes instead of one per size."""
+        n = len(line)
+        cap = 1 << max(n - 1, 0).bit_length()
+        if cap != n:
+            pad = cap - n
+            node = np.concatenate([node, np.zeros(pad, np.int32)])
+            line = np.concatenate([line, np.full(pad, -1, np.int32)])
+            keys = np.concatenate([keys, np.zeros(pad, np.int32)])
+            vals = np.concatenate([vals, np.zeros(pad, np.int32)])
+        self.stats["rmw_steps"] += 1
+        if self.driver == "host":
+            # two-phase baseline: host-synced read, host-dispatched
+            # modify, host-synced write — what run_rmw fuses away
+            _, cur = self._ops_host(
+                node, line, np.zeros_like(line),
+                np.zeros((len(line), self.codec.width), np.int32))
+            new = np.asarray(self.codec.insert_modify(
+                np.asarray(cur, np.int32), np.asarray(line, np.int32),
+                keys, vals))
+            _, _ = self._ops_host(node, line, np.ones_like(line), new)
+            return new
+        self.state, _, _, data = rounds.run_rmw_to_completion(
+            self.state, node, line, self.codec.insert_modify,
+            (np.asarray(keys, np.int32), np.asarray(vals, np.int32)),
+            n_nodes=self.n_nodes, max_rounds=self.max_rounds,
+            backend=self.backend, mesh=self.mesh, axis=self.axis)
+        return data
+
+    def _write_lines(self, lines, lane_rows, node: int):
+        """Coherent write ops publishing full node images (fresh lines
+        and re-links); one batch, heterogeneous lines."""
+        lines = np.asarray(lines, np.int32)
+        self._ops(np.full(lines.shape, node, np.int32), lines,
+                  np.ones(lines.shape, np.int32),
+                  np.asarray(lane_rows, np.int32))
+
+    def _write_meta(self, node: int) -> None:
+        lanes = np.zeros(self.codec.width, np.int32)
+        lanes[M_MAGIC] = META_MAGIC
+        lanes[M_ROOT] = self.root
+        lanes[M_FANOUT] = self.codec.fanout
+        lanes[M_HEIGHT] = self.height
+        lanes[M_TOP] = self.alloc.top
+        self._write_lines([META_LINE], [lanes], node)
+
+    def _read_lines(self, lines, node: int):
+        lines = np.asarray(lines, np.int32)
+        _, data = self._ops(np.full(lines.shape, node, np.int32), lines,
+                            np.zeros(lines.shape, np.int32))
+        return data
+
+    # ------------------------------------------------------------ descent
+    def _descend(self, keys, node: int, record_path: bool = False):
+        """Batched root-to-leaf walk: one fused rounds step per level,
+        right-link hops re-presented until every key rests on its leaf.
+        Returns (leaf_lines [B], leaf_lanes [B, W], paths) — padded to
+        the next power of two (callers slice), so data-dependent batch
+        sizes hit a bounded set of jit shapes."""
+        keys = np.asarray(keys, np.int32)
+        b = keys.shape[0]
+        cap = 1 << max(b - 1, 0).bit_length()
+        if cap != b:
+            keys = np.concatenate([keys, np.zeros(cap - b, np.int32)])
+        cur = np.full(cap, self.root, np.int32)
+        done = np.zeros(cap, bool)
+        done[b:] = True                      # pads never present an op
+        b = cap
+        lanes = np.zeros((b, self.codec.width), np.int32)
+        paths: list = [[] for _ in range(b)] if record_path else []
+        for _ in range(self.height + _MAX_LINK_HOPS):
+            if done.all():
+                break
+            self.stats["level_steps"] += 1  # one fused step per level
+            d = self._read_lines(np.where(done, -1, cur), node)
+            f = self.codec.fields(d)
+            hop = (~done & f["has_high"] & (keys >= f["high"])
+                   & (f["right"] >= 0))
+            at_leaf = ~done & ~hop & f["leaf"]
+            desc = ~done & ~hop & ~f["leaf"]
+            self.stats["link_hops"] += int(hop.sum())
+            # child index: count of keys <= key over the live slots
+            occ = np.arange(self.codec.cap)[None, :] < f["nkeys"][:, None]
+            ci = np.sum(occ & (f["keys"] <= keys[:, None]), axis=1)
+            child = f["vals"][np.arange(b), ci]
+            if record_path:
+                for i in np.flatnonzero(desc):
+                    paths[i].append(int(cur[i]))
+            lanes = np.where(at_leaf[:, None], d, lanes)
+            nxt = np.where(hop, f["right"], np.where(desc, child, cur))
+            done = done | at_leaf
+            cur = np.where(done, cur, nxt).astype(np.int32)
+        if not done.all():
+            raise RuntimeError("descent did not settle (broken links?)")
+        return cur, lanes, paths
+
+    # ------------------------------------------------------------- lookup
+    def lookup_batch(self, keys, node: int = 0):
+        """Batched point lookup.  Returns (values [B] int32, found [B]
+        bool) — a missing key reports found=False."""
+        keys = np.asarray(keys, np.int32)
+        b = keys.shape[0]
+        _, lanes, _ = self._descend(keys, node)
+        f = self.codec.fields(lanes[:b])
+        occ = np.arange(self.codec.cap)[None, :] < f["nkeys"][:, None]
+        eq = occ & (f["keys"] == keys[:, None])
+        found = eq.any(axis=1)
+        slot = np.argmax(eq, axis=1)
+        vals = f["vals"][np.arange(b), slot]
+        return np.where(found, vals, 0).astype(np.int32), found
+
+    # ------------------------------------------------------------- insert
+    def insert_batch(self, keys, vals, node: int = 0) -> None:
+        """Batched upsert: descend every key, then drive fused RMW
+        steps with at most one key per leaf per step (the engine's
+        write coalescing serializes duplicate (node, line) slots to the
+        LAST payload — distinct lines keep every insert exact), and
+        split oversized nodes between steps."""
+        keys = np.asarray(keys, np.int32)
+        vals = np.asarray(vals, np.int32)
+        b = keys.shape[0]
+        target, _, paths = self._descend(keys, node, record_path=True)
+        target = target[:b].copy()
+        paths = paths[:b]
+        pending = np.ones(b, bool)
+        while pending.any():
+            sel, seen = [], set()
+            for i in np.flatnonzero(pending):
+                if int(target[i]) not in seen:
+                    seen.add(int(target[i]))
+                    sel.append(i)
+            sel = np.asarray(sel)
+            written = self._rmw_insert(
+                np.full(sel.shape, node, np.int32), target[sel],
+                keys[sel], vals[sel])
+            pending[sel] = False
+            for j, i in enumerate(sel):
+                nd = self.codec.decode(written[j])
+                if nd.nkeys > self.codec.fanout:
+                    self._split(int(target[i]), nd, list(paths[i]),
+                                node, target, keys, pending)
+
+    def _split(self, line: int, nd: DecodedNode, path: list, node: int,
+               target=None, keys=None, pending=None) -> None:
+        """Allocate-publish-link split of an overfull node, recursing
+        into the parent.  Retargets still-pending same-batch inserts
+        that now belong to the new sibling."""
+        mid = nd.nkeys // 2
+        sep = nd.keys[mid]
+        if nd.leaf:
+            sib = DecodedNode(leaf=True, keys=nd.keys[mid:],
+                              vals=nd.vals[mid:], right=nd.right,
+                              high=nd.high)
+            left_keys, left_vals = nd.keys[:mid], nd.vals[:mid]
+        else:
+            sib = DecodedNode(leaf=False, keys=nd.keys[mid + 1:],
+                              vals=nd.vals[mid + 1:], right=nd.right,
+                              high=nd.high)
+            left_keys, left_vals = nd.keys[:mid], nd.vals[:mid + 1]
+        sib_line = int(self.alloc.alloc(1)[0])
+        # publish the fully-built sibling BEFORE the old node links to
+        # it (Lehman-Yao: readers see pre-split image or a high key)
+        self._write_lines(
+            [sib_line],
+            [self.codec.encode(leaf=sib.leaf, keys=sib.keys,
+                               vals=sib.vals, right=sib.right,
+                               high=sib.high)], node)
+        self._write_lines(
+            [line],
+            [self.codec.encode(leaf=nd.leaf, keys=left_keys,
+                               vals=left_vals, right=sib_line,
+                               high=sep)], node)
+        self.stats["splits"] += 1
+        if pending is not None:
+            move = pending & (target == line) & (keys >= sep)
+            target[move] = sib_line
+        if line == self.root:
+            new_root = int(self.alloc.alloc(1)[0])
+            self._write_lines(
+                [new_root],
+                [self.codec.encode(leaf=False, keys=[sep],
+                                   vals=[line, sib_line])], node)
+            self.root = new_root
+            self.height += 1
+        else:
+            self._insert_parent(path, line, sep, sib_line, node,
+                                target, keys, pending)
+        self._write_meta(node)
+
+    def _insert_parent(self, path: list, child: int, sep: int,
+                       sib_line: int, node: int, target, keys,
+                       pending) -> None:
+        parent = path[-1] if path else self._find_parent(child, sep,
+                                                         node)
+        above = path[:-1]
+        # the recorded parent may itself have split since the descent:
+        # walk its right links until sep is in range (Lehman-Yao)
+        for _ in range(_MAX_LINK_HOPS):
+            nd = self.codec.decode(self._read_lines([parent], node)[0])
+            if nd.high is not None and sep >= nd.high and nd.right >= 0:
+                parent = int(nd.right)
+                self.stats["link_hops"] += 1
+                continue
+            break
+        else:
+            raise RuntimeError("parent link walk did not settle")
+        written = self._rmw_insert(np.full(1, node, np.int32),
+                                   np.asarray([parent], np.int32),
+                                   np.asarray([sep], np.int32),
+                                   np.asarray([sib_line], np.int32))
+        nd = self.codec.decode(written[0])
+        if nd.nkeys > self.codec.fanout:
+            self._split(parent, nd, above, node, target, keys, pending)
+
+    def _find_parent(self, child: int, sep: int, node: int) -> int:
+        """Descend from the CURRENT root to the node whose children
+        contain ``child`` — the fallback when a split's recorded path
+        predates a root change within the same batch."""
+        cur = self.root
+        for _ in range(self.height + _MAX_LINK_HOPS):
+            nd = self.codec.decode(self._read_lines([cur], node)[0])
+            if nd.high is not None and sep >= nd.high and nd.right >= 0:
+                cur = int(nd.right)
+                continue
+            if nd.leaf:
+                break
+            if child in nd.vals:
+                return cur
+            cur = int(nd.vals[sum(k <= sep for k in nd.keys)])
+        raise RuntimeError(f"no parent found for line {child}")
+
+    # --------------------------------------------------------------- scan
+    def range_scan(self, key: int, count: int, node: int = 0):
+        """``count`` (key, value) pairs from ``key`` upward, following
+        the leaf right-link chain — one coherent read per hop."""
+        _, lanes, _ = self._descend(np.asarray([key], np.int32), node)
+        nd = self.codec.decode(lanes[0])
+        out: list = []
+        for _ in range(_MAX_LINK_HOPS + count):
+            for k, v in zip(nd.keys, nd.vals):
+                if k >= key and len(out) < count:
+                    out.append((int(k), int(v)))
+            if len(out) >= count or nd.right < 0:
+                break
+            nd = self.codec.decode(
+                self._read_lines([nd.right], node)[0])
+        return out
+
+    # ---------------------------------------------------------- integrity
+    def _image(self, state=None) -> np.ndarray:
+        """Protocol-fresh per-line bytes from the materialized state:
+        memory image, with dirty M holders' cache_data substituted (the
+        flush source of truth under write-back).  ``state`` accepts an
+        already-unsharded state so one materialization serves both this
+        and the invariant checks."""
+        if state is None:
+            state = self.state
+            if self.mesh is not None:
+                state = rounds.unshard_state(state, self.mesh, self.axis)
+        img = np.asarray(state["mem_data"]).copy()
+        if "dirty" in state:
+            dirty = np.asarray(state["dirty"])          # [N, L]
+            cdata = np.asarray(state["cache_data"])     # [N, L, W]
+            for n, line in zip(*np.nonzero(dirty)):
+                img[line] = cdata[n, line]
+        return img
+
+    def items(self) -> list:
+        """All (key, value) pairs via the leaf chain of the current
+        image — the tree's key->value image for differential tests."""
+        img = self._image()
+        cur, nd = self.root, None
+        for _ in range(self.height + _MAX_LINK_HOPS):
+            nd = self.codec.decode(img[cur])
+            if nd.leaf:
+                break
+            cur = int(nd.vals[0])
+        out: list = []
+        for _ in range(self.alloc.top + 1):
+            out.extend(zip(nd.keys, nd.vals))
+            if nd.right < 0:
+                return out
+            cur = nd.right
+            nd = self.codec.decode(img[cur])
+        raise AssertionError("leaf chain does not terminate")
+
+    def check_invariants(self) -> None:
+        """Coherence invariants (incl. data/version agreement) on the
+        plane PLUS the B-link structural invariants on the image."""
+        state = self.state
+        if self.mesh is not None:
+            state = rounds.unshard_state(state, self.mesh, self.axis)
+        rounds.check_invariants(state)
+        img = self._image(state)
+        meta = img[META_LINE]
+        assert int(meta[M_MAGIC]) == META_MAGIC
+        assert int(meta[M_ROOT]) == self.root
+        assert int(meta[M_TOP]) == self.alloc.top
+        # level-by-level walk: every node sorted, within capacity,
+        # bounded by its high key; levels chain left->right; all leaves
+        # at one depth; the leaf chain is globally sorted
+        level_head, depth, seen = self.root, 0, set()
+        while True:
+            depth += 1
+            assert depth <= self.height, "deeper than recorded height"
+            cur = level_head
+            is_leaf = None
+            prev_high = None
+            for _ in range(self.alloc.top + 1):
+                assert META_LINE < cur < self.alloc.top, \
+                    f"line {cur} outside the allocated range"
+                assert cur not in seen, f"line {cur} reached twice"
+                seen.add(cur)
+                nd = self.codec.decode(img[cur])
+                if is_leaf is None:
+                    is_leaf = nd.leaf
+                assert nd.leaf == is_leaf, "mixed level"
+                assert nd.nkeys <= self.codec.fanout, \
+                    "overfull node between batches"
+                ks = np.asarray(nd.keys)
+                assert (np.diff(ks) > 0).all(), "unsorted node keys"
+                if not nd.leaf:
+                    assert len(nd.vals) == nd.nkeys + 1
+                    assert nd.nkeys >= 1, "empty internal node"
+                if nd.high is not None:
+                    assert nd.right >= 0, "high key without right link"
+                    assert (ks < nd.high).all(), "key >= high"
+                if prev_high is not None and nd.nkeys:
+                    assert ks[0] >= prev_high, \
+                        "right sibling underruns the separator"
+                prev_high = nd.high
+                if nd.right < 0:
+                    assert nd.high is None, "rightmost node with high"
+                    break
+                cur = int(nd.right)
+            else:
+                raise AssertionError("level chain does not terminate")
+            if is_leaf:
+                break
+            level_head = int(self.codec.decode(img[level_head]).vals[0])
+        assert depth == self.height, "height metadata diverged"
+        keys = [k for k, _ in self.items()]
+        assert (np.diff(np.asarray(keys)) > 0).all() if len(keys) > 1 \
+            else True, "leaf chain not globally sorted"

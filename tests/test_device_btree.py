@@ -1,0 +1,326 @@
+"""Device-resident B-link tree: codec, allocator, and THE differential.
+
+The acceptance chain replays one mixed lookup/insert/scan trace through
+three trees and demands identical per-op results and key->value images:
+
+* host ``apps/btree.BLinkTree`` (DES, selcc backend) vs the flat rounds
+  tree vs a 1-shard mesh rounds tree — in-process;
+* the flat rounds tree vs a REAL 4-shard rounds tree — in a subprocess
+  with ``--xla_force_host_platform_device_count=4`` (virtual devices
+  must exist before jax imports).
+
+Together the two legs pin host == flat == 1-shard == 4-shard.
+``DeviceBTree.check_invariants`` (coherence invariants incl.
+data/version agreement + the B-link structural walk) runs after every
+batch on every plane.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.apps.btree import BLinkTree
+from repro.core import ClusterConfig, SELCCConfig, SELCCLayer
+from repro.dsm import LineAllocator
+from repro.index import DeviceBTree, NodeCodec
+
+FANOUT = 4
+N_NODES = 3
+N_LINES = 256
+KEYSPACE = 2_000
+
+
+# ----------------------------------------------------------------- codec
+
+def test_codec_roundtrip_leaf_and_internal():
+    c = NodeCodec(4)
+    assert c.width == 2 * c.cap + 6
+    leaf = c.encode(leaf=True, keys=[3, 7, 9], vals=[30, 70, 90],
+                    right=12, high=11)
+    nd = c.decode(leaf)
+    assert (nd.leaf, nd.keys, nd.vals, nd.right, nd.high) == \
+        (True, [3, 7, 9], [30, 70, 90], 12, 11)
+    inner = c.encode(leaf=False, keys=[50], vals=[4, 9])
+    nd = c.decode(inner)
+    assert (nd.leaf, nd.keys, nd.vals, nd.right, nd.high) == \
+        (False, [50], [4, 9], -1, None)
+    with pytest.raises(ValueError):
+        c.encode(leaf=True, keys=[1, 2], vals=[1])      # vals mismatch
+    with pytest.raises(ValueError):
+        c.encode(leaf=False, keys=[1], vals=[1])        # needs 2 kids
+    with pytest.raises(ValueError):
+        c.encode(leaf=True, keys=list(range(c.cap + 1)),
+                 vals=list(range(c.cap + 1)))           # over capacity
+
+
+# ------------------------------------------------------- line allocator
+
+def test_line_allocator_raises_on_exhaustion():
+    a = LineAllocator(8, start=1)
+    got = a.alloc(7)
+    assert got.tolist() == list(range(1, 8))
+    with pytest.raises(ValueError, match="exhausted"):
+        a.alloc(1)
+    a.free(got[:2])
+    assert a.alloc(2).tolist() == got[:2].tolist()      # recycled
+    with pytest.raises(ValueError, match="exhausted"):
+        a.alloc(3)
+
+
+def test_line_allocator_rejects_double_free_and_foreign_lines():
+    a = LineAllocator(16, start=2)
+    lines = a.alloc(4)                                  # 2..5
+    a.free(lines[1])
+    with pytest.raises(ValueError, match="double-free"):
+        a.free(lines[1])
+    with pytest.raises(ValueError, match="never-allocated"):
+        a.free(9)                                       # beyond top
+    with pytest.raises(ValueError, match="never-allocated"):
+        a.free(0)                                       # reserved prefix
+    with pytest.raises(ValueError, match="never-allocated"):
+        a.free(-1)
+    # a recycled line can be freed again (it is live again)
+    again = a.alloc(1)
+    assert again.tolist() == [int(lines[1])]
+    a.free(again)
+
+
+def test_line_allocator_resume_from_recorded_top():
+    a = LineAllocator(32, start=1)
+    a.alloc(5)
+    b = LineAllocator(32, start=1, top=a.top)
+    assert b.alloc(1).tolist() == [6]
+    with pytest.raises(ValueError):
+        LineAllocator(8, start=1, top=9)
+
+
+# ------------------------------------------------------ the differential
+
+def make_trace(seed: int = 17, batches: int = 6):
+    """One deterministic mixed trace: (op, node, payload) tuples."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for b in range(batches):
+        node = int(rng.integers(N_NODES))
+        kind = ("insert", "insert", "lookup", "scan")[b % 4]
+        if kind == "insert":
+            ks = rng.integers(0, KEYSPACE, size=12)
+            vs = rng.integers(1, 1 << 20, size=12)
+            trace.append(("insert", node,
+                          [(int(k), int(v)) for k, v in zip(ks, vs)]))
+        elif kind == "lookup":
+            ks = rng.integers(0, KEYSPACE, size=10)
+            trace.append(("lookup", node, [int(k) for k in ks]))
+        else:
+            trace.append(("scan", node, int(rng.integers(0, KEYSPACE)),
+                          int(rng.integers(3, 12))))
+    return trace
+
+
+class HostOracle:
+    """The DES BLinkTree behind a batch interface matching DeviceBTree."""
+
+    def __init__(self, fanout: int = FANOUT):
+        self.layer = SELCCLayer(ClusterConfig(
+            n_compute=N_NODES, n_memory=2, threads_per_node=2,
+            selcc=SELCCConfig(cache_capacity=4096)))
+        self.trees = [BLinkTree(self.layer, n, fanout=fanout)
+                      for n in self.layer.nodes]
+
+    def _run(self, gen):
+        p = self.layer.env.process(gen)
+        self.layer.env.run_until_complete([p], hard_limit=2_000)
+
+    def insert_batch(self, pairs, node: int):
+        def g():
+            for k, v in pairs:
+                yield from self.trees[node].insert(k, v)
+        self._run(g())
+
+    def lookup_batch(self, keys, node: int):
+        out = []
+
+        def g():
+            for k in keys:
+                out.append((yield from self.trees[node].lookup(k)))
+        self._run(g())
+        return out
+
+    def range_scan(self, key, count, node: int):
+        out = []
+
+        def g():
+            out.extend((yield from
+                        self.trees[node].range_scan(key, count)))
+        self._run(g())
+        return out
+
+    def items(self):
+        return self.range_scan(0, 10 ** 6, 0)
+
+
+def replay(trace, dev: DeviceBTree, oracle: HostOracle):
+    """Drive both trees through the trace; compare per-op results and
+    the key->value image, and check invariants, after EVERY batch."""
+    for step in trace:
+        if step[0] == "insert":
+            _, node, pairs = step
+            oracle.insert_batch(pairs, node)
+            dev.insert_batch(np.asarray([k for k, _ in pairs], np.int32),
+                             np.asarray([v for _, v in pairs], np.int32),
+                             node=node)
+        elif step[0] == "lookup":
+            _, node, keys = step
+            want = oracle.lookup_batch(keys, node)
+            got_v, got_f = dev.lookup_batch(
+                np.asarray(keys, np.int32), node=node)
+            for w, v, f in zip(want, got_v, got_f):
+                assert (w is None) == (not f), (step, w, v, f)
+                if w is not None:
+                    assert int(v) == w, (step, w, v)
+        else:
+            _, node, key, count = step
+            want = oracle.range_scan(key, count, node)
+            got = dev.range_scan(key, count, node=node)
+            assert [(int(k), int(v)) for k, v in want] == got, step
+        dev.check_invariants()
+        assert [(int(k), int(v)) for k, v in oracle.items()] == \
+            dev.items(), f"image diverged after {step[:2]}"
+
+
+def test_differential_host_vs_flat_rounds_tree():
+    replay(make_trace(),
+           DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT),
+           HostOracle())
+
+
+def test_differential_host_vs_flat_rounds_tree_write_back():
+    replay(make_trace(seed=23),
+           DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT,
+                              write_back=True),
+           HostOracle())
+
+
+def test_differential_host_vs_one_shard_mesh_tree():
+    import jax
+    mesh = jax.make_mesh((1,), ("shards",))
+    replay(make_trace(),
+           DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT,
+                              mesh=mesh),
+           HostOracle())
+
+
+def test_host_synced_baseline_driver_matches_fused():
+    """driver='host' (the per-round-synced benchmark baseline) is the
+    same tree: identical image after the same trace."""
+    fused = DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT)
+    host = DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT,
+                              driver="host")
+    rng = np.random.default_rng(3)
+    ks = rng.choice(KEYSPACE, size=60, replace=False).astype(np.int32)
+    for i in range(0, 60, 15):
+        fused.insert_batch(ks[i:i + 15], ks[i:i + 15] + 1)
+        host.insert_batch(ks[i:i + 15], ks[i:i + 15] + 1)
+    host.check_invariants()
+    assert fused.items() == host.items()
+    g, f = host.lookup_batch(ks)
+    assert f.all() and (g == ks + 1).all()
+
+
+# ------------------------------------------------------------- metadata
+
+def test_open_adopts_plane_and_rejects_foreign_states():
+    t = DeviceBTree.create(N_NODES, 64, fanout=4)
+    t.insert_batch([5, 9, 1], [50, 90, 10])
+    t2 = DeviceBTree.open(t.state, n_nodes=N_NODES)
+    assert (t2.root, t2.height, t2.alloc.top) == \
+        (t.root, t.height, t.alloc.top)
+    g, f = t2.lookup_batch([9, 5, 2])
+    assert f.tolist() == [True, True, False] and g[:2].tolist() == [90, 50]
+    from repro.core import rounds
+    with pytest.raises(ValueError, match="payload"):
+        DeviceBTree.open(rounds.make_state(2, 8))        # no data plane
+    with pytest.raises(ValueError, match="magic"):
+        DeviceBTree.open(rounds.make_state(2, 8, payload_width=16))
+    with pytest.raises(ValueError, match="width"):
+        # valid magic but a forged fanout whose codec width mismatches
+        # the state's payload width
+        bad = DeviceBTree.create(N_NODES, 64, fanout=4)
+        lanes = np.zeros(bad.codec.width, np.int32)
+        lanes[:5] = [0x0B713EE, bad.root, 6, 1, bad.alloc.top]
+        bad._write_lines([0], [lanes], 0)
+        DeviceBTree.open(bad.state, n_nodes=N_NODES)
+
+
+def test_insert_path_traces_once_per_shape():
+    """The index's fused steps reuse traces: after a warmup that has
+    seen splits, further same-shape inserts/lookups add NO new
+    TRACE_COUNTS keys (the descent step, the RMW insert, and the
+    split writes are all shape-stable)."""
+    from repro.core import rounds as rp
+    t = DeviceBTree.create(2, 256, fanout=4)
+    rng = np.random.default_rng(11)
+    ks = rng.choice(KEYSPACE, size=80, replace=False).astype(np.int32)
+    for k in ks[:40]:                                   # warmup: splits,
+        t.insert_batch([k], [int(k) + 1])               # root growth
+    t.lookup_batch(ks[:8])
+    keys0 = set(rp.TRACE_COUNTS)
+    assert any(k[0] == "rmw" for k in keys0)
+    for k in ks[40:]:
+        t.insert_batch([k], [int(k) + 1])
+    t.lookup_batch(ks[8:16])
+    assert set(rp.TRACE_COUNTS) == keys0, \
+        sorted(set(rp.TRACE_COUNTS) - keys0)
+
+
+# ------------------------------------------- 4 shards (virtual devices)
+
+def test_differential_flat_vs_four_shard_subprocess():
+    """The sharded leg of the acceptance chain: the SAME mixed trace
+    through the flat tree and a REAL 4-shard mesh tree — identical
+    per-op results and images, invariants after every batch."""
+    trace = make_trace()
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys
+        sys.path.insert(0, "src")
+        import jax
+        import numpy as np
+        from repro.index import DeviceBTree
+
+        TRACE = {trace!r}
+        mesh = jax.make_mesh((4,), ("shards",))
+        flat = DeviceBTree.create({N_NODES}, {N_LINES}, fanout={FANOUT})
+        shrd = DeviceBTree.create({N_NODES}, {N_LINES}, fanout={FANOUT},
+                                  mesh=mesh)
+        for step in TRACE:
+            if step[0] == "insert":
+                _, node, pairs = step
+                ks = np.asarray([k for k, _ in pairs], np.int32)
+                vs = np.asarray([v for _, v in pairs], np.int32)
+                flat.insert_batch(ks, vs, node=node)
+                shrd.insert_batch(ks, vs, node=node)
+            elif step[0] == "lookup":
+                _, node, keys = step
+                ks = np.asarray(keys, np.int32)
+                v1, f1 = flat.lookup_batch(ks, node=node)
+                v2, f2 = shrd.lookup_batch(ks, node=node)
+                assert f1.tolist() == f2.tolist(), step
+                assert v1.tolist() == v2.tolist(), step
+            else:
+                _, node, key, count = step
+                assert flat.range_scan(key, count, node=node) == \\
+                    shrd.range_scan(key, count, node=node), step
+            flat.check_invariants()
+            shrd.check_invariants()
+            assert flat.items() == shrd.items(), step[:2]
+        assert shrd.stats["splits"] == flat.stats["splits"]
+        print("BTREE_4SHARD_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], cwd=".",
+                         capture_output=True, text=True, timeout=600)
+    assert "BTREE_4SHARD_OK" in out.stdout, out.stderr[-3000:]

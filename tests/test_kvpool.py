@@ -366,3 +366,29 @@ def test_mesh_backed_pool_rejects_indivisible_pages():
                        n_replicas=2, cache_slots=8)
     with np.testing.assert_raises(ValueError):
         make_pool(cfg, mesh=FakeMesh())
+
+
+def test_rounds_plane_append_is_one_fused_rmw_step_per_shape():
+    """The append path is ONE jitted read-modify-write
+    (rounds.run_rmw + the cached _append_splice transform): repeated
+    appends of the same shape — any replica, any pages, including
+    duplicate-page groups — add NO new TRACE_COUNTS keys after the
+    first (no host two-phase, no per-call retrace)."""
+    from repro.core import rounds as rp
+    cfg, pool = _rounds_pool()
+    pages = pool.allocate(3)
+    one = jnp.ones((2, 2, 8), jnp.float32)
+    pg = np.asarray([pages[0], pages[1]], np.int32)
+    pool.append(pg, np.asarray([0, 1]), one, one, replica=0)
+    keys0 = set(rp.TRACE_COUNTS)
+    assert any(k[0] == "rmw" for k in keys0), \
+        "append no longer routes through the fused RMW driver"
+    pool.append(pg, np.asarray([2, 3]), 2 * one, 2 * one, replica=1)
+    pool.append(np.asarray([pages[2], pages[2]], np.int32),
+                np.asarray([0, 1]), 3 * one, 4 * one, replica=2)
+    assert set(rp.TRACE_COUNTS) == keys0, \
+        sorted(set(rp.TRACE_COUNTS) - keys0)
+    # and the splice is still exact: dup-page group, later slot wins
+    k, _, _ = pool.read(0, np.asarray([pages[2]], np.int32))
+    np.testing.assert_allclose(np.asarray(k)[0, 0], 3.0)
+    np.testing.assert_allclose(np.asarray(k)[0, 1], 3.0)
