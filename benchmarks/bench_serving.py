@@ -1,0 +1,178 @@
+"""bench_serving — continuous batching vs. synchronous gang batching
+on the device coherence plane.
+
+The serving tentpole's headline number: the SAME request trace (mixed
+prompt lengths, heterogeneous ``max_new`` budgets — the workload shape
+continuous batching exists for) served twice over identical
+rounds-plane KV pools at equal slot count:
+
+* ``engine`` — ``serve.ServeLoop``: streaming FCFS admission into the
+  slot grid, ONE fused ``run_rmw`` append + ONE fused paged attend per
+  tick, completed slots evicted and refilled immediately;
+* ``sync``   — ``serve.SyncBatchServer``: static FCFS gangs, a finished
+  sequence's slot idles until the whole gang drains, and every KV
+  append is the pre-fuse two-phase host path (read plane call -> numpy
+  splice -> write plane call: two device dispatches + a host sync where
+  the engine spends one fused call).
+
+Both run the deterministic :class:`~repro.serve.model.ToyLM`, so the
+bench first asserts token-identical outputs (the differential test's
+invariant, re-checked on the benchmark trace) and then measures:
+steady-state requests/sec, emitted-token throughput, and per-request
+p50/p99 completion latency from submission.  The gated
+``engine_sync_speedup`` row (>= 1.5x, within-run and therefore
+machine-independent) is the acceptance bar; ``tok_mops`` rides the
+regular max-regress trajectory gate.  Writes ``BENCH_serving.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, write_bench_json
+
+N_SLOTS = 8
+PAGE = 8
+N_PAGES = 64
+MAX_PAGES = 4          # per-slot window: prompt<=4 + max_new<=16 -> 19 kv
+PREFILL_CHUNK = 4
+PROMPT_MAX = 4
+GEN_MIN, GEN_MAX = 2, 16
+
+
+def _workload(n_req: int, seed: int):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    work = []
+    for _ in range(n_req):
+        plen = int(rng.integers(1, PROMPT_MAX + 1))
+        prompt = tuple(int(t) for t in rng.integers(0, 97, plen))
+        work.append((prompt, int(rng.integers(GEN_MIN, GEN_MAX + 1))))
+    return work
+
+
+def _pool():
+    from repro.dsm.kvpool import KVPoolConfig, SELCCKVPool
+    pool = SELCCKVPool(KVPoolConfig(
+        n_pages=N_PAGES, page_size=PAGE, n_kv_heads=2, head_dim=8,
+        n_replicas=2, dtype="float32"))
+    pool.open_rounds_plane()
+    return pool
+
+
+def _run_engine(work):
+    """-> (wall_s, sorted completion latencies, ServeStats, tokens)."""
+    from repro.serve import ServeLoop, ToyLM
+    pool = _pool()
+    loop_t0 = 0.0
+    lats = []
+
+    def _done(req, slot):
+        lats.append(time.perf_counter() - loop_t0)
+
+    loop = ServeLoop(pool, ToyLM(pool.cfg), n_slots=N_SLOTS,
+                     max_pages=MAX_PAGES, prefill_chunk=PREFILL_CHUNK,
+                     queue_capacity=len(work), on_complete=_done)
+    loop_t0 = time.perf_counter()
+    reqs = [loop.submit(p, m) for p, m in work]
+    loop.start()
+    if not loop.drain(timeout=600):
+        raise RuntimeError("engine failed to drain the benchmark trace")
+    loop.stop()
+    wall = time.perf_counter() - loop_t0
+    st = loop.stats()
+    assert st.completed == len(work) and st.pages_in_use == 0
+    return wall, sorted(lats), st, [r.generated for r in reqs]
+
+
+def _run_sync(work):
+    from repro.serve import ServeRequest, SyncBatchServer, ToyLM
+    pool = _pool()
+    sync_t0 = 0.0
+    lats = []
+
+    def _done(req, slot):
+        lats.append(time.perf_counter() - sync_t0)
+
+    srv = SyncBatchServer(pool, ToyLM(pool.cfg), n_slots=N_SLOTS,
+                          max_pages=MAX_PAGES, on_complete=_done)
+    reqs = [ServeRequest(prompt=p, max_new=m) for p, m in work]
+    sync_t0 = time.perf_counter()
+    srv.serve(reqs)
+    wall = time.perf_counter() - sync_t0
+    assert pool.pages_in_use == 0
+    return wall, sorted(lats), srv, [r.generated for r in reqs]
+
+
+def _pct(sorted_lats, p):
+    return sorted_lats[min(len(sorted_lats) - 1,
+                           int(p * len(sorted_lats)))]
+
+
+def main(quick: bool = False, smoke: bool = False) -> list:
+    n_req = 24 if (smoke or quick) else 48
+    n_meas = 2 if (smoke or quick) else 3
+    work = _workload(n_req, seed=17)
+    tokens = sum(m for _, m in work)
+
+    # warmup run of each server traces every jit shape (fused append,
+    # two-phase read/write, attend); fresh pools below reuse the traces
+    _, _, _, toks_e = _run_engine(work)
+    _, _, _, toks_s = _run_sync(work)
+    assert toks_e == toks_s, \
+        "engine and sync baseline diverged on the benchmark trace"
+
+    runs_e = [_run_engine(work) for _ in range(n_meas)]
+    runs_s = [_run_sync(work) for _ in range(n_meas)]
+    wall_e = sorted(r[0] for r in runs_e)[n_meas // 2]
+    wall_s = sorted(r[0] for r in runs_s)[n_meas // 2]
+    lats_e = sorted(x for r in runs_e for x in r[1])
+    lats_s = sorted(x for r in runs_s for x in r[1])
+    st = runs_e[-1][2]
+    srv = runs_s[-1][2]
+
+    rows: list = []
+    for series, wall, lats in (("engine", wall_e, lats_e),
+                               ("sync", wall_s, lats_s)):
+        emit("serving", series, N_SLOTS, "reqs_per_s", n_req / wall,
+             rows=rows)
+        emit("serving", series, N_SLOTS, "p50_ms", _pct(lats, 0.50) * 1e3,
+             rows=rows)
+        emit("serving", series, N_SLOTS, "p99_ms", _pct(lats, 0.99) * 1e3,
+             rows=rows)
+    # emitted-token throughput rides the cross-commit trajectory gate
+    emit("serving", "engine", N_SLOTS, "tok_mops", tokens / wall_e / 1e6,
+         rows=rows)
+    # the acceptance bar: continuous batching + the fused append must
+    # beat gang scheduling + two-phase host appends >= 1.5x at equal
+    # slot count (gated via the "speedup" metric floor)
+    emit("serving", "engine", N_SLOTS, "engine_sync_speedup",
+         wall_s / wall_e, rows=rows)
+    # engine counters for the trajectory record (ungated diagnostics)
+    emit("serving", "engine", N_SLOTS, "ticks", st.tick, rows=rows)
+    emit("serving", "engine", N_SLOTS, "coherence_rounds",
+         st.rounds_total, rows=rows)
+    emit("serving", "engine", N_SLOTS, "appended_tokens",
+         st.appended_tokens, rows=rows)
+    emit("serving", "sync", N_SLOTS, "plane_calls", srv.plane_calls,
+         rows=rows)
+    emit("serving", "sync", N_SLOTS, "steps", srv.steps, rows=rows)
+
+    # gate_max_regress 0.6: a serve tick is a few SMALL dispatches
+    # (fused append + attend) plus host-side bookkeeping, jittery under
+    # container CPU contention like fig10's descent loop; the within-run
+    # engine_sync_speedup stays the sharp, machine-independent check
+    write_bench_json("serving", rows,
+                     meta={"payload": True, "gate_max_regress": 0.6,
+                           "n_slots": N_SLOTS, "n_requests": n_req,
+                           "n_pages": N_PAGES, "page_size": PAGE,
+                           "max_pages": MAX_PAGES,
+                           "prefill_chunk": PREFILL_CHUNK,
+                           "gen_range": [GEN_MIN, GEN_MAX],
+                           "tokens": tokens, "runs": n_meas,
+                           "smoke": smoke, "quick": quick})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

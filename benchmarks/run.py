@@ -5,8 +5,9 @@ report + the device-plane rounds sweep.
 
 Prints ``figure,series,x,metric,value`` CSV rows per figure, plus wall
 time per figure.  ``--smoke`` is the CI trajectory job: a fast subset
-that writes the machine-readable ``BENCH_rounds.json`` (device plane)
-and ``BENCH_selcc.json`` (DES plane) artifacts.
+that writes the machine-readable ``BENCH_*.json`` artifacts — the
+device-plane rounds sweeps, the DES plane (``BENCH_selcc.json``), and
+the serving engine (``BENCH_serving.json``).
 """
 
 from __future__ import annotations
@@ -21,8 +22,8 @@ def smoke() -> None:
     (flat + mesh-sharded + the payload data plane), all persisted as
     BENCH_*.json for the per-commit perf trajectory (gated by
     benchmarks.check_regression)."""
-    from . import (fig7_rounds, fig10_btree_rounds, fig_rounds,
-                   fig_rounds_data)
+    from . import (bench_serving, fig7_rounds, fig10_btree_rounds,
+                   fig_rounds, fig_rounds_data)
     from .common import MicroConfig, emit, run_micro, timer, \
         write_bench_json
 
@@ -47,6 +48,7 @@ def smoke() -> None:
     fig7_rounds.main(smoke=True)      # writes BENCH_rounds_sharded.json
     fig_rounds_data.main(smoke=True)     # writes BENCH_rounds_data.json
     fig10_btree_rounds.main(smoke=True)  # writes BENCH_btree_rounds.json
+    bench_serving.main(smoke=True)           # writes BENCH_serving.json
 
 
 def main() -> None:
@@ -58,7 +60,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig7,fig7r,fig8,fig9,fig10,"
                          "btree_rounds,fig11,fig12,rounds,rounds_data,"
-                         "roofline")
+                         "serving,roofline")
     args = ap.parse_args()
 
     print("figure,series,x,metric,value")
@@ -68,10 +70,10 @@ def main() -> None:
         print(f"# smoke done in {time.time() - t0:.1f}s", flush=True)
         return
 
-    from . import (fig7_rounds, fig7_scalability, fig8_locality,
-                   fig9_skew, fig10_btree_rounds, fig10_ycsb_btree,
-                   fig11_tpcc, fig12_2pc, fig_rounds, fig_rounds_data,
-                   roofline_report)
+    from . import (bench_serving, fig7_rounds, fig7_scalability,
+                   fig8_locality, fig9_skew, fig10_btree_rounds,
+                   fig10_ycsb_btree, fig11_tpcc, fig12_2pc, fig_rounds,
+                   fig_rounds_data, roofline_report)
     figures = {
         "fig7": fig7_scalability.main,
         "fig7r": fig7_rounds.main,
@@ -83,6 +85,7 @@ def main() -> None:
         "fig12": fig12_2pc.main,
         "rounds": fig_rounds.main,
         "rounds_data": fig_rounds_data.main,
+        "serving": bench_serving.main,
         "roofline": roofline_report.main,
     }
     only = [x for x in args.only.split(",") if x]

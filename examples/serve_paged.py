@@ -1,13 +1,19 @@
 """End-to-end driver (the paper's kind = serving infrastructure):
-multi-replica LLM serving over the SELCC-coherent disaggregated KV pool.
+multi-replica LLM serving over the SELCC-coherent disaggregated KV pool
+— now driven by the CONTINUOUS-BATCHING engine (``repro.serve``).
 
-Two serving replicas share one disaggregated KV-page pool.  A batch of
-requests shares a system-prompt prefix: replica 0 prefills it ONCE into
-shared pages; both replicas then decode their own requests, reading the
-shared prefix pages THROUGH their SELCC caches (miss -> combined
-latch+fetch, then hits).  A prefix update (new system prompt version)
-invalidates cached copies on every replica — the MSI walk of Fig. 2 on
-real model state.
+Two serving replicas share one disaggregated KV-page pool on the
+rounds-plane coherence engine.  A batch of requests shares a
+system-prompt prefix: it is prefilled ONCE into shared pages through
+coherent plane writes; both replicas' requests then stream through
+``serve.ServeLoop`` — one fused ``run_rmw`` append per tick lands every
+slot's new KV in the pool, with each slot's private tail pages keeping
+the per-call atomicity contract.  The decode compute itself runs
+through the SAME jitted ``lm.decode_step`` the pre-engine script used,
+wrapped as a serve-model adapter — so the engine's outputs are asserted
+TOKEN-FOR-TOKEN IDENTICAL to the hand-rolled reference loop kept below.
+A prefix update at the end invalidates cached copies on every replica —
+the MSI walk of Fig. 2 on real model state.
 
     PYTHONPATH=src python examples/serve_paged.py
 """
@@ -25,94 +31,177 @@ from repro.configs import get_smoke_config
 from repro.dsm.kvpool import KVPoolConfig, SELCCKVPool
 from repro.models import lm
 from repro.models.lm import NO_PARALLEL as CTX
+from repro.serve import DecodeOut, ServeLoop, write_pages
 
 ARCH = "llava-next-mistral-7b"       # dense backbone, GQA
 PAGE = 16
 PREFIX_TOKENS = 64
 GEN_TOKENS = 24
 BATCH_PER_REPLICA = 4
+N_REPLICAS = 2
+
+
+def seeded_decode_cache(cfg, cache):
+    """A decode cache holding the shared prefix KV at pos=PREFIX_TOKENS
+    — both the reference loop and the engine adapter start from this
+    exact state, per replica."""
+    dc = lm.init_decode_cache(cfg, BATCH_PER_REPLICA,
+                              PREFIX_TOKENS + GEN_TOKENS)
+    for li in range(cfg.n_layers):
+        kb = jnp.broadcast_to(cache["k"][li, 0][None],
+                              (BATCH_PER_REPLICA, PREFIX_TOKENS,
+                               cfg.n_kv_heads, cfg.hd))
+        vb = jnp.broadcast_to(cache["v"][li, 0][None], kb.shape)
+        dc["k"] = dc["k"].at[li, :, :PREFIX_TOKENS].set(kb)
+        dc["v"] = dc["v"].at[li, :, :PREFIX_TOKENS].set(vb)
+    dc["pos"] = jnp.full((BATCH_PER_REPLICA,), PREFIX_TOKENS, jnp.int32)
+    return dc
+
+
+class LMAdapter:
+    """Serve-model surface around the SAME jitted ``lm.decode_step``
+    callable the reference loop uses: per engine tick it steps each
+    replica's gang with identical inputs, hands the engine the layer-0
+    KV of the consumed tokens (for the fused coherent append into pool
+    pages), and emits the argmax next tokens.  ``q=None`` opts out of
+    the engine's fused attend — this model runs its own attention
+    inside ``decode_step``."""
+
+    def __init__(self, params, cfg, step, cache):
+        self.params, self.cfg, self.step = params, cfg, step
+        self.n_kv_heads = cfg.n_kv_heads
+        self.head_dim = cfg.hd
+        self.n_q_heads = cfg.n_heads
+        self._dc = [seeded_decode_cache(cfg, cache)
+                    for _ in range(N_REPLICAS)]
+
+    def prefill_kv(self, req, tokens, positions):
+        raise NotImplementedError("single-token prompts never prefill")
+
+    def decode(self, views):
+        outs = {}
+        for rep in range(N_REPLICAS):
+            gang = [w for w in views if w.sid % N_REPLICAS == rep]
+            if not gang:
+                continue
+            gang.sort(key=lambda w: w.sid)
+            assert len(gang) == BATCH_PER_REPLICA, \
+                "this demo admits whole replica gangs up front"
+            dc = self._dc[rep]
+            toks = jnp.asarray([[w.pending] for w in gang], jnp.int32)
+            pos = int(np.asarray(dc["pos"])[0])
+            logits, dc = self.step(self.params, dc, toks)
+            self._dc[rep] = dc
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            k = np.asarray(dc["k"][0, :, pos], np.float32)
+            v = np.asarray(dc["v"][0, :, pos], np.float32)
+            for b, w in enumerate(gang):
+                outs[w.sid] = DecodeOut(k=k[b], v=v[b],
+                                        token=int(nxt[b]), q=None)
+        return [outs[w.sid] for w in views]
 
 
 def main():
     cfg = get_smoke_config(ARCH).replace(n_patches=0)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    pool_cfg = KVPoolConfig(
-        n_pages=512, page_size=PAGE, n_kv_heads=cfg.n_kv_heads,
-        head_dim=cfg.hd, n_replicas=2, cache_slots=128)
-    # one pool per layer (stacked): here a single pool with layer-major
-    # page allocation keeps the demo readable
-    pools = [SELCCKVPool(pool_cfg) for _ in range(cfg.n_layers)]
+    step = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg, CTX))
 
     rng = np.random.default_rng(0)
     prefix = jnp.asarray(rng.integers(0, cfg.vocab, (1, PREFIX_TOKENS)),
                          jnp.int32)
 
-    # ---- replica 0 prefills the shared prefix ONCE -----------------------
+    # ---- the shared prefix, prefilled once -------------------------------
     t0 = time.time()
     _, cache = lm.prefill(params, {"tokens": prefix, "labels": prefix},
                           cfg, CTX)
-    prefix_pages = []
-    for li in range(cfg.n_layers):
-        pages = pools[li].allocate(PREFIX_TOKENS // PAGE)
-        for pi, page in enumerate(pages):
-            ks = cache["k"][li, 0, pi * PAGE:(pi + 1) * PAGE]
-            vs = cache["v"][li, 0, pi * PAGE:(pi + 1) * PAGE]
-            for t in range(PAGE):
-                pools[li].append(np.array([page]), np.array([t]),
-                                 ks[t][None], vs[t][None])
-        prefix_pages.append(pages)
-    print(f"[prefill] shared prefix ({PREFIX_TOKENS} tokens) -> "
-          f"{len(prefix_pages[0])} pages/layer in {time.time()-t0:.1f}s")
+    print(f"[prefill] shared prefix ({PREFIX_TOKENS} tokens) computed "
+          f"in {time.time()-t0:.1f}s")
 
-    # ---- both replicas decode, reading the prefix through SELCC ----------
-    hits = misses = 0
-    for replica in (0, 1):
-        for li in (0, 1):            # probe two layers for the demo stats
-            for _ in range(BATCH_PER_REPLICA):
-                _, _, h = pools[li].read(replica,
-                                         prefix_pages[li].astype(np.int32))
-                hits += int(h.sum())
-                misses += int((~h.astype(bool)).sum())
-    print(f"[decode-prep] prefix page reads: hits={hits} misses={misses} "
-          f"(each replica misses once per page, then hits)")
+    # per-replica initial tokens, drawn exactly as the reference did
+    toks0 = [jnp.asarray(rng.integers(0, cfg.vocab,
+                                      (BATCH_PER_REPLICA, 1)), jnp.int32)
+             for _ in range(N_REPLICAS)]
 
-    # ---- decode loop with per-replica private tail pages ------------------
-    for replica in (0, 1):
-        toks = jnp.asarray(
-            rng.integers(0, cfg.vocab, (BATCH_PER_REPLICA, 1)), jnp.int32)
-        dc = lm.init_decode_cache(cfg, BATCH_PER_REPLICA,
-                                  PREFIX_TOKENS + GEN_TOKENS)
-        # seed the decode cache with the shared prefix KV
-        for li in range(cfg.n_layers):
-            kb = jnp.broadcast_to(cache["k"][li, 0][None],
-                                  (BATCH_PER_REPLICA, PREFIX_TOKENS,
-                                   cfg.n_kv_heads, cfg.hd))
-            vb = jnp.broadcast_to(cache["v"][li, 0][None], kb.shape)
-            dc["k"] = dc["k"].at[li, :, :PREFIX_TOKENS].set(kb)
-            dc["v"] = dc["v"].at[li, :, :PREFIX_TOKENS].set(vb)
-        dc["pos"] = jnp.full((BATCH_PER_REPLICA,), PREFIX_TOKENS,
-                             jnp.int32)
+    # ---- REFERENCE: the pre-engine hand-rolled decode loop ---------------
+    ref_tokens = {}                  # (replica, seq) -> [GEN_TOKENS]
+    for replica in range(N_REPLICAS):
+        toks = toks0[replica]
+        dc = seeded_decode_cache(cfg, cache)
         t0 = time.time()
-        step = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg, CTX))
         for _ in range(GEN_TOKENS):
             logits, dc = step(params, dc, toks)
             toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            for b in range(BATCH_PER_REPLICA):
+                ref_tokens.setdefault((replica, b), []).append(
+                    int(toks[b, 0]))
         dt = time.time() - t0
-        print(f"[replica {replica}] generated {GEN_TOKENS} tokens x "
+        print(f"[reference r{replica}] {GEN_TOKENS} tokens x "
               f"{BATCH_PER_REPLICA} seqs in {dt:.1f}s "
               f"({BATCH_PER_REPLICA*GEN_TOKENS/dt:.0f} tok/s)")
 
+    # ---- ENGINE: the same workload through serve.ServeLoop ---------------
+    pool_cfg = KVPoolConfig(
+        n_pages=64, page_size=PAGE, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, n_replicas=N_REPLICAS, cache_slots=32)
+    pool = SELCCKVPool(pool_cfg)
+    pool.open_rounds_plane()
+
+    # shared prefix -> shared pool pages via coherent plane writes
+    prefix_pages = pool.allocate(PREFIX_TOKENS // PAGE)
+    kp = np.asarray(cache["k"][0, 0], np.float32).reshape(
+        -1, PAGE, cfg.n_kv_heads, cfg.hd)
+    vp = np.asarray(cache["v"][0, 0], np.float32).reshape(
+        -1, PAGE, cfg.n_kv_heads, cfg.hd)
+    write_pages(pool, prefix_pages, kp, vp)
+
+    adapter = LMAdapter(params, cfg, step, cache)
+    loop = ServeLoop(pool, adapter, n_slots=N_REPLICAS * BATCH_PER_REPLICA,
+                     max_pages=(PREFIX_TOKENS + 1 + GEN_TOKENS - 1
+                                + PAGE - 1) // PAGE,
+                     prefill_chunk=1,
+                     queue_capacity=N_REPLICAS * BATCH_PER_REPLICA)
+    reqs = {}
+    for b in range(BATCH_PER_REPLICA):       # slot 2b+r -> replica r
+        for replica in range(N_REPLICAS):
+            reqs[(replica, b)] = loop.submit(
+                [int(toks0[replica][b, 0])], GEN_TOKENS,
+                shared_pages=tuple(int(p) for p in prefix_pages),
+                shared_len=PREFIX_TOKENS)
+    t0 = time.time()
+    loop.start()
+    assert loop.drain(timeout=600), "engine failed to drain"
+    loop.stop()
+    dt = time.time() - t0
+    st = loop.stats()
+    total = N_REPLICAS * BATCH_PER_REPLICA * GEN_TOKENS
+    print(f"[engine] {total} tokens across {st.completed} requests in "
+          f"{dt:.1f}s ({total/dt:.0f} tok/s), {st.tick} ticks, "
+          f"{st.appended_tokens} KV rows through "
+          f"{st.rounds_total} coherence rounds, "
+          f"pool pages in use after evict: {st.pages_in_use}")
+
+    # ---- the engine must reproduce the reference TOKEN FOR TOKEN ---------
+    for key, ref in sorted(ref_tokens.items()):
+        got = reqs[key].generated
+        assert got == ref, f"replica/seq {key}: {got} != {ref}"
+    print(f"[check] engine outputs identical to the hand-rolled "
+          f"reference for all {len(ref_tokens)} sequences")
+    assert st.pages_in_use == len(prefix_pages), "leaked slot pages"
+
     # ---- prefix UPDATE: writer invalidates every cached copy --------------
-    page0 = int(prefix_pages[0][0])
-    pools[0].append(np.array([page0]), np.array([0]),
-                    jnp.zeros((1, cfg.n_kv_heads, cfg.hd)),
-                    jnp.zeros((1, cfg.n_kv_heads, cfg.hd)))
-    _, _, h0 = pools[0].read(0, np.array([page0], np.int32))
-    _, _, h1 = pools[0].read(1, np.array([page0], np.int32))
-    print(f"[coherence] after prefix update: replica hits = "
-          f"{bool(h0[0])}/{bool(h1[0])} (stale copies invalidated)")
-    _, _, h0b = pools[0].read(0, np.array([page0], np.int32))
-    print(f"[coherence] next read hits again: {bool(h0b[0])}")
+    page0 = np.asarray([prefix_pages[0]], np.int32)
+    _, _, h0 = pool.read(0, page0)
+    _, _, h1 = pool.read(1, page0)
+    _, _, h0b = pool.read(0, page0)
+    print(f"[coherence] prefix page reads: first={bool(h0[0])}/"
+          f"{bool(h1[0])} then hit={bool(h0b[0])}")
+    zeros = np.zeros((1, cfg.n_kv_heads, cfg.hd), np.float32)
+    pool.append(page0, np.array([0]), zeros, zeros, replica=0)
+    _, _, h0c = pool.read(0, page0)
+    _, _, h1c = pool.read(1, page0)
+    print(f"[coherence] after prefix update by r0: reader re-reads "
+          f"hit={bool(h0c[0])}/{bool(h1c[0])} (r1's stale copy was "
+          f"invalidated)")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ import numpy as np
 
 from ..core import coherence as co
 from ..core.addressing import GAddr
+from .address import LineAllocator
 from ..kernels.gcl_fetch.ops import fetch as gcl_fetch_op
 from ..kernels.latch_ops.ops import OP_CAS, apply_batch
 from ..kernels.paged_attention.ops import decode_paged
@@ -373,7 +374,9 @@ class SELCCKVPool:
         self.pool = make_pool(cfg, mesh=mesh, axis=axis)
         self.cache = make_replica_cache(cfg)
         self.rounds_state = None     # set by open_rounds_plane()
-        self._top = 0
+        # page allocation shares dsm.LineAllocator's contract: free-list
+        # reuse, raise on exhaustion, reject double-free/never-allocated
+        self._alloc = LineAllocator(cfg.n_pages)
 
     def as_rounds_state(self, *, write_back: bool = False, mesh=None,
                         axis: str | None = None):
@@ -447,17 +450,36 @@ class SELCCKVPool:
             pos = (pos % s) * (n_lines // s) + pos // s
         return np.logical_and(pages >= 0, cs[replica, pos] != 0)
 
+    @property
+    def free_pages(self) -> int:
+        """Pages currently allocatable (never-used + freed)."""
+        return self._alloc.free_lines
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.cfg.n_pages - self._alloc.free_lines
+
     def allocate(self, n: int) -> np.ndarray:
-        """Bump-allocate ``n`` pages.  Raises instead of wrapping past
-        ``n_pages`` — the pre-guard modulo silently handed out pages that
-        were still live."""
-        if self._top + n > self.cfg.n_pages:
-            raise ValueError(
-                f"pool exhausted: {n} pages requested, "
-                f"{self.cfg.n_pages - self._top} of {self.cfg.n_pages} free")
-        pages = np.arange(self._top, self._top + n)
-        self._top += n
-        return pages.astype(np.int32)
+        """Allocate ``n`` pages — freed pages are reused first, then the
+        bump pointer grows (``dsm.LineAllocator``).  Raises instead of
+        wrapping past ``n_pages`` — the pre-guard modulo silently handed
+        out pages that were still live."""
+        return self._alloc.alloc(int(n))
+
+    def free(self, pages) -> None:
+        """Return pages to the pool's free list, to be reused by
+        :meth:`allocate` (slot eviction churn in a serving loop would
+        otherwise exhaust the grow-only pool).  Raises ``ValueError`` on
+        a double-free or a never-allocated page, exactly like
+        ``dsm.LineAllocator`` — recycling a page that is still latched
+        corrupts the coherence directory silently.
+
+        Freeing does NOT scrub the page's bytes or its directory entry:
+        a recycled page keeps its stale payload until the next writer
+        lands, and stale reader registrations are evicted through the
+        normal S->X upgrade path — the protocol, not the allocator,
+        keeps recycled pages coherent."""
+        self._alloc.free(pages)
 
     def gaddr_of(self, page: int, n_homes: int = 1) -> GAddr:
         """Structured address of a flat page index — the SAME vocabulary
@@ -486,13 +508,22 @@ class SELCCKVPool:
                 f"0..{self.cfg.n_pages - 1}")
         return page
 
-    def append(self, pages, offsets, k_new, v_new, replica: int = 0):
+    def append(self, pages, offsets, k_new, v_new, replica=0):
+        """Append one token per row.  ``replica`` may be a scalar or an
+        [B] array on the rounds plane (the serving engine batches slots
+        owned by different replicas into one fused step — rows of
+        different replicas must target different pages, the ``run_rmw``
+        per-call atomicity contract).  Returns the coherence rounds the
+        fused step spun (0 on the legacy plane)."""
         if self.rounds_state is None:
+            if np.ndim(replica) != 0:
+                raise TypeError("per-row replica vectors need the "
+                                "rounds plane (open_rounds_plane())")
             self.pool = append_tokens(self.pool, jnp.int32(replica),
                                       jnp.asarray(pages),
                                       jnp.asarray(offsets), k_new, v_new,
                                       cfg=self.cfg)
-            return
+            return 0
         # Rounds-plane append: ONE fused coherent read-modify-write
         # (rounds.run_rmw) — the S-grant read, the token splice
         # (_append_splice, on device between the phases), and the S->X
@@ -503,11 +534,13 @@ class SELCCKVPool:
         from ..core import rounds
         pages = np.asarray(pages, np.int32)
         offsets = np.asarray(offsets, np.int32)
-        node = np.full(pages.shape, replica, np.int32)
-        self.rounds_state, _, _, _ = rounds.run_rmw_to_completion(
+        node = np.broadcast_to(np.asarray(replica, np.int32),
+                               pages.shape).astype(np.int32)
+        self.rounds_state, _, nrounds, _ = rounds.run_rmw_to_completion(
             self.rounds_state, node, pages, _append_splice(self.cfg),
             (offsets, np.asarray(k_new), np.asarray(v_new)),
             n_nodes=self.cfg.n_replicas, mesh=self.mesh, axis=self.axis)
+        return nrounds
 
     def read(self, replica: int, pages):
         if self.rounds_state is None:

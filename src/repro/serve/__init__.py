@@ -1,0 +1,32 @@
+"""Continuous-batching serving engine on the device coherence plane.
+
+The ROADMAP's serving story made real: requests STREAM through the
+rounds-plane KV pool instead of arriving as synchronous batch calls.
+
+    pool = SELCCKVPool(cfg); pool.open_rounds_plane()
+    loop = ServeLoop(pool, ToyLM(cfg), n_slots=8, max_pages=16)
+    loop.start()                       # background tick thread
+    req = loop.submit([17, 3], max_new=12)
+    loop.drain(); loop.stop()
+    req.generated                      # 12 tokens
+
+Module map: ``request`` (ServeRequest / bounded RequestQueue),
+``slots`` (Slot / SlotManager — fixed decode-slot grid, page
+reservation + free), ``model`` (the model surface + deterministic
+ToyLM), ``loop`` (ServeLoop — the fused per-tick engine + ServeStats),
+``sync`` (SyncBatchServer — the host-synced gang-batch baseline and
+differential oracle, plus the ``write_pages`` shared-prefix loader).
+"""
+
+from .loop import ServeLoop, ServeStats
+from .model import DecodeOut, DecodeView, ToyLM
+from .request import (QueueFull, RequestQueue, RequestState,
+                      ServeRequest)
+from .slots import Phase, Slot, SlotManager
+from .sync import SyncBatchServer, write_pages
+
+__all__ = [
+    "DecodeOut", "DecodeView", "Phase", "QueueFull", "RequestQueue",
+    "RequestState", "ServeLoop", "ServeRequest", "ServeStats", "Slot",
+    "SlotManager", "SyncBatchServer", "ToyLM", "write_pages",
+]

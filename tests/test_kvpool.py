@@ -392,3 +392,95 @@ def test_rounds_plane_append_is_one_fused_rmw_step_per_shape():
     k, _, _ = pool.read(0, np.asarray([pages[2]], np.int32))
     np.testing.assert_allclose(np.asarray(k)[0, 0], 3.0)
     np.testing.assert_allclose(np.asarray(k)[0, 1], 3.0)
+
+
+# ------------------------------------------------- page free / reuse
+
+def test_free_pages_reused_by_allocate():
+    """Slot-eviction churn: freed pages return to a free list that
+    allocate drains FIRST (dsm.LineAllocator semantics) — a serving
+    loop can admit/evict forever on a fixed pool."""
+    cfg = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=2, cache_slots=4)
+    pool = SELCCKVPool(cfg)
+    assert pool.free_pages == 8 and pool.pages_in_use == 0
+    a = pool.allocate(6)
+    pool.free(a[1:3])                         # pages 1, 2 back
+    assert pool.free_pages == 4 and pool.pages_in_use == 4
+    # freed pages come back before the bump pointer grows
+    assert pool.allocate(3).tolist() == [1, 2, 6]
+    # churn forever on a full pool: evict 2, admit 2, repeatedly
+    pool.allocate(1)
+    for _ in range(5):
+        pool.free(np.asarray([3, 4], np.int32))
+        assert pool.allocate(2).tolist() == [3, 4]
+    assert pool.free_pages == 0
+    with np.testing.assert_raises(ValueError):
+        pool.allocate(1)
+
+
+def test_free_rejects_double_free_and_never_allocated():
+    cfg = KVPoolConfig(n_pages=8, page_size=4, n_kv_heads=1, head_dim=8,
+                       n_replicas=2, cache_slots=4)
+    pool = SELCCKVPool(cfg)
+    pages = pool.allocate(3)
+    pool.free(pages[:1])
+    with np.testing.assert_raises(ValueError):
+        pool.free(pages[:1])                  # double-free
+    with np.testing.assert_raises(ValueError):
+        pool.free(np.asarray([5], np.int32))  # beyond the bump pointer
+    with np.testing.assert_raises(ValueError):
+        pool.free(np.asarray([-1], np.int32))
+    # the survivors are still live and accounted
+    assert pool.pages_in_use == 2 and pool.free_pages == 6
+
+
+def test_recycled_page_stays_coherent_on_rounds_plane():
+    """free() never scrubs: a recycled page keeps its old bytes until
+    the next writer lands, and the PROTOCOL keeps readers honest — the
+    new tenant's append invalidates any stale cached copy."""
+    cfg, pool = _rounds_pool()
+    pages = pool.allocate(1)
+    one = jnp.ones((1, 2, 8), jnp.float32)
+    pool.append(np.asarray([pages[0]]), np.asarray([0]), one, one,
+                replica=0)
+    k, _, _ = pool.read(1, np.asarray(pages, np.int32))  # r1 caches it
+    np.testing.assert_allclose(np.asarray(k)[0, 0], 1.0)
+    pool.free(pages)
+    again = pool.allocate(1)
+    assert again.tolist() == pages.tolist()   # recycled
+    pool.append(np.asarray([again[0]]), np.asarray([0]), 2 * one,
+                2 * one, replica=2)           # new tenant writes
+    k, _, hit = pool.read(1, np.asarray(again, np.int32))
+    assert not hit[0]                         # stale copy invalidated
+    np.testing.assert_allclose(np.asarray(k)[0, 0], 2.0)
+
+
+# ------------------------------------- per-row replica append batches
+
+def test_rounds_plane_append_accepts_replica_vector():
+    """The serving engine's fused tick: one append batch carrying rows
+    OWNED BY DIFFERENT replicas (slot-private pages keep the per-call
+    atomicity contract); each row's write lands under its own node's
+    directory lane."""
+    cfg, pool = _rounds_pool()
+    pages = pool.allocate(3)
+    kv = jnp.stack([jnp.full((2, 8), float(i + 1)) for i in range(3)])
+    rounds_spun = pool.append(np.asarray(pages, np.int32),
+                              np.asarray([0, 1, 2]), kv, kv,
+                              replica=np.asarray([0, 1, 2]))
+    assert rounds_spun > 0
+    for rep, page in enumerate(pages):
+        k, _, hit = pool.read(rep, np.asarray([page], np.int32))
+        assert hit[0]                 # each writer still holds its page
+        np.testing.assert_allclose(np.asarray(k)[0, rep],
+                                   float(rep + 1))
+
+
+def test_legacy_plane_rejects_replica_vector():
+    cfg, pool = _pool()               # no rounds plane
+    pages = pool.allocate(2)
+    one = jnp.ones((2, 2, 32), jnp.float32)
+    with np.testing.assert_raises(TypeError):
+        pool.append(np.asarray(pages, np.int32), np.asarray([0, 1]),
+                    one, one, replica=np.asarray([0, 1]))

@@ -1,0 +1,297 @@
+"""Serving-engine tests: slot lifecycle edges, engine counters, and the
+differential trace (continuous-batching engine vs the synchronous
+gang-batch oracle) on the flat and 4-shard planes.
+
+The differential contract is strict: identical per-request token
+outputs (the token path is integer-only, so equality is exact), a
+bit-exact KV readback of every completed request's written positions
+through the coherence plane, and a leak-free pool — every slot-private
+page back on the free list once serving drains.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.dsm.kvpool import KVPoolConfig, SELCCKVPool
+from repro.kernels.paged_attention.ops import decode_paged
+from repro.serve import (QueueFull, RequestState, ServeLoop,
+                         ServeRequest, SyncBatchServer, ToyLM,
+                         write_pages)
+
+CFG = KVPoolConfig(n_pages=24, page_size=4, n_kv_heads=2, head_dim=4,
+                   n_replicas=2, dtype="float32")
+
+
+def _pool(cfg=CFG, mesh=None):
+    pool = SELCCKVPool(cfg, mesh=mesh)
+    pool.open_rounds_plane()
+    return pool
+
+
+def _shared_prefix(pool, model, tokens):
+    """Prefill a shared prefix into pool pages via coherent writes."""
+    ps = pool.cfg.page_size
+    assert len(tokens) % ps == 0
+    pages = pool.allocate(len(tokens) // ps)
+    shape = (len(pages), ps, model.n_kv_heads, model.head_dim)
+    kp, vp = np.zeros(shape, np.float32), np.zeros(shape, np.float32)
+    for i, t in enumerate(tokens):
+        kp[i // ps, i % ps], vp[i // ps, i % ps] = model.kv(t, i)
+    write_pages(pool, pages, kp, vp)
+    return pages
+
+
+def _mixed_trace(shared, n=9, seed=7):
+    """[(prompt, max_new, shared_pages, shared_len)] — mixed prompt
+    lengths, budgets, and shared-prefix usage."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        prompt = [int(x) for x in rng.integers(0, 97,
+                                               int(rng.integers(1, 5)))]
+        g = int(rng.integers(1, 6))
+        if i % 3 == 0:
+            out.append((prompt, g, tuple(shared), 4))
+        else:
+            out.append((prompt, g, (), 0))
+    return out
+
+
+# ------------------------------------------------------ lifecycle edges
+
+def test_queue_full_raises():
+    pool = _pool()
+    loop = ServeLoop(pool, ToyLM(CFG), n_slots=1, max_pages=4,
+                     queue_capacity=2)
+    loop.submit([1], 2)
+    loop.submit([2], 2)
+    with pytest.raises(QueueFull):
+        loop.submit([3], 2)
+    assert loop.stats().queue_depth == 2
+
+
+def test_oversize_request_rejected():
+    pool = _pool()
+    loop = ServeLoop(pool, ToyLM(CFG), n_slots=2, max_pages=2,
+                     queue_capacity=4)
+    # kv_len = 6 + 4 - 1 = 9 -> 3 pages > max_pages=2
+    with pytest.raises(ValueError, match="slot capacity"):
+        loop.submit([1, 2, 3, 4, 5, 6], 4)
+    assert loop.stats().rejected == 1
+    # misaligned shared prefix is a programmer error, not a reject
+    with pytest.raises(ValueError, match="shared_len"):
+        loop.submit([1], 2, shared_pages=(0,), shared_len=3)
+
+
+def test_pool_exhaustion_defers_admission():
+    # each request needs ceil((4+4-1)/4)=2 pages of a 5-page pool —
+    # the third stays QUEUED until a completion frees pages (upfront
+    # reservation: admitted requests never deadlock)
+    cfg = KVPoolConfig(n_pages=5, page_size=4, n_kv_heads=2, head_dim=4,
+                       n_replicas=2, dtype="float32")
+    pool = _pool(cfg)
+    loop = ServeLoop(pool, ToyLM(cfg), n_slots=4, max_pages=2,
+                     queue_capacity=8)
+    reqs = [loop.submit([1, 2, 3, 4], 4) for _ in range(3)]
+    st = loop.tick()
+    assert st.admitted == 2 and st.queue_depth == 1
+    assert reqs[2].state is RequestState.QUEUED
+    assert pool.free_pages == 1            # 4 reserved, 1 short of 2
+    assert loop.drain(timeout=120)
+    assert all(r.state is RequestState.DONE for r in reqs)
+    assert loop.stats().admitted == 3
+    assert pool.pages_in_use == 0          # leak-free
+
+
+def test_unserveable_head_raises_instead_of_spinning():
+    cfg = KVPoolConfig(n_pages=2, page_size=4, n_kv_heads=2, head_dim=4,
+                       n_replicas=2, dtype="float32")
+    pool = _pool(cfg)
+    loop = ServeLoop(pool, ToyLM(cfg), n_slots=2, max_pages=4,
+                     queue_capacity=4)
+    loop.submit([1] * 8, 5)                # needs 3 pages, only 2 exist
+    with pytest.raises(RuntimeError, match="pages"):
+        loop.tick()
+
+
+def test_deadline_expiry():
+    pool = _pool()
+    loop = ServeLoop(pool, ToyLM(CFG), n_slots=1, max_pages=4,
+                     queue_capacity=4)
+    blocker = loop.submit([1], 6)
+    late = loop.submit([2], 2, deadline_tick=1)
+    loop.tick()                            # blocker admitted, late queued
+    loop.tick()
+    st = loop.tick()                       # tick 2 > deadline 1: expired
+    assert late.state is RequestState.EXPIRED and st.expired == 1
+    assert loop.drain(timeout=120)
+    assert blocker.state is RequestState.DONE
+    assert late.generated == []
+
+
+def test_min_request_completes_in_one_tick():
+    pool = _pool()
+    loop = ServeLoop(pool, ToyLM(CFG), n_slots=2, max_pages=4)
+    req = loop.submit([5], 1)
+    st = loop.tick()
+    assert req.state is RequestState.DONE
+    assert len(req.generated) == 1 and st.completed == 1
+    assert req.generated[0] == ToyLM(CFG).next_token((5,))
+
+
+def test_write_back_plane_rejected():
+    pool = SELCCKVPool(CFG)
+    pool.open_rounds_plane(write_back=True)
+    with pytest.raises(ValueError, match="write-through"):
+        ServeLoop(pool, ToyLM(CFG))
+    with pytest.raises(ValueError, match="rounds plane"):
+        ServeLoop(SELCCKVPool(CFG), ToyLM(CFG))
+
+
+# ---------------------------------------------------------- counters
+
+def test_stats_snapshot_counts():
+    pool = _pool()
+    model = ToyLM(CFG, n_q_heads=4)
+    loop = ServeLoop(pool, model, n_slots=2, max_pages=4,
+                     prefill_chunk=2)
+    loop.submit([1, 2, 3], 3)              # 2 prefill rows + 3 decode
+    loop.submit([4], 2)                    # 2 decode rows
+    st0 = loop.tick()
+    assert st0.active_slots == 2 and st0.admitted == 2
+    assert st0.pages_in_use == 2 + 1      # kv_len 5 -> 2 pages, 2 -> 1
+    assert st0.last_rounds > 0
+    assert loop.drain(timeout=120)
+    st = loop.stats()
+    # KV rows = kv_len per request (no shared prefix): (3+3-1)+(1+2-1)
+    assert st.appended_tokens == 5 + 2
+    assert st.completed == 2 and st.active_slots == 0
+    assert st.queue_depth == 0 and st.pages_in_use == 0
+    assert st.free_pages == CFG.n_pages
+    assert st.attend_calls > 0 and st.rounds_total >= st.last_rounds
+    assert st.expired == 0 and st.rejected == 0
+
+
+def test_background_thread_serves():
+    pool = _pool()
+    loop = ServeLoop(pool, ToyLM(CFG), n_slots=2, max_pages=4,
+                     queue_capacity=16)
+    loop.start()
+    try:
+        reqs = [loop.submit([i + 1, i + 2], 3) for i in range(6)]
+        assert loop.drain(timeout=120)
+    finally:
+        loop.stop()
+    assert all(r.state is RequestState.DONE for r in reqs)
+    assert loop.stats().completed == 6
+    with pytest.raises(RuntimeError, match="already started"):
+        loop.start()
+        loop.start()
+    loop.stop()
+
+
+# ------------------------------------------------- differential trace
+
+def _run_differential(mesh=None, cfg=CFG):
+    model = ToyLM(cfg, n_q_heads=4)
+    prefix_tokens = list(range(cfg.page_size))
+
+    # --- engine, with per-completion KV readback against the numpy
+    # oracle (only written positions are comparable: recycled pages
+    # keep the previous tenant's bytes by design)
+    pool_e = _pool(cfg, mesh=mesh)
+    shared_e = _shared_prefix(pool_e, model, prefix_tokens)
+    readbacks = []
+
+    def on_complete(req, slot):
+        kp, vp, wr = model.expected_pages(req)
+        k, v, _ = pool_e.read(slot.replica,
+                              np.asarray(slot.pages, np.int32))
+        np.testing.assert_array_equal(np.asarray(k, np.float32)[wr],
+                                      kp[wr])
+        np.testing.assert_array_equal(np.asarray(v, np.float32)[wr],
+                                      vp[wr])
+        # the slot's final fused-attend output matches the paged
+        # kernel over the oracle bytes
+        if slot.last_attn is not None:
+            full_k = np.concatenate(
+                [np.stack([np.stack(model.kv(t, i))
+                           for i, t in enumerate(prefix_tokens)])
+                 [None, :, 0], kp]) if req.shared_pages else kp
+            full_v = np.concatenate(
+                [np.stack([np.stack(model.kv(t, i))
+                           for i, t in enumerate(prefix_tokens)])
+                 [None, :, 1], vp]) if req.shared_pages else vp
+            tbl = np.arange(len(full_k), dtype=np.int32)[None]
+            q = model.query(req.generated[-2] if len(req.generated) > 1
+                            else req.prompt[-1], req.kv_len - 1)[None]
+            want = decode_paged(q.astype(np.float32), full_k, full_v,
+                                tbl, np.asarray([req.kv_len], np.int32),
+                                backend="ref")
+            np.testing.assert_allclose(slot.last_attn,
+                                       np.asarray(want)[0], rtol=2e-5,
+                                       atol=2e-5)
+        readbacks.append(req.rid)
+
+    loop = ServeLoop(pool_e, model, n_slots=3, max_pages=4,
+                     prefill_chunk=4, queue_capacity=16,
+                     on_complete=on_complete)
+    trace = _mixed_trace(shared_e)
+    ereqs = [loop.submit(p, g, shared_pages=sp, shared_len=sl)
+             for p, g, sp, sl in trace]
+    assert loop.drain(timeout=240)
+    st = loop.stats()
+    assert st.completed == len(trace) and len(readbacks) == len(trace)
+    assert pool_e.pages_in_use == len(shared_e)      # zero leaked pages
+
+    # --- synchronous oracle on a fresh pool
+    pool_o = _pool(cfg, mesh=mesh)
+    shared_o = _shared_prefix(pool_o, model, prefix_tokens)
+    oreqs = [ServeRequest(prompt=tuple(p), max_new=g,
+                          shared_pages=tuple(shared_o) if sp else (),
+                          shared_len=sl) for p, g, sp, sl in trace]
+    sync = SyncBatchServer(pool_o, model, n_slots=3, max_pages=4)
+    sync.serve(oreqs)
+    assert pool_o.pages_in_use == len(shared_o)      # oracle leak-free
+
+    for e, o in zip(ereqs, oreqs):
+        assert len(e.generated) == e.max_new
+        assert e.generated == o.generated, (e.rid, e.generated,
+                                            o.generated)
+    # the baseline really is the slow path: two dispatches per append
+    assert sync.plane_calls == 2 * sync.steps
+    return [e.generated for e in ereqs]
+
+
+def test_differential_trace_flat():
+    _run_differential()
+
+
+def test_differential_trace_4shard_subprocess():
+    """The same differential trace on a 4-shard mesh plane: engine and
+    oracle both drive the mesh-sharded rounds engine; tokens, KV
+    readback, and pool accounting must all hold there too."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys
+        sys.path.insert(0, "src")
+        sys.path.insert(0, "tests")
+        import jax
+        from repro.dsm.kvpool import KVPoolConfig
+        import test_serve
+        mesh = jax.make_mesh((4,), ("shards",))
+        cfg = KVPoolConfig(n_pages=24, page_size=4, n_kv_heads=2,
+                           head_dim=4, n_replicas=4, dtype="float32")
+        toks = test_serve._run_differential(mesh=mesh, cfg=cfg)
+        flat = test_serve._run_differential(cfg=cfg)
+        assert toks == flat, "sharded plane diverged from flat"
+        print("SERVE_4SHARD_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], cwd=".",
+                         capture_output=True, text=True, timeout=600)
+    assert "SERVE_4SHARD_OK" in out.stdout, out.stderr[-3000:]
