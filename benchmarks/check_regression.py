@@ -40,12 +40,16 @@ Calibration knobs (all env-overridable, CLI flags win):
   which jitter more across runners than the latch-only configs.
 
 A seed can also DECLARE its own budget: ``meta.gate_max_regress``
-widens (never narrows) the effective threshold for that trajectory.
-The B-link tree bench declares 0.65 — its per-level descent loop is
-many small jit dispatches, whose latency swings harder under CPU
-contention than any other trajectory (measured 2x run-to-run on an
-otherwise idle container) while its within-run ``fused_host_speedup``
-ratio stays the sharp check.
+widens (never narrows) the effective threshold for that trajectory,
+and ``meta.speedup_floors`` — ``{metric name: floor}`` — relaxes
+(never tightens) the speedup floor for SPECIFIC metrics whose
+structural headroom is genuinely smaller than the global 1.5x.  The
+B-link tree bench declares ``descent_fused_speedup: 1.3`` — the fused
+whole-walk descent beats a per-level ladder that is only ~height
+dispatches deep, a real but height-bounded win, unlike the
+multi-round spin fusions the global floor describes.  (Its old
+``gate_max_regress = 0.65`` throughput override is gone: fusing the
+descent removed the many-small-dispatches noise that forced it.)
 
 Every seed file must have a fresh counterpart — a silently missing
 benchmark is itself a regression.
@@ -96,6 +100,8 @@ def check_file(seed_path: str, fresh_path: str, max_regress: float,
     declared = seed_doc.get("meta", {}).get("gate_max_regress")
     if declared is not None:
         max_regress = max(max_regress, float(declared))
+    # ... and per-metric speedup floors (relaxed, never tightened)
+    floors = seed_doc.get("meta", {}).get("speedup_floors") or {}
     with open(fresh_path) as f:
         fresh = _medians(json.load(f))
     report, failures = [], []
@@ -117,9 +123,11 @@ def check_file(seed_path: str, fresh_path: str, max_regress: float,
                     f"floor {1 - max_regress:.2f}x)")
             (report if fv >= floor else failures).append(line)
         if "speedup" in metric:
+            floor = min(min_speedup,
+                        float(floors.get(metric, min_speedup)))
             line = (f"{name} {series}/{metric}: fresh={fv:.2f}x "
-                    f"(floor {min_speedup:.2f}x)")
-            (report if fv >= min_speedup else failures).append(line)
+                    f"(floor {floor:.2f}x)")
+            (report if fv >= floor else failures).append(line)
     return report, failures
 
 

@@ -27,12 +27,14 @@ the same collectives), still one fused loop:
 """
 
 from ..coherence import I, M, S
+from .descent import run_descent, run_descent_to_completion
 from .driver import (run_ops_to_completion, run_rmw,
                      run_rmw_to_completion, run_rounds)
 from .engine import TRACE_COUNTS, coherence_round, evict_lines
 from .sharded import (coherence_round_sharded, evict_lines_sharded,
-                      make_sharded_state, pad_ops, run_rmw_sharded,
-                      run_rounds_sharded, shard_state, unshard_state)
+                      make_sharded_state, pad_ops, run_descent_sharded,
+                      run_rmw_sharded, run_rounds_sharded, shard_state,
+                      unshard_state)
 from .state import (check_invariants, is_write_back, make_state,
                     payload_width, stripe_state, unstripe_state)
 
@@ -40,7 +42,8 @@ __all__ = [
     "I", "S", "M", "TRACE_COUNTS", "check_invariants", "coherence_round",
     "coherence_round_sharded", "evict_lines", "evict_lines_sharded",
     "is_write_back", "make_sharded_state", "make_state", "pad_ops",
-    "payload_width", "run_ops_to_completion", "run_rmw",
+    "payload_width", "run_descent", "run_descent_sharded",
+    "run_descent_to_completion", "run_ops_to_completion", "run_rmw",
     "run_rmw_sharded", "run_rmw_to_completion", "run_rounds",
     "run_rounds_sharded", "shard_state", "stripe_state", "unshard_state",
     "unstripe_state",

@@ -345,6 +345,109 @@ def run_rmw_sharded(state, node_id, line, operands=(), *, modify, mesh,
             jnp.logical_and(ok1, ok2))
 
 
+@functools.partial(
+    jax.jit, static_argnames=("transition", "mesh", "axis", "n_nodes",
+                              "max_steps", "bucket_cap", "backend",
+                              "path_cap"))
+def run_descent_sharded(state, node_id, key, root, *, transition, mesh,
+                        axis: str = "shards", n_nodes: int,
+                        max_steps: int = 64,
+                        bucket_cap: int | None = None,
+                        backend: str = "ref", path_cap: int = 16):
+    """Sharded mirror of :func:`repro.core.rounds.descent.run_descent`:
+    the whole root-to-leaf wavefront runs inside ONE jit call on the
+    mesh.  Each outer iteration routes every undone slot's S-latch read
+    to its line's home shard through the usual two all_to_alls
+    (`_route_round`), then applies the caller's ``transition`` to the
+    replies LOCALLY on the slot's own shard — slots never migrate, only
+    their requests do, so the per-slot carry (current line, path
+    buffer, level/hop counters) stays put and the done flag is the one
+    psum.  A slot whose read lost a latch race OR overflowed its
+    routing bucket simply re-presents next iteration.  Same return
+    contract as ``run_descent`` (slots in global order, ``steps`` and
+    ``all_done`` replicated)."""
+    co.check_node_capacity(n_nodes)
+    n_shards = mesh.shape[axis]
+    node_id = jnp.asarray(node_id, jnp.int32)
+    key = jnp.asarray(key, jnp.int32)
+    root = jnp.asarray(root, jnp.int32)
+    r_total = root.shape[0]
+    if r_total % n_shards:
+        raise ValueError(f"B={r_total} not divisible by "
+                         f"n_shards={n_shards} (use pad_ops)")
+    r = r_total // n_shards
+    cap = bucket_cap if bucket_cap is not None else r
+    width = st.payload_width(state)
+    if not width:
+        raise ValueError("run_descent_sharded needs a payload-plane "
+                         "state (the transition decodes node bytes)")
+    write_back = "dirty" in state
+    _note_trace(("descent_sharded", transition, n_shards, n_nodes,
+                 state["words"].shape[0], r_total, cap, max_steps,
+                 backend, write_back, width, path_cap))
+    specs = _state_specs(state, axis)
+
+    def spmd(state_l, node_l, key_l, root_l):
+        b = root_l.shape[0]
+        no_write = jnp.zeros((b,), jnp.int32)
+        no_bytes = jnp.zeros((b, width), jnp.int32)
+
+        def n_undone(done):
+            return jax.lax.psum(jnp.sum((~done).astype(jnp.int32)),
+                                axis)
+
+        def cond(carry):
+            _, _, _, _, _, _, _, _, steps, gdone = carry
+            return jnp.logical_and(~gdone, steps < max_steps)
+
+        def body(carry):
+            stt, cur, done, lanes, levels, hops, paths, plen, steps, _ \
+                = carry
+            line = jnp.where(done, jnp.int32(-1), cur)
+            stt, served, _, d = _route_round(
+                stt, node_l, line, no_write, no_bytes,
+                n_shards=n_shards, axis=axis, n_nodes=n_nodes, cap=cap,
+                backend=backend)
+            at_leaf, hop, nxt = transition(d, key_l)
+            move = jnp.logical_and(served, ~done)
+            hop = jnp.logical_and(move, hop)
+            at_leaf = jnp.logical_and(move, at_leaf)
+            desc = jnp.logical_and(
+                move, jnp.logical_and(~hop, ~at_leaf))
+            lanes = jnp.where(at_leaf[:, None], d, lanes)
+            row = jnp.where(desc, jnp.arange(b), b)
+            paths = paths.at[row, jnp.minimum(plen, path_cap - 1)].set(
+                cur, mode="drop")
+            plen = plen + desc.astype(jnp.int32)
+            levels = levels + desc.astype(jnp.int32)
+            hops = hops + hop.astype(jnp.int32)
+            done = jnp.logical_or(done, at_leaf)
+            advance = jnp.logical_and(move, ~at_leaf)
+            cur = jnp.where(advance, nxt, cur)
+            return (stt, cur, done, lanes, levels, hops, paths, plen,
+                    steps + 1, n_undone(done) == 0)
+
+        done0 = root_l < 0
+        init = (state_l, root_l, done0,
+                jnp.zeros((b, width), jnp.int32),
+                jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32),
+                jnp.full((b, path_cap), -1, jnp.int32),
+                jnp.zeros((b,), jnp.int32), jnp.int32(0),
+                n_undone(done0) == 0)
+        (state_l, cur, _, lanes, levels, hops, paths, plen, steps,
+         gdone) = jax.lax.while_loop(cond, body, init)
+        return (state_l, cur, lanes, levels, hops, paths, plen, steps,
+                gdone)
+
+    return shard_map(
+        spmd, mesh=mesh,
+        in_specs=(specs, P(axis), P(axis), P(axis)),
+        out_specs=(specs, P(axis), P(axis), P(axis), P(axis), P(axis),
+                   P(axis), P(), P()),
+        check_vma=False,
+    )(state, node_id, key, root)
+
+
 # --------------------------------------------------------------- eviction
 
 @functools.partial(

@@ -3,8 +3,11 @@
 The paper's flagship workload (Sec. 8.1, Fig. 10) — a concurrent B-link
 tree over the SELCC abstraction — realized directly on the device
 coherence engine: tree nodes are GCL lines whose payload lanes carry a
-fixed node codec, descents are batched S-latch read rounds, and leaf
-inserts are fused coherent read-modify-writes (``rounds.run_rmw``).
+fixed node codec, a whole batched root-to-leaf descent is ONE fused
+jit call regardless of tree height (``rounds.run_descent`` driving the
+codec's on-device ``descend_step`` transition), leaf inserts are fused
+coherent read-modify-writes (``rounds.run_rmw``), and range scans
+(``DeviceBTree.scan_batch``) walk the leaf chain in coherent batches.
 """
 
 from .codec import NodeCodec

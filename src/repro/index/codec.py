@@ -114,11 +114,13 @@ class NodeCodec:
             right=int(lanes[RIGHT]),
             high=int(lanes[HIGH]) if lanes[HAS_HIGH] else None)
 
-    # -------------------------------------------- batch (numpy) accessors
-    def fields(self, data: np.ndarray) -> dict:
-        """Vectorized field view of a ``[B, W]`` batch of node lines —
-        the descent loop's per-level decode."""
-        data = np.asarray(data)
+    # -------------------------------------------------- batch accessors
+    def fields(self, data, *, xp=np) -> dict:
+        """Vectorized field view of a ``[B, W]`` batch of node lines.
+        ``xp=np`` (default) is the host-side decode; ``xp=jnp`` is the
+        jittable port the fused descent driver runs INSIDE its
+        ``lax.while_loop`` (same slicing, device arrays in and out)."""
+        data = xp.asarray(data)
         return {
             "leaf": data[:, LEAF] == 1,
             "nkeys": data[:, NKEYS],
@@ -134,6 +136,13 @@ class NodeCodec:
         """The jitted RMW lane transform for this geometry (cached per
         fanout so every insert batch of one shape shares one trace)."""
         return insert_modify(self.fanout)
+
+    @property
+    def descend_step(self):
+        """The jitted descent transition for this geometry (cached per
+        fanout — the static ``transition`` operand of
+        :func:`repro.core.rounds.run_descent`)."""
+        return descend_step(self.fanout)
 
 
 @functools.lru_cache(maxsize=None)
@@ -201,3 +210,41 @@ def insert_modify(fanout: int):
         return jnp.where(valid[:, None], out, data)
 
     return modify
+
+
+@functools.lru_cache(maxsize=None)
+def descend_step(fanout: int):
+    """Build ``transition(data, key) -> (at_leaf, hop, nxt)`` for
+    :func:`repro.core.rounds.run_descent`: the per-key B-link descent
+    decision, computed ON DEVICE from freshly-read node lanes inside the
+    fused descent loop (the host used to make it between per-level
+    dispatches).
+
+    Semantics mirror the host walk: a key at or past the node's high key
+    follows the right link (``hop`` — the Lehman-Yao recovery), a leaf
+    without a pending hop terminates (``at_leaf``), and an internal node
+    routes to child ``count(keys <= key)``.  ``nxt`` is the slot's next
+    line (right link on a hop, child otherwise; garbage where
+    ``at_leaf`` — the driver never uses it there).  Cached per fanout so
+    every descent batch of one shape shares one trace."""
+    import jax.numpy as jnp
+
+    codec = NodeCodec(fanout)
+    c = codec.cap
+
+    def transition(data, key):
+        data = jnp.asarray(data, jnp.int32)
+        key = jnp.asarray(key, jnp.int32)
+        f = codec.fields(data, xp=jnp)
+        hop = jnp.logical_and(
+            jnp.logical_and(f["has_high"], key >= f["high"]),
+            f["right"] >= 0)
+        at_leaf = jnp.logical_and(f["leaf"], ~hop)
+        occ = jnp.arange(c)[None, :] < f["nkeys"][:, None]
+        ci = jnp.sum(jnp.logical_and(occ, f["keys"] <= key[:, None]),
+                     axis=1).astype(jnp.int32)
+        child = jnp.take_along_axis(f["vals"], ci[:, None], axis=1)[:, 0]
+        nxt = jnp.where(hop, f["right"], child)
+        return at_leaf, hop, nxt
+
+    return transition

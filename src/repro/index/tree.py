@@ -7,13 +7,17 @@ nodes stripe ``line % n_shards`` like every other line), and every
 structural rule of the host ``apps/btree.BLinkTree`` maps onto a
 coherence-plane op sequence:
 
-* **descent** — one fused device step per level: the whole key batch
-  presents S-latch read ops for its current (heterogeneous) lines in
-  ONE ``run_rounds`` call, the engine serves grants + payload bytes
-  inside its fused spin loop, and the host computes each key's next
-  line (child, or right-link hop when ``key >= high`` — the Lehman-Yao
-  recovery) from the returned lanes.  The only host sync per level is
-  the level loop itself;
+* **descent** — the ENTIRE root-to-leaf walk is one jit call
+  (:func:`repro.core.rounds.run_descent` /
+  ``run_descent_sharded``): an outer ``lax.while_loop`` issues the
+  batched S-latch reads for every undone key's current line, decodes
+  the node lanes on device (``codec.descend_step`` — child index,
+  right-link hop when ``key >= high`` per Lehman-Yao, at-leaf), and
+  advances each key without ever leaving the device, so a
+  ``lookup_batch`` costs one dispatch regardless of tree height and
+  keys at different depths advance independently.  The insert path's
+  split bookkeeping rides an on-device path buffer returned by the
+  same call;
 * **leaf insert** — a fused coherent read-modify-write
   (:func:`repro.core.rounds.run_rmw`): S-grant read, on-device sorted
   insert into the node lanes (``codec.insert_modify``), S->X upgrade
@@ -29,10 +33,15 @@ coherence-plane op sequence:
   :meth:`DeviceBTree.open` can adopt an existing plane with no side
   channel.
 
-``driver="host"`` replays every rounds batch through a host-synced
-per-round loop over ``coherence_round`` (and the insert RMW as the
-pre-fuse two-phase read/modify/write) — the baseline
-``benchmarks/fig10_btree_rounds.py`` measures the fused plane against.
+Two baseline drivers are kept as differential references and benchmark
+rungs (``benchmarks/fig10_btree_rounds.py``):
+
+* ``driver="level"`` — the pre-fuse descent: one fused ``run_rounds``
+  dispatch per level (plus one per link hop), the next line computed
+  on the HOST between dispatches.  Inserts still use the fused RMW;
+* ``driver="host"`` — fully host-synced: every rounds batch replayed
+  through a per-round loop over ``coherence_round``, and the insert
+  RMW as the pre-fuse two-phase read/modify/write.
 """
 
 from __future__ import annotations
@@ -62,7 +71,7 @@ class DeviceBTree:
                  mesh=None, axis: str = "shards", n_nodes: int,
                  backend: str = "ref", max_rounds: int = 128,
                  driver: str = "fused"):
-        if driver not in ("fused", "host"):
+        if driver not in ("fused", "level", "host"):
             raise ValueError(f"unknown driver {driver!r}")
         if driver == "host" and mesh is not None:
             raise ValueError("the host-synced baseline driver is "
@@ -244,16 +253,52 @@ class DeviceBTree:
 
     # ------------------------------------------------------------ descent
     def _descend(self, keys, node: int, record_path: bool = False):
-        """Batched root-to-leaf walk: one fused rounds step per level,
-        right-link hops re-presented until every key rests on its leaf.
-        Returns (leaf_lines [B], leaf_lanes [B, W], paths) — padded to
-        the next power of two (callers slice), so data-dependent batch
-        sizes hit a bounded set of jit shapes."""
+        """Batched root-to-leaf walk.  Returns (leaf_lines [B],
+        leaf_lanes [B, W], paths) — padded to the next power of two
+        (callers slice), so data-dependent batch sizes hit a bounded
+        set of jit shapes.
+
+        ``driver="fused"`` runs the whole walk in ONE jit call
+        (:func:`repro.core.rounds.run_descent`): zero host syncs, one
+        dispatch regardless of height, paths recorded by the in-loop
+        device buffer.  ``"level"``/``"host"`` keep the per-level host
+        loop (:meth:`_descend_level`) as differential baselines."""
         keys = np.asarray(keys, np.int32)
         b = keys.shape[0]
         cap = 1 << max(b - 1, 0).bit_length()
         if cap != b:
             keys = np.concatenate([keys, np.zeros(cap - b, np.int32)])
+        if self.driver != "fused":
+            return self._descend_level(keys, b, node, record_path)
+        root = np.full(cap, self.root, np.int32)
+        root[b:] = -1                        # pads never present an op
+        (self.state, cur, lanes, levels, hops, paths, plen,
+         _steps) = rounds.run_descent_to_completion(
+            self.state, np.full(cap, node, np.int32), keys, root,
+            transition=self.codec.descend_step, n_nodes=self.n_nodes,
+            max_steps=self.max_rounds, backend=self.backend,
+            mesh=self.mesh, axis=self.axis, path_cap=_MAX_LINK_HOPS)
+        # the loop returns per-key level/hop counts, so the stats keep
+        # the per-level driver's meaning: steps a level-synced walk
+        # would have dispatched (deepest live key), and total hops
+        live_l, live_h = levels[:b], hops[:b]
+        self.stats["level_steps"] += \
+            int((live_l + live_h).max(initial=-1) + 1)
+        self.stats["link_hops"] += int(live_h.sum())
+        if not record_path:
+            return cur, lanes, []
+        path_lists = [[int(x) for x in paths[i, :int(plen[i])]]
+                      for i in range(b)]
+        path_lists += [[] for _ in range(cap - b)]
+        return cur, lanes, path_lists
+
+    def _descend_level(self, keys, b: int, node: int,
+                       record_path: bool):
+        """The pre-fuse baseline walk: one rounds dispatch per level
+        (fused under ``driver="level"``, host-synced per round under
+        ``"host"``), transitions computed on the host in between —
+        descent latency scales with tree height in dispatch count."""
+        cap = keys.shape[0]
         cur = np.full(cap, self.root, np.int32)
         done = np.zeros(cap, bool)
         done[b:] = True                      # pads never present an op
@@ -424,18 +469,40 @@ class DeviceBTree:
     # --------------------------------------------------------------- scan
     def range_scan(self, key: int, count: int, node: int = 0):
         """``count`` (key, value) pairs from ``key`` upward, following
-        the leaf right-link chain — one coherent read per hop."""
-        _, lanes, _ = self._descend(np.asarray([key], np.int32), node)
-        nd = self.codec.decode(lanes[0])
-        out: list = []
+        the leaf right-link chain — the single-key form of
+        :meth:`scan_batch`."""
+        return self.scan_batch([key], count, node=node)[0]
+
+    def scan_batch(self, keys, count: int, node: int = 0):
+        """Batched range scan (YCSB E): for each start key, up to
+        ``count`` (key, value) pairs from that key upward.  One fused
+        descent finds ALL start leaves in one dispatch; the leaf-chain
+        walk then reads every still-collecting scan's next right link
+        in one coherent batch per chain step (scans advance together,
+        so chain latency is paid once per step, not once per key).
+        Returns a list of per-key pair lists."""
+        keys = np.asarray(keys, np.int32)
+        b = keys.shape[0]
+        _, lanes, _ = self._descend(keys, node)
+        lanes = np.asarray(lanes[:b], np.int32)
+        out: list = [[] for _ in range(b)]
+        collecting = np.ones(b, bool)
         for _ in range(_MAX_LINK_HOPS + count):
-            for k, v in zip(nd.keys, nd.vals):
-                if k >= key and len(out) < count:
-                    out.append((int(k), int(v)))
-            if len(out) >= count or nd.right < 0:
+            f = self.codec.fields(lanes)
+            for i in np.flatnonzero(collecting):
+                nk = int(f["nkeys"][i])
+                for k, v in zip(f["keys"][i][:nk], f["vals"][i][:nk]):
+                    if k >= keys[i] and len(out[i]) < count:
+                        out[i].append((int(k), int(v)))
+                if len(out[i]) >= count or f["right"][i] < 0:
+                    collecting[i] = False
+            if not collecting.any():
                 break
-            nd = self.codec.decode(
-                self._read_lines([nd.right], node)[0])
+            nxt = np.where(collecting, f["right"], -1).astype(np.int32)
+            step = self._read_lines(nxt, node)
+            lanes = np.where(collecting[:, None], step, lanes)
+        else:
+            raise RuntimeError("leaf chain walk did not settle")
         return out
 
     # ---------------------------------------------------------- integrity

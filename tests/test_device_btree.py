@@ -213,6 +213,16 @@ def test_differential_host_vs_one_shard_mesh_tree():
            HostOracle())
 
 
+def test_differential_host_vs_level_driver_tree():
+    """driver='level' (the pre-fuse per-level descent ladder) is the
+    same tree as the DES oracle — the fused/level/host drivers may only
+    differ in dispatch count, never in results."""
+    replay(make_trace(seed=19),
+           DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT,
+                              driver="level"),
+           HostOracle())
+
+
 def test_host_synced_baseline_driver_matches_fused():
     """driver='host' (the per-round-synced benchmark baseline) is the
     same tree: identical image after the same trace."""
@@ -276,12 +286,72 @@ def test_insert_path_traces_once_per_shape():
         sorted(set(rp.TRACE_COUNTS) - keys0)
 
 
+def _tree_at_height(height: int, n_lines: int = 512) -> DeviceBTree:
+    t = DeviceBTree.create(2, n_lines, fanout=4)
+    rng = np.random.default_rng(5)
+    ks = rng.permutation(KEYSPACE).astype(np.int32)[:n_lines]
+    i = 0
+    while t.height < height:
+        t.insert_batch(ks[i:i + 8], ks[i:i + 8] + 1)
+        i += 8
+    return t
+
+
+def test_descent_one_trace_per_batch_shape_independent_of_height():
+    """The tentpole's contract: a whole lookup descent is ONE jit
+    dispatch whose trace key depends on the batch shape (and payload
+    geometry), NOT on tree height — a height-2 and a height-4 tree on
+    the same plane share the single compiled descent, and re-running
+    either adds no retrace."""
+    from repro.core import rounds as rp
+    t2, t4 = _tree_at_height(2), _tree_at_height(4)
+    assert (t2.height, t4.height) == (2, 4)
+    keys = np.arange(16, dtype=np.int32)
+    t2.lookup_batch(keys)
+    descent0 = {k: v for k, v in rp.TRACE_COUNTS.items()
+                if k[0] == "descent"}
+    t4.lookup_batch(keys)            # deeper tree: same trace
+    t4.lookup_batch(keys + 3)        # different values: same trace
+    t2.lookup_batch(keys[:16])
+    descent1 = {k: v for k, v in rp.TRACE_COUNTS.items()
+                if k[0] == "descent"}
+    assert descent1 == descent0, (descent0, descent1)
+    # ... and it is exactly ONE compiled trace for this batch shape on
+    # this plane geometry (other tests' 3-node trees own their own keys)
+    same_shape = [v for k, v in descent1.items()
+                  if k[2] == 2 and k[3] == len(keys)]
+    assert same_shape == [1], descent1
+
+
+# ------------------------------------------------------------ scan_batch
+
+def test_scan_batch_matches_oracle_and_per_key_scan():
+    """Batched range scans (YCSB E) return, for every start key, the
+    same ordered pairs the DES oracle's range_scan yields — including
+    start keys absent from the tree and scans that run off the end."""
+    oracle = HostOracle()
+    dev = DeviceBTree.create(N_NODES, N_LINES, fanout=FANOUT)
+    rng = np.random.default_rng(7)
+    ks = rng.choice(KEYSPACE, size=64, replace=False).astype(np.int32)
+    oracle.insert_batch([(int(k), int(k) * 3 + 1) for k in ks], 0)
+    dev.insert_batch(ks, ks * 3 + 1)
+    starts = [int(ks[0]), int(ks[31]) + 1, 0, KEYSPACE - 1, KEYSPACE + 5]
+    got = dev.scan_batch(starts, 5, node=1)
+    for s, pairs in zip(starts, got):
+        want = [(int(k), int(v))
+                for k, v in oracle.range_scan(s, 5, node=0)]
+        assert pairs == want, (s, pairs, want)
+        assert pairs == dev.range_scan(s, 5, node=2), s
+    dev.check_invariants()
+
+
 # ------------------------------------------- 4 shards (virtual devices)
 
 def test_differential_flat_vs_four_shard_subprocess():
     """The sharded leg of the acceptance chain: the SAME mixed trace
-    through the flat tree and a REAL 4-shard mesh tree — identical
-    per-op results and images, invariants after every batch."""
+    through fused-descent AND per-level-descent trees on the flat plane
+    and on a REAL 4-shard mesh — identical per-op results and images,
+    invariants after every batch on all four."""
     trace = make_trace()
     code = textwrap.dedent(f"""
         import os
@@ -294,31 +364,36 @@ def test_differential_flat_vs_four_shard_subprocess():
 
         TRACE = {trace!r}
         mesh = jax.make_mesh((4,), ("shards",))
-        flat = DeviceBTree.create({N_NODES}, {N_LINES}, fanout={FANOUT})
-        shrd = DeviceBTree.create({N_NODES}, {N_LINES}, fanout={FANOUT},
-                                  mesh=mesh)
+        mk = lambda **kw: DeviceBTree.create({N_NODES}, {N_LINES},
+                                             fanout={FANOUT}, **kw)
+        flat = mk()
+        trees = [flat, mk(mesh=mesh), mk(driver="level"),
+                 mk(mesh=mesh, driver="level")]
         for step in TRACE:
             if step[0] == "insert":
                 _, node, pairs = step
                 ks = np.asarray([k for k, _ in pairs], np.int32)
                 vs = np.asarray([v for _, v in pairs], np.int32)
-                flat.insert_batch(ks, vs, node=node)
-                shrd.insert_batch(ks, vs, node=node)
+                for t in trees:
+                    t.insert_batch(ks, vs, node=node)
             elif step[0] == "lookup":
                 _, node, keys = step
                 ks = np.asarray(keys, np.int32)
                 v1, f1 = flat.lookup_batch(ks, node=node)
-                v2, f2 = shrd.lookup_batch(ks, node=node)
-                assert f1.tolist() == f2.tolist(), step
-                assert v1.tolist() == v2.tolist(), step
+                for t in trees[1:]:
+                    v2, f2 = t.lookup_batch(ks, node=node)
+                    assert f1.tolist() == f2.tolist(), step
+                    assert v1.tolist() == v2.tolist(), step
             else:
                 _, node, key, count = step
-                assert flat.range_scan(key, count, node=node) == \\
-                    shrd.range_scan(key, count, node=node), step
-            flat.check_invariants()
-            shrd.check_invariants()
-            assert flat.items() == shrd.items(), step[:2]
-        assert shrd.stats["splits"] == flat.stats["splits"]
+                want = flat.range_scan(key, count, node=node)
+                for t in trees[1:]:
+                    assert want == t.range_scan(key, count,
+                                                node=node), step
+            for t in trees:
+                t.check_invariants()
+                assert flat.items() == t.items(), step[:2]
+        assert len({{t.stats["splits"] for t in trees}}) == 1
         print("BTREE_4SHARD_OK")
     """)
     out = subprocess.run([sys.executable, "-c", code], cwd=".",
