@@ -21,7 +21,7 @@ bindings (``"txn:gcls"``, ``"txn:ts"``); nothing hides in
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 GCLS_BINDING = "txn:gcls"
 TS_BINDING = "txn:ts"
@@ -38,9 +38,44 @@ class TxnConfig:
 
 @dataclass
 class TxnStats:
+    """Per-engine counters, shared by the host DES engine and the device
+    batch engine (``apps/txn_device.py``) so Fig. 11 host-vs-device
+    benches compare like-for-like: abort REASONS ("nowait" — 2PL lock
+    conflict, "ts" — TO timestamp check, "occ" — version validation),
+    and the full latency sample (DES time units host-side, wall seconds
+    device-side) for tail percentiles, not just the mean."""
+
     commits: int = 0
     aborts: int = 0
     latency_sum: float = 0.0
+    abort_reasons: dict = field(default_factory=dict)
+    latencies: list = field(default_factory=list)
+
+    def record(self, ok: bool, latency: float,
+               reason: str | None = None) -> None:
+        if ok:
+            self.commits += 1
+        else:
+            self.aborts += 1
+            if reason is not None:
+                self.abort_reasons[reason] = \
+                    self.abort_reasons.get(reason, 0) + 1
+        self.latency_sum += latency
+        self.latencies.append(latency)
+
+    def _pct(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    @property
+    def p50(self) -> float:
+        return self._pct(0.50)
+
+    @property
+    def p99(self) -> float:
+        return self._pct(0.99)
 
 
 class TxnEngine:
@@ -52,6 +87,7 @@ class TxnEngine:
         self.node = node
         self.cfg = cfg
         self.stats = TxnStats()
+        self._abort_reason = None
         gcls = layer.binding(GCLS_BINDING)
         if gcls is None:
             n_gcls = (n_tuples + cfg.tuples_per_gcl - 1) \
@@ -71,24 +107,29 @@ class TxnEngine:
         return self.gcls[tuple_id // self.cfg.tuples_per_gcl]
 
     # ------------------------------------------------------------ execute
-    def run(self, read_set, write_set, thread: int = 0):
-        """Execute one transaction; returns True on commit."""
+    def run(self, read_set, write_set, thread: int = 0, ts=None):
+        """Execute one transaction; returns True on commit.
+
+        ``ts`` (TO only) overrides the FAA-drawn timestamp — the
+        deterministic-replay / external-clock hook: a client that
+        assigned its timestamp at txn begin (or an HLC source) replays
+        here with the SAME ordering decisions, which is what lets the
+        device differential tests drive this engine as an oracle."""
         t0 = self.node.env.now
         algo = self.cfg.algo
+        self._abort_reason = None
         if algo == "2pl":
             ok = yield from self._run_2pl(read_set, write_set)
         elif algo == "to":
-            ok = yield from self._run_to(read_set, write_set)
+            ok = yield from self._run_to(read_set, write_set, ts)
         elif algo == "occ":
             ok = yield from self._run_occ(read_set, write_set)
         else:
             raise ValueError(algo)
         if ok:
             yield from self._commit_io(read_set, write_set)
-            self.stats.commits += 1
-        else:
-            self.stats.aborts += 1
-        self.stats.latency_sum += self.node.env.now - t0
+        self.stats.record(ok, self.node.env.now - t0,
+                          self._abort_reason)
         return ok
 
     def _commit_io(self, read_set, write_set):
@@ -126,6 +167,7 @@ class TxnEngine:
             for g, is_x in sorted([(g, False) for g in rg]
                                   + [(g, True) for g in wg]):
                 if self.cfg.nowait_local and self._local_conflict(g, is_x):
+                    self._abort_reason = "nowait"
                     return False
                 if is_x:
                     h = yield from self.node.xlocked(g)
@@ -151,13 +193,18 @@ class TxnEngine:
         return e.latch.writer is not None
 
     # ----------------------------------------------------------------- TO
-    def _run_to(self, read_set, write_set):
-        ts = yield from self.node.atomic_faa(self.ts_addr, 1)
+    def _run_to(self, read_set, write_set, ts=None):
+        if ts is None:
+            ts = yield from self.node.atomic_faa(self.ts_addr, 1)
         # reads update rts in the header -> exclusive access needed: the
         # cache-invalidation storm the paper calls out for read queries
         by_gcl = {}
         wset = set(write_set)
-        for t in set(read_set) | wset:
+        # sorted tuple order per GCL: the check/update sequence (and so
+        # WHICH tuple a txn aborts at, hence which partial updates leak)
+        # is part of the algorithm's observable state — set iteration
+        # order must not decide it
+        for t in sorted(set(read_set) | wset):
             by_gcl.setdefault(self._gcl_of(t), []).append(t)
         for g in sorted(by_gcl):
             h = yield from self.node.xlocked(g)
@@ -167,10 +214,12 @@ class TxnEngine:
                     rts, wts = rec.get(t, (0, 0))
                     if t in wset:
                         if ts < rts or ts < wts:
+                            self._abort_reason = "ts"
                             return False
                         rec[t] = (rts, ts)
                     else:
                         if ts < wts:
+                            self._abort_reason = "ts"
                             return False
                         rec[t] = (max(rts, ts), wts)
                 yield from h.store(rec)    # rts/wts update dirties the GCL
@@ -198,6 +247,7 @@ class TxnEngine:
                 held.append((h, g))
                 if h.version != snapshots[g]:
                     ok = False
+                    self._abort_reason = "occ"
                     break
             if ok:
                 for h, g in held:

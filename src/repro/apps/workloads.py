@@ -149,6 +149,79 @@ def device_rounds_batches(cfg: DeviceRoundsConfig, seed: int = 0):
 
 
 @dataclass
+class TxnBatchConfig:
+    """Fig. 11-shaped transaction workload for the device txn loop
+    (``apps/txn_device.py``) AND the host ``TxnEngine`` oracle: each
+    batch is B txns mixing NewOrder-style (read 2 tuples, write a
+    district counter + order slot + items across several GCLs),
+    Payment-style (3 writes), and OrderStatus-style read-only shapes
+    over a small Zipf-skewed tuple space, plus shuffled TO timestamps
+    — clients assign their ts at txn BEGIN, so batch arrival order need
+    not match, which is what makes TO aborts real."""
+    n_gcls: int = 64
+    tuples_per_gcl: int = 8
+    batch: int = 16
+    iters: int = 8
+    max_group_lines: int = 4
+    zipf_theta: float = 0.6
+    n_nodes: int = 4
+
+
+def device_txn_batches(cfg: TxnBatchConfig, seed: int = 0):
+    """Pre-generated list of ``(txns, node, ts)`` batches — ``txns`` a
+    list of host-style ``(read_set, write_set)`` tuple-id pairs capped
+    to ``max_group_lines`` distinct GCLs by construction, ``node`` [B]
+    the submitting compute node, ``ts`` [B] the shuffled client-side
+    TO timestamps (globally unique across batches)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    T = cfg.tuples_per_gcl
+    n_tuples = cfg.n_gcls * T
+    zipf = Zipf(cfg.n_gcls, cfg.zipf_theta) if cfg.zipf_theta else None
+
+    def pick_gcls(k):
+        if zipf is None:
+            gs = rng.choice(cfg.n_gcls, size=min(k, cfg.n_gcls),
+                            replace=False)
+        else:
+            gs = zipf.sample_batch(rng, k)
+        return sorted(set(int(g) for g in gs))
+
+    def pick_tuples(gcls, per_gcl):
+        out = []
+        for g in gcls:
+            for s in rng.choice(T, size=min(per_gcl, T), replace=False):
+                out.append(g * T + int(s))
+        return out
+
+    batches = []
+    for b in range(cfg.iters):
+        txns = []
+        for _ in range(cfg.batch):
+            shape = rng.random()
+            if shape < 0.5:                          # NewOrder-style
+                wg = pick_gcls(min(3, cfg.max_group_lines))
+                rg = pick_gcls(1)
+                writes = pick_tuples(wg, 2)
+                reads = pick_tuples(rg, 2)
+            elif shape < 0.85:                       # Payment-style
+                wg = pick_gcls(min(2, cfg.max_group_lines))
+                writes = pick_tuples(wg, 2)[:3]
+                reads = []
+            else:                                    # OrderStatus-style
+                rg = pick_gcls(min(3, cfg.max_group_lines))
+                writes = []
+                reads = pick_tuples(rg, 2)
+            assert all(t < n_tuples for t in reads + writes)
+            txns.append((reads, writes))
+        node = rng.integers(0, cfg.n_nodes, cfg.batch).astype(np.int32)
+        ts = (b * cfg.batch
+              + rng.permutation(cfg.batch)).astype(np.int32)
+        batches.append((txns, node, ts))
+    return batches
+
+
+@dataclass
 class BTreeBatchConfig:
     """YCSB-shaped key workload for the device B-link tree (Fig. 10):
     each batch is ``(keys [R], is_read [R], vals [R])`` with Zipf-skewed

@@ -202,7 +202,8 @@ class SELCCLayer:
         ``mesh[axis]`` with ``home = line % n_shards`` — the device
         mirror of this layer's memory-node striping (``GAddr.flat`` /
         ``home_of``) — driven by ``rounds.run_rounds_sharded`` (or
-        ``run_ops_to_completion(..., mesh=mesh)``).  ``n_lines`` is
+        wrap it with :meth:`as_plane` /
+        ``DevicePlane.open(state, mesh)``).  ``n_lines`` is
         padded up to a shard multiple."""
         from . import rounds
         if n_lines is None:
@@ -216,6 +217,26 @@ class SELCCLayer:
         return rounds.make_state(self.cfg.n_compute, n_lines,
                                  write_back=write_back,
                                  payload_width=payload_width)
+
+    def as_plane(self, n_lines: int | None = None, *,
+                 write_back: bool = False, payload_width: int = 0,
+                 mesh=None, axis: str = "shards", backend: str = "ref",
+                 max_rounds: int = 64, bucket_cap: int | None = None):
+        """Fresh :class:`repro.core.rounds.DevicePlane` sized to this
+        layer — ``as_rounds_state`` plus the facade in one call: the
+        returned plane owns the state, the mesh, and the node count,
+        and exposes ``plane.ops`` / ``plane.rmw`` / ``plane.descent`` /
+        ``plane.txn``.  This is the ONE bridge from the DES world to
+        the device plane; prefer it over juggling raw states and the
+        deprecated ``run_*_to_completion`` dispatchers."""
+        from .rounds.plane import DevicePlane
+        state = self.as_rounds_state(n_lines, write_back=write_back,
+                                     payload_width=payload_width,
+                                     mesh=mesh, axis=axis)
+        return DevicePlane.open(state, mesh, axis=axis,
+                                n_nodes=self.cfg.n_compute,
+                                backend=backend, max_rounds=max_rounds,
+                                bucket_cap=bucket_cap)
 
     @staticmethod
     def make_kv_pool(kv_cfg=None, mesh=None, axis: str = "shards"):

@@ -24,6 +24,12 @@ the same collectives), still one fused loop:
                                 [, payload_width=W])
     state, versions, data, rounds, ok = run_rounds_sharded(
         state, nodes, lines, is_wr[, wdata], mesh=mesh, n_nodes=n_nodes)
+
+Host-facing callers should use the :class:`DevicePlane` facade
+(rounds/plane.py) — ONE object owning state + mesh + n_nodes that
+exposes ``plane.ops`` / ``plane.rmw`` / ``plane.descent`` /
+``plane.txn`` and returns normalized :class:`PlaneResult`s.  The
+legacy ``run_*_to_completion`` dispatchers delegate to it and warn.
 """
 
 from ..coherence import I, M, S
@@ -31,20 +37,25 @@ from .descent import run_descent, run_descent_to_completion
 from .driver import (run_ops_to_completion, run_rmw,
                      run_rmw_to_completion, run_rounds)
 from .engine import TRACE_COUNTS, coherence_round, evict_lines
+from .plane import DevicePlane, PlaneResult
 from .sharded import (coherence_round_sharded, evict_lines_sharded,
                       make_sharded_state, pad_ops, run_descent_sharded,
                       run_rmw_sharded, run_rounds_sharded, shard_state,
                       unshard_state)
 from .state import (check_invariants, is_write_back, make_state,
                     payload_width, stripe_state, unstripe_state)
+from .txn import (TxnBatchResult, run_txn_batch,
+                  run_txn_batch_host, run_txn_rounds)
 
 __all__ = [
-    "I", "S", "M", "TRACE_COUNTS", "check_invariants", "coherence_round",
+    "I", "S", "M", "DevicePlane", "PlaneResult", "TRACE_COUNTS",
+    "TxnBatchResult", "check_invariants", "coherence_round",
     "coherence_round_sharded", "evict_lines", "evict_lines_sharded",
     "is_write_back", "make_sharded_state", "make_state", "pad_ops",
     "payload_width", "run_descent", "run_descent_sharded",
     "run_descent_to_completion", "run_ops_to_completion", "run_rmw",
     "run_rmw_sharded", "run_rmw_to_completion", "run_rounds",
-    "run_rounds_sharded", "shard_state", "stripe_state", "unshard_state",
-    "unstripe_state",
+    "run_rounds_sharded", "run_txn_batch", "run_txn_batch_host",
+    "run_txn_rounds",
+    "shard_state", "stripe_state", "unshard_state", "unstripe_state",
 ]

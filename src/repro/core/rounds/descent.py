@@ -51,6 +51,8 @@ import jax.numpy as jnp
 from .engine import _note_trace, _round_impl
 from .state import payload_width
 
+_warned: set = set()
+
 
 @functools.partial(jax.jit,
                    static_argnames=("transition", "n_nodes", "max_steps",
@@ -128,32 +130,25 @@ def run_descent_to_completion(state, node_id, key, root, *, transition,
                               axis: str = "shards",
                               bucket_cap: int | None = None,
                               path_cap: int = 16):
-    """Host-facing wrapper mirroring :func:`run_ops_to_completion`:
-    dispatches to :func:`run_descent` or (with ``mesh``) the sharded
-    :func:`repro.core.rounds.sharded.run_descent_sharded`, pads slots to
-    the shard count, raises if the step bound was hit, and returns
-    ``(state, line, lanes, levels, hops, paths, path_len, steps)`` as
-    host arrays sliced back to the caller's slot count."""
-    import numpy as np
-    r = np.asarray(root).shape[0]
-    if mesh is not None:
-        from .sharded import pad_ops, run_descent_sharded
-        n_shards = mesh.shape[axis]
-        node_id, root, key = pad_ops(node_id, root, key, n_shards)
-        state, line, lanes, levels, hops, paths, plen, steps, done = \
-            run_descent_sharded(
-                state, node_id, key, root, transition=transition,
-                mesh=mesh, axis=axis, n_nodes=n_nodes,
-                max_steps=max_steps, bucket_cap=bucket_cap,
-                backend=backend, path_cap=path_cap)
-    else:
-        state, line, lanes, levels, hops, paths, plen, steps, done = \
-            run_descent(state, node_id, key, root, transition=transition,
-                        n_nodes=n_nodes, max_steps=max_steps,
-                        backend=backend, path_cap=path_cap)
-    if not bool(done):
-        raise RuntimeError(f"descent did not settle after {max_steps} "
-                           f"steps (broken links?)")
-    return (state, np.asarray(line)[:r], np.asarray(lanes)[:r],
-            np.asarray(levels)[:r], np.asarray(hops)[:r],
-            np.asarray(paths)[:r], np.asarray(plen)[:r], int(steps))
+    """Deprecated: use ``DevicePlane.open(state, mesh).descent(...)``.
+
+    Thin delegating wrapper kept for compatibility; returns the legacy
+    ``(state, line, lanes, levels, hops, paths, path_len, steps)``
+    host tuple."""
+    if "run_descent_to_completion" not in _warned:
+        _warned.add("run_descent_to_completion")
+        import warnings
+        warnings.warn(
+            "run_descent_to_completion is deprecated; use "
+            "DevicePlane.descent "
+            "(repro.core.rounds.plane.DevicePlane) instead",
+            DeprecationWarning, stacklevel=2)
+    from .plane import DevicePlane
+    plane = DevicePlane.open(state, mesh, axis=axis, n_nodes=n_nodes,
+                             backend=backend, max_rounds=max_steps,
+                             bucket_cap=bucket_cap)
+    res = plane.descent(node_id, key, root, transition=transition,
+                        path_cap=path_cap)
+    s = res.stats
+    return (plane.state, s["line"], res.data, s["levels"], s["hops"],
+            s["paths"], s["path_len"], res.rounds)

@@ -132,51 +132,39 @@ def run_rmw(state, node_id, line, operands=(), *, modify, n_nodes: int,
             jnp.logical_and(ok1, ok2))
 
 
+_warned: set = set()
+
+
+def _deprecate(old: str, new: str) -> None:
+    # Call-time warn-once (module-level set, so importlib.reload of this
+    # module re-warns — same contract as the latchword shim).
+    if old in _warned:
+        return
+    _warned.add(old)
+    import warnings
+    warnings.warn(
+        f"{old} is deprecated; use {new} "
+        f"(repro.core.rounds.plane.DevicePlane) instead",
+        DeprecationWarning, stacklevel=3)
+
+
 def run_rmw_to_completion(state, node_id, line, modify, operands=(), *,
                           n_nodes, max_rounds: int = 64,
                           backend: str = "ref", mesh=None,
                           axis: str = "shards",
                           bucket_cap: int | None = None):
-    """Host-facing wrapper over :func:`run_rmw` mirroring
-    :func:`run_ops_to_completion`: returns ``(state, versions, rounds,
-    data)`` with host arrays and raises if the round bound was hit.
+    """Deprecated: use ``DevicePlane.open(state, mesh).rmw(...)``.
 
-    With ``mesh`` the fused RMW runs on the sharded plane
-    (:func:`repro.core.rounds.sharded.run_rmw_sharded`): op slots are
-    padded to the shard count and every operand is row-padded with
-    zeros alongside them — operands must therefore be ``[R, ...]``
-    row-aligned with the op slots, and ``modify`` must treat a
-    ``line = -1`` row as a no-op (its zero-padded operands are
-    garbage)."""
-    import numpy as np
-    if mesh is not None:
-        from .sharded import pad_ops, run_rmw_sharded
-        r = np.asarray(line).shape[0]
-        n_shards = mesh.shape[axis]
-        node_id, line, isw = pad_ops(node_id, line,
-                                     np.zeros(r, np.int32), n_shards)
-        pad = line.shape[0] - r
-        if pad:
-            operands = tuple(
-                np.concatenate(
-                    [np.asarray(op),
-                     np.zeros((pad,) + np.asarray(op).shape[1:],
-                              np.asarray(op).dtype)])
-                for op in operands)
-        state, versions, data, rounds, done = run_rmw_sharded(
-            state, node_id, line, tuple(operands), modify=modify,
-            mesh=mesh, axis=axis, n_nodes=n_nodes, max_rounds=max_rounds,
-            bucket_cap=bucket_cap, backend=backend)
-        versions = versions[:r]
-        data = data[:r]
-    else:
-        state, versions, data, rounds, done = run_rmw(
-            state, node_id, line, tuple(operands), modify=modify,
-            n_nodes=n_nodes, max_rounds=max_rounds, backend=backend)
-    if not bool(done):
-        raise RuntimeError(f"RMW ops not served after {max_rounds} "
-                           f"rounds per phase")
-    return state, np.asarray(versions), int(rounds), np.asarray(data)
+    Thin delegating wrapper kept for compatibility; returns the legacy
+    ``(state, versions, rounds, data)`` host tuple."""
+    _deprecate("run_rmw_to_completion", "DevicePlane.rmw")
+    from .plane import DevicePlane
+    plane = DevicePlane.open(state, mesh, axis=axis, n_nodes=n_nodes,
+                             backend=backend, max_rounds=max_rounds,
+                             bucket_cap=bucket_cap)
+    res = plane.rmw(node_id, line, modify=modify,
+                    operands=tuple(operands))
+    return plane.state, res.version, res.rounds, res.data
 
 
 def run_ops_to_completion(state, node_id, line, is_write, wdata=None, *,
@@ -184,44 +172,17 @@ def run_ops_to_completion(state, node_id, line, is_write, wdata=None, *,
                           backend: str = "ref", mesh=None,
                           axis: str = "shards",
                           bucket_cap: int | None = None):
-    """Compatibility wrapper over :func:`run_rounds` (the pre-refactor
-    host-loop API): returns ``(state, versions, rounds)`` as host values
-    and raises if the round bound was hit — ONE sync at the end, none
-    inside the loop.  Passing ``wdata`` [R, W] opts into the payload
-    plane: the return widens to ``(state, versions, rounds, data)``
-    with each op's read payload as a host array (pass zeros to read
-    bytes without writing any).
+    """Deprecated: use ``DevicePlane.open(state, mesh).ops(...)``.
 
-    Passing ``mesh`` routes through the mesh-sharded engine
-    (:mod:`repro.core.rounds.sharded`) instead: the state must be a
-    sharded (stripe-layout) state, op slots are padded to the shard
-    count automatically, and ``bucket_cap`` bounds the per-(source,
-    home) routing buckets (overflow defers and respins in-loop,
-    payload lanes included) — same signature, same return contract, so
-    differential tests replay one trace through both planes verbatim."""
-    import numpy as np
-    if mesh is not None:
-        from .sharded import pad_ops, run_rounds_sharded
-        r = np.asarray(line).shape[0]
-        if wdata is None:
-            node_id, line, is_write = pad_ops(node_id, line, is_write,
-                                              mesh.shape[axis])
-        else:
-            node_id, line, is_write, wdata = pad_ops(
-                node_id, line, is_write, mesh.shape[axis], wdata)
-        state, versions, data, rounds, done = run_rounds_sharded(
-            state, node_id, line, is_write, wdata, mesh=mesh, axis=axis,
-            n_nodes=n_nodes, max_rounds=max_rounds,
-            bucket_cap=bucket_cap, backend=backend)
-        versions = versions[:r]
-        data = data[:r]
-    else:
-        state, versions, data, rounds, done = run_rounds(
-            state, node_id, line, is_write, wdata, n_nodes=n_nodes,
-            max_rounds=max_rounds, backend=backend)
-    if not bool(done):
-        raise RuntimeError(f"ops not served after {max_rounds} rounds")
+    Thin delegating wrapper kept for compatibility; returns the legacy
+    ``(state, versions, rounds)`` host tuple, widened with ``data``
+    when ``wdata`` is passed."""
+    _deprecate("run_ops_to_completion", "DevicePlane.ops")
+    from .plane import DevicePlane
+    plane = DevicePlane.open(state, mesh, axis=axis, n_nodes=n_nodes,
+                             backend=backend, max_rounds=max_rounds,
+                             bucket_cap=bucket_cap)
+    res = plane.ops(node_id, line, is_write, wdata)
     if wdata is not None:
-        return (state, np.asarray(versions), int(rounds),
-                np.asarray(data))
-    return state, np.asarray(versions), int(rounds)
+        return plane.state, res.version, res.rounds, res.data
+    return plane.state, res.version, res.rounds

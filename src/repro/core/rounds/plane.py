@@ -1,0 +1,279 @@
+"""`DevicePlane` — ONE facade over the device coherence plane.
+
+Pre-facade, driving the rounds engine meant choosing among six
+entrypoints (``run_rounds`` / ``run_rmw`` / ``run_descent`` and their
+``*_sharded`` mirrors) plus three host-facing ``run_*_to_completion``
+dispatchers, each with its own tuple arity (``run_ops_to_completion``
+widens to a 4-tuple when ``wdata`` is passed, the RMW wrapper always
+returns 4, descent returns 8) — and every APPLICATION re-implemented
+the same ``mesh is None`` branch, slot padding, operand zero-padding
+and bound-hit check (``index/tree.py``, ``dsm/kvpool.py``,
+``serve/loop.py`` each carried a copy).  That is exactly the
+programmability gap the layered-abstraction line of work (MIND; "Memory
+Disaggregation: Advances and Open Challenges") says a disaggregated
+memory plane must close.
+
+:class:`DevicePlane` owns the whole bundle — ``state + mesh + n_nodes +
+write_back`` — and exposes the three verbs with ONE keyword surface and
+ONE result type:
+
+    plane = DevicePlane.open(state, mesh=None, n_nodes=4)    # or
+    plane = layer.as_plane(payload_width=W, mesh=mesh)       # from DES
+
+    res = plane.ops(node, line, is_write, wdata=wdata)   # PlaneResult
+    res = plane.rmw(node, line, modify=splice, operands=(tok,))
+    res = plane.descent(node, key, root, transition=step)
+    out = plane.txn(node, glines, rmask, wmask, ts, algo="2pl")
+
+Every verb mutates ``plane.state`` in place (the plane IS the memory),
+materializes host arrays exactly once at the end (zero syncs inside the
+fused loops), raises ``RuntimeError`` if the round/step bound was hit,
+and returns a :class:`PlaneResult` — ``version``, ``data``, ``rounds``,
+``stats`` — instead of a positional tuple whose arity the caller must
+memorize.  Sharded planes route through the very same calls: the mesh
+dispatch, ``pad_ops`` slot padding and result re-slicing all live HERE,
+once.
+
+The legacy ``run_*_to_completion`` functions survive as thin delegating
+wrappers that emit a ``DeprecationWarning`` on first use (the
+``latchword`` / ``jax_protocol`` precedent).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PlaneResult:
+    """Normalized result of every DevicePlane verb.
+
+    * ``version`` — per-slot protocol versions [R] (``None`` for
+      descents: a read walk names lanes, not versions);
+    * ``data``    — per-slot payload lanes [R, W] (the read bytes for
+      ``ops``/``rmw``, the LEAF lanes for ``descent``; width 0 on a
+      version-only plane);
+    * ``rounds``  — coherence rounds (or descent steps) the fused loop
+      spent, summed over phases;
+    * ``stats``   — verb-specific extras (descent: ``line``, ``levels``,
+      ``hops``, ``paths``, ``path_len``).
+    """
+
+    version: np.ndarray | None
+    data: np.ndarray | None
+    rounds: int
+    stats: dict = field(default_factory=dict)
+
+
+class DevicePlane:
+    """Facade owning a rounds-plane state and its execution geometry.
+
+    ``open`` adopts an EXISTING state (flat or mesh-sharded); build
+    fresh states with ``make_state`` / ``make_sharded_state`` or the
+    DES bridge ``SELCCLayer.as_plane``.  All verbs mutate
+    ``self.state``; read it back (flat layout, host-side) with
+    :meth:`flat_state`.
+    """
+
+    def __init__(self, state, mesh=None, *, axis: str = "shards",
+                 n_nodes: int | None = None, backend: str = "ref",
+                 max_rounds: int = 64, bucket_cap: int | None = None):
+        self.state = state
+        self.mesh = mesh
+        self.axis = axis
+        self.n_nodes = (int(state["cache_state"].shape[0])
+                        if n_nodes is None else int(n_nodes))
+        self.backend = backend
+        self.max_rounds = int(max_rounds)
+        self.bucket_cap = bucket_cap
+
+    @classmethod
+    def open(cls, state, mesh=None, *, axis: str = "shards",
+             n_nodes: int | None = None, backend: str = "ref",
+             max_rounds: int = 64, bucket_cap: int | None = None
+             ) -> "DevicePlane":
+        """The one constructor: wrap a round state (+ optional mesh)."""
+        return cls(state, mesh, axis=axis, n_nodes=n_nodes,
+                   backend=backend, max_rounds=max_rounds,
+                   bucket_cap=bucket_cap)
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis] if self.sharded else 1
+
+    @property
+    def n_lines(self) -> int:
+        return int(self.state["words"].shape[0])
+
+    @property
+    def payload_width(self) -> int:
+        from .state import payload_width
+        return payload_width(self.state)
+
+    @property
+    def write_back(self) -> bool:
+        return "dirty" in self.state
+
+    def flat_state(self) -> dict:
+        """Host-side snapshot in FLAT (line-major) layout — unstripes a
+        sharded state; use for invariants and image checks."""
+        if self.sharded:
+            from .sharded import unshard_state
+            return unshard_state(self.state, self.mesh, self.axis)
+        return self.state
+
+    def check(self) -> None:
+        """Protocol invariants over the (unsharded) state."""
+        from .state import check_invariants
+        check_invariants(self.flat_state())
+
+    # ------------------------------------------------------------- verbs
+    def ops(self, node_id, line, is_write, wdata=None, *,
+            max_rounds: int | None = None) -> PlaneResult:
+        """Drive op slots ``(node, line, is_write[, wdata])`` to
+        completion through the fused spin loop (flat or sharded)."""
+        mr = self.max_rounds if max_rounds is None else max_rounds
+        r = np.asarray(line).shape[0]
+        if self.sharded:
+            from .sharded import pad_ops, run_rounds_sharded
+            if wdata is None:
+                node_id, line, is_write = pad_ops(
+                    node_id, line, is_write, self.n_shards)
+            else:
+                node_id, line, is_write, wdata = pad_ops(
+                    node_id, line, is_write, self.n_shards, wdata)
+            state, versions, data, rounds, done = run_rounds_sharded(
+                self.state, node_id, line, is_write, wdata,
+                mesh=self.mesh, axis=self.axis, n_nodes=self.n_nodes,
+                max_rounds=mr, bucket_cap=self.bucket_cap,
+                backend=self.backend)
+        else:
+            from .driver import run_rounds
+            state, versions, data, rounds, done = run_rounds(
+                self.state, node_id, line, is_write, wdata,
+                n_nodes=self.n_nodes, max_rounds=mr,
+                backend=self.backend)
+        if not bool(done):
+            raise RuntimeError(f"ops not served after {mr} rounds")
+        self.state = state
+        return PlaneResult(np.asarray(versions)[:r],
+                           np.asarray(data)[:r], int(rounds))
+
+    def rmw(self, node_id, line, *, modify, operands=(),
+            max_rounds: int | None = None) -> PlaneResult:
+        """Fused coherent read-modify-write: ``modify(data, line,
+        *operands)`` runs on device between the read and write phases.
+        ``modify`` must be a static callable (cache it per shape) and
+        treat ``line = -1`` rows as no-ops; operands must be ``[R, ...]``
+        row-aligned with the op slots (sharded planes zero-pad them
+        alongside the slots)."""
+        mr = self.max_rounds if max_rounds is None else max_rounds
+        r = np.asarray(line).shape[0]
+        if self.sharded:
+            from .sharded import pad_ops, run_rmw_sharded
+            node_id, line, _ = pad_ops(node_id, line,
+                                       np.zeros(r, np.int32),
+                                       self.n_shards)
+            pad = np.asarray(line).shape[0] - r
+            if pad:
+                operands = tuple(
+                    np.concatenate(
+                        [np.asarray(op),
+                         np.zeros((pad,) + np.asarray(op).shape[1:],
+                                  np.asarray(op).dtype)])
+                    for op in operands)
+            state, versions, data, rounds, done = run_rmw_sharded(
+                self.state, node_id, line, tuple(operands),
+                modify=modify, mesh=self.mesh, axis=self.axis,
+                n_nodes=self.n_nodes, max_rounds=mr,
+                bucket_cap=self.bucket_cap, backend=self.backend)
+        else:
+            from .driver import run_rmw
+            state, versions, data, rounds, done = run_rmw(
+                self.state, node_id, line, tuple(operands),
+                modify=modify, n_nodes=self.n_nodes, max_rounds=mr,
+                backend=self.backend)
+        if not bool(done):
+            raise RuntimeError(f"RMW ops not served after {mr} "
+                               f"rounds per phase")
+        self.state = state
+        return PlaneResult(np.asarray(versions)[:r],
+                           np.asarray(data)[:r], int(rounds))
+
+    def descent(self, node_id, key, root, *, transition,
+                path_cap: int = 16,
+                max_steps: int | None = None) -> PlaneResult:
+        """Whole pointer-chase walk in one dispatch: ``transition(data,
+        key) -> (at_leaf, hop, nxt)`` advances every slot on device.
+        ``data`` is each slot's LEAF lanes; ``stats`` carries ``line``,
+        ``levels``, ``hops``, ``paths``, ``path_len``."""
+        ms = self.max_rounds if max_steps is None else max_steps
+        r = np.asarray(root).shape[0]
+        if self.sharded:
+            from .sharded import pad_ops, run_descent_sharded
+            node_id, root, key = pad_ops(node_id, root, key,
+                                         self.n_shards)
+            state, line, lanes, levels, hops, paths, plen, steps, done \
+                = run_descent_sharded(
+                    self.state, node_id, key, root,
+                    transition=transition, mesh=self.mesh,
+                    axis=self.axis, n_nodes=self.n_nodes, max_steps=ms,
+                    bucket_cap=self.bucket_cap, backend=self.backend,
+                    path_cap=path_cap)
+        else:
+            from .descent import run_descent
+            state, line, lanes, levels, hops, paths, plen, steps, done \
+                = run_descent(
+                    self.state, node_id, key, root,
+                    transition=transition, n_nodes=self.n_nodes,
+                    max_steps=ms, backend=self.backend,
+                    path_cap=path_cap)
+        if not bool(done):
+            raise RuntimeError(f"descent did not settle after {ms} "
+                               f"steps (broken links?)")
+        self.state = state
+        return PlaneResult(
+            None, np.asarray(lanes)[:r], int(steps),
+            stats={"line": np.asarray(line)[:r],
+                   "levels": np.asarray(levels)[:r],
+                   "hops": np.asarray(hops)[:r],
+                   "paths": np.asarray(paths)[:r],
+                   "path_len": np.asarray(plen)[:r]})
+
+    def txn(self, node_id, glines, rmask, wmask, ts, *, algo: str,
+            max_iters: int | None = None,
+            max_rounds: int | None = None):
+        """Run one transaction batch through the fused device CC loop
+        (:mod:`repro.core.rounds.txn`); returns a ``TxnBatchResult``."""
+        from .txn import run_txn_batch
+        return run_txn_batch(self, node_id, glines, rmask, wmask, ts,
+                             algo=algo, max_iters=max_iters,
+                             max_rounds=max_rounds)
+
+    def evict(self, node_id, line) -> None:
+        """Evict (node, line) pairs: release holder latches, flushing
+        dirty write-back copies first."""
+        if self.sharded:
+            from .sharded import evict_lines_sharded, pad_ops
+            node_id, line, _ = pad_ops(
+                node_id, line, np.zeros(np.asarray(line).shape[0],
+                                        np.int32), self.n_shards)
+            self.state = evict_lines_sharded(
+                self.state, node_id, line, mesh=self.mesh,
+                axis=self.axis, bucket_cap=self.bucket_cap)
+        else:
+            from .engine import evict_lines
+            self.state = evict_lines(self.state, node_id, line)
+
+    def __repr__(self) -> str:
+        geo = (f"sharded x{self.n_shards}" if self.sharded else "flat")
+        return (f"DevicePlane({geo}, n_nodes={self.n_nodes}, "
+                f"n_lines={self.n_lines}, W={self.payload_width}, "
+                f"{'write-back' if self.write_back else 'write-through'})")

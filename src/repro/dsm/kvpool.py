@@ -373,10 +373,24 @@ class SELCCKVPool:
         self.axis = axis
         self.pool = make_pool(cfg, mesh=mesh, axis=axis)
         self.cache = make_replica_cache(cfg)
-        self.rounds_state = None     # set by open_rounds_plane()
+        self.rounds_plane = None     # set by open_rounds_plane()
         # page allocation shares dsm.LineAllocator's contract: free-list
         # reuse, raise on exhaustion, reject double-free/never-allocated
         self._alloc = LineAllocator(cfg.n_pages)
+
+    @property
+    def rounds_state(self):
+        """The coherence plane's state dict (None until
+        ``open_rounds_plane``); owned by ``self.rounds_plane``."""
+        return (None if self.rounds_plane is None
+                else self.rounds_plane.state)
+
+    @rounds_state.setter
+    def rounds_state(self, value):
+        if value is None:
+            self.rounds_plane = None
+        else:
+            self.rounds_plane.state = value
 
     def as_rounds_state(self, *, write_back: bool = False, mesh=None,
                         axis: str | None = None):
@@ -384,8 +398,9 @@ class SELCCKVPool:
         are the lines, replicas are the nodes.  With a mesh (the pool's
         own by default) the state is the mesh-sharded plane
         (``home = page % n_shards`` — ``dsm.address.home_of``), driven
-        by ``rounds.run_rounds_sharded`` / ``run_ops_to_completion(...,
-        mesh=...)`` with the SAME logical page indices the pool's data
+        by ``rounds.run_rounds_sharded`` or a
+        ``DevicePlane.open(state, mesh)`` facade
+        with the SAME logical page indices the pool's data
         plane uses.  Note the two planes agree on indices, not physical
         placement: the data arrays are GSPMD block-sharded (see
         :func:`make_pool`) while the coherence plane stripes by
@@ -426,17 +441,16 @@ class SELCCKVPool:
                                       self.cfg)
         if self.mesh is not None:
             state = rounds.shard_state(state, self.mesh, self.axis)
-        self.rounds_state = state
+        self.rounds_plane = rounds.DevicePlane.open(
+            state, self.mesh, axis=self.axis,
+            n_nodes=self.cfg.n_replicas)
         return state
 
     def _plane_ops(self, node, line, isw, wdata):
         """Drive one op batch through the pool's coherence plane (flat
         or mesh-sharded) and return (versions, read payloads)."""
-        from ..core import rounds
-        self.rounds_state, vers, _, data = rounds.run_ops_to_completion(
-            self.rounds_state, node, line, isw, wdata,
-            n_nodes=self.cfg.n_replicas, mesh=self.mesh, axis=self.axis)
-        return vers, data
+        res = self.rounds_plane.ops(node, line, isw, wdata)
+        return res.version, res.data
 
     def _plane_held(self, replica: int, pages) -> np.ndarray:
         """Rounds-mode hit mask: the replica already holds the page in
@@ -531,16 +545,14 @@ class SELCCKVPool:
         # Pre-fuse this was a host-side two-phase: a read rounds call,
         # a numpy splice, and a write rounds call — two dispatches and
         # a full host round trip per appended batch.
-        from ..core import rounds
         pages = np.asarray(pages, np.int32)
         offsets = np.asarray(offsets, np.int32)
         node = np.broadcast_to(np.asarray(replica, np.int32),
                                pages.shape).astype(np.int32)
-        self.rounds_state, _, nrounds, _ = rounds.run_rmw_to_completion(
-            self.rounds_state, node, pages, _append_splice(self.cfg),
-            (offsets, np.asarray(k_new), np.asarray(v_new)),
-            n_nodes=self.cfg.n_replicas, mesh=self.mesh, axis=self.axis)
-        return nrounds
+        res = self.rounds_plane.rmw(
+            node, pages, modify=_append_splice(self.cfg),
+            operands=(offsets, np.asarray(k_new), np.asarray(v_new)))
+        return res.rounds
 
     def read(self, replica: int, pages):
         if self.rounds_state is None:

@@ -76,7 +76,11 @@ class DeviceBTree:
         if driver == "host" and mesh is not None:
             raise ValueError("the host-synced baseline driver is "
                              "flat-plane only")
-        self.state = state
+        # the plane facade owns state + mesh + execution geometry; the
+        # tree's own attrs below only feed the host-synced baselines
+        self.plane = rounds.DevicePlane.open(
+            state, mesh, axis=axis, n_nodes=n_nodes, backend=backend,
+            max_rounds=max_rounds)
         self.codec = codec
         self.alloc = alloc
         self.mesh = mesh
@@ -89,6 +93,14 @@ class DeviceBTree:
         self.height = 0
         self.stats = {"splits": 0, "link_hops": 0, "level_steps": 0,
                       "rmw_steps": 0}
+
+    @property
+    def state(self):
+        return self.plane.state
+
+    @state.setter
+    def state(self, value):
+        self.plane.state = value
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
@@ -166,11 +178,8 @@ class DeviceBTree:
             wdata = np.zeros((len(line), width), np.int32)
         if self.driver == "host":
             return self._ops_host(node, line, isw, wdata)
-        self.state, vers, _, data = rounds.run_ops_to_completion(
-            self.state, node, line, isw, wdata, n_nodes=self.n_nodes,
-            max_rounds=self.max_rounds, backend=self.backend,
-            mesh=self.mesh, axis=self.axis)
-        return vers, data
+        res = self.plane.ops(node, line, isw, wdata)
+        return res.version, res.data
 
     def _ops_host(self, node, line, isw, wdata):
         """The pre-fuse baseline: re-dispatch ``coherence_round`` from a
@@ -221,12 +230,11 @@ class DeviceBTree:
                 keys, vals))
             _, _ = self._ops_host(node, line, np.ones_like(line), new)
             return new
-        self.state, _, _, data = rounds.run_rmw_to_completion(
-            self.state, node, line, self.codec.insert_modify,
-            (np.asarray(keys, np.int32), np.asarray(vals, np.int32)),
-            n_nodes=self.n_nodes, max_rounds=self.max_rounds,
-            backend=self.backend, mesh=self.mesh, axis=self.axis)
-        return data
+        res = self.plane.rmw(
+            node, line, modify=self.codec.insert_modify,
+            operands=(np.asarray(keys, np.int32),
+                      np.asarray(vals, np.int32)))
+        return res.data
 
     def _write_lines(self, lines, lane_rows, node: int):
         """Coherent write ops publishing full node images (fresh lines
@@ -272,12 +280,13 @@ class DeviceBTree:
             return self._descend_level(keys, b, node, record_path)
         root = np.full(cap, self.root, np.int32)
         root[b:] = -1                        # pads never present an op
-        (self.state, cur, lanes, levels, hops, paths, plen,
-         _steps) = rounds.run_descent_to_completion(
-            self.state, np.full(cap, node, np.int32), keys, root,
-            transition=self.codec.descend_step, n_nodes=self.n_nodes,
-            max_steps=self.max_rounds, backend=self.backend,
-            mesh=self.mesh, axis=self.axis, path_cap=_MAX_LINK_HOPS)
+        res = self.plane.descent(
+            np.full(cap, node, np.int32), keys, root,
+            transition=self.codec.descend_step,
+            path_cap=_MAX_LINK_HOPS)
+        cur, lanes = res.stats["line"], res.data
+        levels, hops = res.stats["levels"], res.stats["hops"]
+        paths, plen = res.stats["paths"], res.stats["path_len"]
         # the loop returns per-key level/hop counts, so the stats keep
         # the per-level driver's meaning: steps a level-synced walk
         # would have dispatched (deepest live key), and total hops

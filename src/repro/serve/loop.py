@@ -48,7 +48,6 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core import rounds
 from .model import DecodeView
 from .request import QueueFull, RequestQueue, RequestState, ServeRequest
 from .slots import Phase, SlotManager
@@ -89,11 +88,11 @@ class ServeLoop:
     def __init__(self, pool, model, *, n_slots: int = 8,
                  max_pages: int = 16, prefill_chunk: int = 8,
                  queue_capacity: int = 64, on_complete=None):
-        if pool.rounds_state is None:
+        if pool.rounds_plane is None:
             raise ValueError(
                 "ServeLoop serves the rounds plane: call "
                 "pool.open_rounds_plane() first")
-        if rounds.is_write_back(pool.rounds_state):
+        if pool.rounds_plane.write_back:
             raise ValueError(
                 "ServeLoop needs a write-through plane: the fused "
                 "attend reads mem_data, which write-back lets lag "

@@ -177,11 +177,11 @@ def test_mesh_backed_pool_matches_unsharded():
     state = sharded.as_rounds_state(write_back=True)
     assert state["words"].shape[0] == cfg.n_pages
     assert state["cache_state"].shape == (cfg.n_replicas, cfg.n_pages)
-    state, vers, _ = rp.run_ops_to_completion(
-        state, np.asarray([0], np.int32), np.asarray([3], np.int32),
-        np.asarray([1], np.int32), n_nodes=cfg.n_replicas, mesh=mesh)
-    assert vers.tolist() == [1]
-    rp.check_invariants(state)
+    plane = rp.DevicePlane.open(state, mesh, n_nodes=cfg.n_replicas)
+    res = plane.ops(np.asarray([0], np.int32), np.asarray([3], np.int32),
+                    np.asarray([1], np.int32))
+    assert res.version.tolist() == [1]
+    rp.check_invariants(plane.state)
 
 
 # --------------------------------------------- rounds-backed data plane

@@ -69,16 +69,16 @@ def _rounds_versions(write_back: bool):
     layer.allocate_many(N_LINES)
     state = layer.as_rounds_state(write_back=write_back)
     assert rp.is_write_back(state) == write_back
+    plane = rp.DevicePlane.open(state, n_nodes=N_NODES)
     out = []
     for batch in TRACE:
         node = np.asarray([b[0] for b in batch], np.int32)
         line = np.asarray([b[1] for b in batch], np.int32)
         isw = np.asarray([b[2] for b in batch], np.int32)
-        state, vers, _ = rp.run_ops_to_completion(
-            state, node, line, isw, n_nodes=N_NODES)
-        rp.check_invariants(state)
-        out.append([int(v) for v in vers])
-    return out, state
+        res = plane.ops(node, line, isw)
+        rp.check_invariants(plane.state)
+        out.append([int(v) for v in res.version])
+    return out, plane.state
 
 
 @pytest.mark.parametrize("write_back", [False, True])
@@ -139,6 +139,7 @@ def _rounds_versions_and_bytes(write_back: bool):
     from repro.core import rounds as rp
     state = rp.make_state(N_NODES, N_LINES, write_back=write_back,
                           payload_width=1)
+    plane = rp.DevicePlane.open(state, n_nodes=N_NODES)
     out = []
     for b, batch in enumerate(TRACE):
         node = np.asarray([x[0] for x in batch], np.int32)
@@ -147,11 +148,11 @@ def _rounds_versions_and_bytes(write_back: bool):
         wdata = np.asarray([[_payload(b, slot) if w else 0]
                             for slot, (_, _, w) in enumerate(batch)],
                            np.int32)
-        state, vers, _, data = rp.run_ops_to_completion(
-            state, node, line, isw, wdata, n_nodes=N_NODES)
-        rp.check_invariants(state)
-        out.append([(int(v), int(d[0])) for v, d in zip(vers, data)])
-    return out, state
+        res = plane.ops(node, line, isw, wdata)
+        rp.check_invariants(plane.state)
+        out.append([(int(v), int(d[0]))
+                    for v, d in zip(res.version, res.data)])
+    return out, plane.state
 
 
 @pytest.mark.parametrize("write_back", [False, True])

@@ -16,9 +16,24 @@ def _ops(node, line, isw):
             np.asarray(isw, np.int32))
 
 
+def _ops_tc(state, node, line, isw, wdata=None, **kw):
+    # the legacy run_ops_to_completion call shape, via the DevicePlane
+    # facade (the deprecated wrapper itself is covered in test_plane.py)
+    plane = rp.DevicePlane.open(state, kw.pop("mesh", None), **kw)
+    res = plane.ops(node, line, isw, wdata)
+    if wdata is not None:
+        return plane.state, res.version, res.rounds, res.data
+    return plane.state, res.version, res.rounds
+
+
+def _rmw_tc(state, node, line, modify, operands=(), **kw):
+    plane = rp.DevicePlane.open(state, kw.pop("mesh", None), **kw)
+    res = plane.rmw(node, line, modify=modify, operands=operands)
+    return plane.state, res.version, res.rounds, res.data
+
+
 def _run(state, node, line, isw, n_nodes, **kw):
-    return rp.run_ops_to_completion(state, *_ops(node, line, isw),
-                                    n_nodes=n_nodes, **kw)
+    return _ops_tc(state, *_ops(node, line, isw), n_nodes=n_nodes, **kw)
 
 
 # ------------------------------------------------------------- upgrades
@@ -161,7 +176,7 @@ def test_run_rounds_reports_unserved_on_bound():
     state = rp.make_state(2, 4)
     # two nodes fight over one line with max_rounds=1: someone is unserved
     with pytest.raises(RuntimeError, match="not served"):
-        rp.run_ops_to_completion(state, *_ops([0, 1], [1, 1], [1, 1]),
+        _ops_tc(state, *_ops([0, 1], [1, 1], [1, 1]),
                                  n_nodes=2, max_rounds=1)
 
 
@@ -178,7 +193,7 @@ def test_random_mixed_trace_invariants(backend, write_back):
         node = rng.integers(0, n_nodes, r).astype(np.int32)
         line = rng.integers(-1, n_lines, r).astype(np.int32)
         isw = rng.integers(0, 2, r).astype(np.int32)
-        state, _, _ = rp.run_ops_to_completion(
+        state, _, _ = _ops_tc(
             state, node, line, isw, n_nodes=n_nodes, max_rounds=128,
             backend=backend)
         rp.check_invariants(state)
@@ -195,14 +210,14 @@ def test_payload_write_apply_and_fetch_on_grant(backend):
     state = rp.make_state(3, 4, payload_width=2)
     assert rp.payload_width(state) == 2
     # write lands bytes in the writer's cache AND (write-through) memory
-    state, v, _, d = rp.run_ops_to_completion(
+    state, v, _, d = _ops_tc(
         state, *_ops([0], [1], [1]), _wd([[7, 9]]), n_nodes=3,
         backend=backend)
     assert d.tolist() == [[7, 9]]
     assert np.asarray(state["mem_data"])[1].tolist() == [7, 9]
     rp.check_invariants(state)
     # another node's read miss fetches the bytes on grant
-    state, v, _, d = rp.run_ops_to_completion(
+    state, v, _, d = _ops_tc(
         state, *_ops([2], [1], [0]), _wd([[0, 0]]), n_nodes=3,
         backend=backend)
     assert d.tolist() == [[7, 9]]
@@ -215,7 +230,7 @@ def test_payload_coalesced_group_serializes_to_last_write():
     # one node, two writes + one read on one line in a single call: the
     # group serializes in slot order, so slot 1's bytes are final and
     # EVERY slot's reply carries them (reads observe start+k)
-    state, v, _, d = rp.run_ops_to_completion(
+    state, v, _, d = _ops_tc(
         state, *_ops([0, 0, 0], [2, 2, 2], [1, 1, 0]),
         _wd([[11], [22], [0]]), n_nodes=2)
     assert v.tolist() == [1, 2, 2]
@@ -226,21 +241,21 @@ def test_payload_coalesced_group_serializes_to_last_write():
 
 def test_payload_write_back_flush_paths():
     state = rp.make_state(3, 4, write_back=True, payload_width=2)
-    state, _, _, _ = rp.run_ops_to_completion(
+    state, _, _, _ = _ops_tc(
         state, *_ops([0], [1], [1]), _wd([[5, 6]]), n_nodes=3)
     # dirty: memory bytes still stale
     assert np.asarray(state["mem_data"])[1].tolist() == [0, 0]
     rp.check_invariants(state)
     # a reader forces downgrade: bytes flush WITH the version, and the
     # reader's reply carries them
-    state, v, _, d = rp.run_ops_to_completion(
+    state, v, _, d = _ops_tc(
         state, *_ops([1], [1], [0]), _wd([[0, 0]]), n_nodes=3)
     assert d.tolist() == [[5, 6]]
     assert np.asarray(state["mem_data"])[1].tolist() == [5, 6]
     rp.check_invariants(state)
     # invalidation (steal) flushes too: the stealing writer starts from
     # the flushed memory image
-    state, _, _, _ = rp.run_ops_to_completion(
+    state, _, _, _ = _ops_tc(
         state, *_ops([2], [1], [1]), _wd([[8, 8]]), n_nodes=3)
     rp.check_invariants(state)
     assert np.asarray(state["mem_data"])[1].tolist() == [5, 6]  # dirty again
@@ -262,7 +277,7 @@ def test_payload_random_soup_invariants(write_back):
         line = rng.integers(-1, n_lines, r).astype(np.int32)
         isw = rng.integers(0, 2, r).astype(np.int32)
         wd = rng.integers(1, 1000, (r, width)).astype(np.int32)
-        state, _, _, _ = rp.run_ops_to_completion(
+        state, _, _, _ = _ops_tc(
             state, node, line, isw, wd, n_nodes=n_nodes, max_rounds=128)
         rp.check_invariants(state)
 
@@ -286,7 +301,7 @@ def test_payload_driver_compiles_once_per_shape():
                 r.integers(0, 2, 8).astype(np.int32),
                 r.integers(1, 99, (8, 8)).astype(np.int32))
 
-    state, _, _, _ = rp.run_ops_to_completion(state, *batch(1),
+    state, _, _, _ = _ops_tc(state, *batch(1),
                                               n_nodes=4)
     round_key = ("round", 4, 16, 8, "ref", False, 8)
     driver_key = ("driver", 4, 8, 64, "ref", False, 8)
@@ -294,7 +309,7 @@ def test_payload_driver_compiles_once_per_shape():
     assert baseline.get(round_key, 0) == 1
     assert baseline.get(driver_key, 0) == 1
     for seed in range(2, 6):
-        state, _, _, _ = rp.run_ops_to_completion(state, *batch(seed),
+        state, _, _, _ = _ops_tc(state, *batch(seed),
                                                   n_nodes=4)
     assert engine.TRACE_COUNTS[round_key] == baseline[round_key]
     assert engine.TRACE_COUNTS[driver_key] == baseline[driver_key]
@@ -378,7 +393,7 @@ def test_run_rmw_is_read_transform_write_in_one_call():
     state = rp.make_state(3, 8, payload_width=4)
     node = np.asarray([0, 0, 0], np.int32)
     line = np.asarray([1, 5, -1], np.int32)
-    state, vers, rounds, data = rp.run_rmw_to_completion(
+    state, vers, rounds, data = _rmw_tc(
         state, node, line, bump,
         (np.asarray([10, 20, 99], np.int32),), n_nodes=3)
     assert vers.tolist() == [1, 1, 0]
@@ -388,7 +403,7 @@ def test_run_rmw_is_read_transform_write_in_one_call():
     assert md[1].tolist() == [10] * 4 and md[5].tolist() == [20] * 4
     rp.check_invariants(state)
     # a second RMW reads its own prior write (coherent S->M round trip)
-    state, vers, _, data = rp.run_rmw_to_completion(
+    state, vers, _, data = _rmw_tc(
         state, node, line, bump, (np.asarray([1, 2, 3], np.int32),),
         n_nodes=3)
     assert vers.tolist() == [2, 2, 0]
@@ -403,7 +418,7 @@ def test_run_rmw_atomic_against_outside_holders():
 
     state = rp.make_state(4, 4, payload_width=2)
     # peers 1..3 take S copies of line 2
-    state, _, _ = rp.run_ops_to_completion(
+    state, _, _ = _ops_tc(
         state, np.asarray([1, 2, 3], np.int32),
         np.asarray([2, 2, 2], np.int32), np.zeros(3, np.int32),
         n_nodes=4)
@@ -411,13 +426,13 @@ def test_run_rmw_atomic_against_outside_holders():
     def put(data, line, val):
         return jnp.where((line >= 0)[:, None], val[:, None], data)
 
-    state, vers, _, _ = rp.run_rmw_to_completion(
+    state, vers, _, _ = _rmw_tc(
         state, np.asarray([0], np.int32), np.asarray([2], np.int32),
         put, (np.asarray([7], np.int32),), n_nodes=4)
     assert vers.tolist() == [1]
     cs = np.asarray(state["cache_state"])
     assert cs[0, 2] == 2 and (cs[1:, 2] == 0).all()   # peers evicted
-    state, _, _, d = rp.run_ops_to_completion(
+    state, _, _, d = _ops_tc(
         state, np.asarray([1], np.int32), np.asarray([2], np.int32),
         np.zeros(1, np.int32), np.zeros((1, 2), np.int32), n_nodes=4)
     assert d[0].tolist() == [7, 7]

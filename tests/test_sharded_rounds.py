@@ -41,6 +41,15 @@ def _mesh1():
     return jax.make_mesh((1,), ("shards",))
 
 
+def _ops_tc(state, node, line, isw, wdata=None, **kw):
+    # legacy run_ops_to_completion call shape via the DevicePlane facade
+    plane = rp.DevicePlane.open(state, kw.pop("mesh", None), **kw)
+    res = plane.ops(node, line, isw, wdata)
+    if wdata is not None:
+        return plane.state, res.version, res.rounds, res.data
+    return plane.state, res.version, res.rounds
+
+
 def _batch_arrays(batch):
     return (np.asarray([b[0] for b in batch], np.int32),
             np.asarray([b[1] for b in batch], np.int32),
@@ -51,7 +60,7 @@ def _replay(state, *, mesh=None, **kw):
     out = []
     for batch in TRACE:
         node, line, isw = _batch_arrays(batch)
-        state, vers, _ = rp.run_ops_to_completion(
+        state, vers, _ = _ops_tc(
             state, node, line, isw, n_nodes=N_NODES, mesh=mesh, **kw)
         rp.check_invariants(state)
         out.append([int(v) for v in vers])
@@ -70,7 +79,7 @@ def _replay_bytes(state, *, mesh=None, **kw):
     out = []
     for b, batch in enumerate(TRACE):
         node, line, isw = _batch_arrays(batch)
-        state, vers, _, data = rp.run_ops_to_completion(
+        state, vers, _, data = _ops_tc(
             state, node, line, isw, _wdata(b, batch), n_nodes=N_NODES,
             mesh=mesh, **kw)
         rp.check_invariants(state)
@@ -152,7 +161,7 @@ def test_bucket_overflow_defers_and_completes():
     node = np.asarray([0, 1, 0, 1, 0, 1], np.int32)
     line = np.full(6, 1, np.int32)
     isw = np.ones(6, np.int32)
-    state, vers, rounds = rp.run_ops_to_completion(
+    state, vers, rounds = _ops_tc(
         state, node, line, isw, n_nodes=2, mesh=mesh, bucket_cap=2,
         max_rounds=64)
     assert sorted(vers.tolist()) == [1, 2, 3, 4, 5, 6]
@@ -172,7 +181,7 @@ def test_bucket_overflow_defers_and_carries_payloads():
     isw = np.ones(6, np.int32)
     wd = np.stack([10 * np.arange(1, 7), np.arange(1, 7)],
                   axis=1).astype(np.int32)
-    state, vers, rounds, data = rp.run_ops_to_completion(
+    state, vers, rounds, data = _ops_tc(
         state, node, line, isw, wd, n_nodes=2, mesh=mesh, bucket_cap=2,
         max_rounds=64)
     assert sorted(vers.tolist()) == [1, 2, 3, 4, 5, 6]
@@ -193,7 +202,7 @@ def test_overflow_unserved_slots_report_at_bound():
     node = np.asarray([0, 1], np.int32)
     line = np.asarray([1, 1], np.int32)
     with pytest.raises(RuntimeError, match="not served"):
-        rp.run_ops_to_completion(state, node, line, np.ones(2, np.int32),
+        _ops_tc(state, node, line, np.ones(2, np.int32),
                                  n_nodes=2, mesh=mesh, bucket_cap=1,
                                  max_rounds=1)
 
@@ -210,7 +219,7 @@ def test_sharded_loop_compiles_once_per_shape():
                 r.integers(0, 16, 8).astype(np.int32),
                 r.integers(0, 2, 8).astype(np.int32))
 
-    state, _, rounds1 = rp.run_ops_to_completion(
+    state, _, rounds1 = _ops_tc(
         state, *batch(1), n_nodes=4, mesh=mesh)
     key = ("sharded", 1, 4, 16, 8, 8, 64, "ref", False, 0)
     baseline = dict(engine.TRACE_COUNTS)
@@ -218,7 +227,7 @@ def test_sharded_loop_compiles_once_per_shape():
         "sharded driver must trace once per shape"
     total = rounds1
     for seed in range(2, 8):
-        state, _, r = rp.run_ops_to_completion(
+        state, _, r = _ops_tc(
             state, *batch(seed), n_nodes=4, mesh=mesh)
         total += r
     assert total > 7, "sweep must actually spin multiple rounds"
@@ -235,9 +244,9 @@ def test_sharded_eviction_write_back_parity():
     node = np.asarray([2], np.int32)
     line = np.asarray([0], np.int32)
     isw = np.ones(1, np.int32)
-    flat, _, _ = rp.run_ops_to_completion(flat, node, line, isw,
+    flat, _, _ = _ops_tc(flat, node, line, isw,
                                           n_nodes=3)
-    shd, _, _ = rp.run_ops_to_completion(shd, node, line, isw,
+    shd, _, _ = _ops_tc(shd, node, line, isw,
                                          n_nodes=3, mesh=mesh)
     flat = rp.evict_lines(flat, jnp.asarray(node), jnp.asarray(line))
     shd = rp.evict_lines_sharded(shd, node, line, mesh=mesh)
@@ -282,6 +291,13 @@ def test_multi_shard_parity_subprocess():
         N_NODES, N_LINES = {N_NODES}, {N_LINES}
         mesh = jax.make_mesh((4,), ("shards",))
 
+        def _ops_tc(state, node, line, isw, wdata=None, **kw):
+            plane = rp.DevicePlane.open(state, kw.pop("mesh", None), **kw)
+            res = plane.ops(node, line, isw, wdata)
+            if wdata is not None:
+                return plane.state, res.version, res.rounds, res.data
+            return plane.state, res.version, res.rounds
+
         def arrays(batch):
             return (np.asarray([b[0] for b in batch], np.int32),
                     np.asarray([b[1] for b in batch], np.int32),
@@ -304,17 +320,17 @@ def test_multi_shard_parity_subprocess():
                                           payload_width=2)
             for b, batch in enumerate(TRACE):
                 node, line, isw = arrays(batch)
-                flat, v1, _ = rp.run_ops_to_completion(
+                flat, v1, _ = _ops_tc(
                     flat, node, line, isw, n_nodes=N_NODES)
-                shd, v2, _ = rp.run_ops_to_completion(
+                shd, v2, _ = _ops_tc(
                     shd, node, line, isw, n_nodes=N_NODES, mesh=mesh)
                 assert v1.tolist() == v2.tolist(), (
                     write_back, batch, v1.tolist(), v2.tolist())
                 rp.check_invariants(shd)
                 wd = wdata(b, batch)
-                flat_p, v3, _, d3 = rp.run_ops_to_completion(
+                flat_p, v3, _, d3 = _ops_tc(
                     flat_p, node, line, isw, wd, n_nodes=N_NODES)
-                shd_p, v4, _, d4 = rp.run_ops_to_completion(
+                shd_p, v4, _, d4 = _ops_tc(
                     shd_p, node, line, isw, wd, n_nodes=N_NODES,
                     mesh=mesh)
                 # byte-content differential: (version, bytes) agree
@@ -341,7 +357,7 @@ def test_multi_shard_parity_subprocess():
         node = np.asarray([i % 4 for i in range(R)], np.int32)
         line = np.zeros(R, np.int32)
         isw = np.ones(R, np.int32)
-        state, vers, rounds = rp.run_ops_to_completion(
+        state, vers, rounds = _ops_tc(
             state, node, line, isw, n_nodes=4, mesh=mesh,
             bucket_cap=1, max_rounds=128)
         assert sorted(vers.tolist()) == list(range(1, R + 1))
@@ -353,7 +369,7 @@ def test_multi_shard_parity_subprocess():
         state_p = rp.make_sharded_state(4, 8, mesh, payload_width=2)
         wd = np.stack([7 * np.arange(1, R + 1), np.arange(1, R + 1)],
                       axis=1).astype(np.int32)
-        state_p, vers_p, _, data_p = rp.run_ops_to_completion(
+        state_p, vers_p, _, data_p = _ops_tc(
             state_p, node, line, isw, wd, n_nodes=4, mesh=mesh,
             bucket_cap=1, max_rounds=256)
         assert sorted(vers_p.tolist()) == list(range(1, R + 1))
@@ -368,7 +384,7 @@ def test_multi_shard_parity_subprocess():
         key = ("sharded", 4, 4, 8, 16, 1, 128, "ref", False, 0)
         assert engine.TRACE_COUNTS.get(key, 0) == 1
         state2 = rp.make_sharded_state(4, 8, mesh)
-        state2, _, _ = rp.run_ops_to_completion(
+        state2, _, _ = _ops_tc(
             state2, node, line, isw, n_nodes=4, mesh=mesh,
             bucket_cap=1, max_rounds=128)
         assert engine.TRACE_COUNTS[key] == 1
@@ -395,7 +411,7 @@ def test_multi_shard_parity_subprocess():
                                  iters=4)
         soup = rp.make_sharded_state(4, 16, mesh, write_back=True)
         for node, line, isw in device_rounds_batches(cfg, seed=5):
-            soup, _, _ = rp.run_ops_to_completion(
+            soup, _, _ = _ops_tc(
                 soup, node, line, isw, n_nodes=4, mesh=mesh,
                 max_rounds=128)
             rp.check_invariants(soup)
@@ -408,7 +424,7 @@ def test_multi_shard_parity_subprocess():
         soup_p = rp.make_sharded_state(4, 16, mesh, write_back=True,
                                        payload_width=3)
         for node, line, isw, wd in device_rounds_batches(cfgp, seed=6):
-            soup_p, _, _, _ = rp.run_ops_to_completion(
+            soup_p, _, _, _ = _ops_tc(
                 soup_p, node, line, isw, wd, n_nodes=4, mesh=mesh,
                 max_rounds=128)
             rp.check_invariants(soup_p)
