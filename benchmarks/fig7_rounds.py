@@ -69,7 +69,7 @@ def _child(shards: int, write_back: bool, iters: int) -> dict:
     rounds_used = []
 
     def fused_step(states, node, line, isw):
-        states[0], vers, _, rounds, ok = rp.run_rounds_sharded(
+        states[0], vers, _, rounds, ok, _tele = rp.run_rounds_sharded(
             states[0], node, line, isw, mesh=mesh, n_nodes=N_NODES,
             max_rounds=MAX_ROUNDS)
         jax.block_until_ready(vers)

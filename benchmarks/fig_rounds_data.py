@@ -55,7 +55,7 @@ def _steps_sharded(width: int, mesh):
                                 payload_width=width)]
 
     def step(node, line, isw, wd):
-        state[0], vers, data, _, ok = run_rounds_sharded(
+        state[0], vers, data, _, ok, _tele = run_rounds_sharded(
             state[0], node, line, isw, wd[:, :width], mesh=mesh,
             n_nodes=N_NODES, max_rounds=MAX_ROUNDS)
         return vers, ok

@@ -22,8 +22,9 @@ def smoke() -> None:
     (flat + mesh-sharded + the payload data plane), all persisted as
     BENCH_*.json for the per-commit perf trajectory (gated by
     benchmarks.check_regression)."""
-    from . import (bench_serving, fig7_rounds, fig10_btree_rounds,
-                   fig11_tpcc_rounds, fig_rounds, fig_rounds_data)
+    from . import (bench_serving, fig7_rounds, fig9_rounds,
+                   fig10_btree_rounds, fig11_tpcc_rounds, fig_rounds,
+                   fig_rounds_data)
     from .common import MicroConfig, emit, run_micro, timer, \
         write_bench_json
 
@@ -47,6 +48,7 @@ def smoke() -> None:
     fig_rounds.main(smoke=True)              # writes BENCH_rounds.json
     fig7_rounds.main(smoke=True)      # writes BENCH_rounds_sharded.json
     fig_rounds_data.main(smoke=True)     # writes BENCH_rounds_data.json
+    fig9_rounds.main(smoke=True)         # writes BENCH_rounds_skew.json
     fig10_btree_rounds.main(smoke=True)  # writes BENCH_btree_rounds.json
     fig11_tpcc_rounds.main(smoke=True)     # writes BENCH_txn_rounds.json
     bench_serving.main(smoke=True)           # writes BENCH_serving.json
@@ -59,9 +61,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset emitting BENCH_*.json artifacts")
     ap.add_argument("--only", default="",
-                    help="comma list: fig7,fig7r,fig8,fig9,fig10,"
-                         "btree_rounds,fig11,txn_rounds,fig12,rounds,"
-                         "rounds_data,serving,roofline")
+                    help="comma list: fig7,fig7r,fig8,fig9,fig9r,"
+                         "rounds_skew,fig10,btree_rounds,fig11,"
+                         "txn_rounds,fig12,rounds,rounds_data,serving,"
+                         "roofline")
     args = ap.parse_args()
 
     print("figure,series,x,metric,value")
@@ -72,15 +75,17 @@ def main() -> None:
         return
 
     from . import (bench_serving, fig7_rounds, fig7_scalability,
-                   fig8_locality, fig9_skew, fig10_btree_rounds,
-                   fig10_ycsb_btree, fig11_tpcc, fig11_tpcc_rounds,
-                   fig12_2pc, fig_rounds, fig_rounds_data,
-                   roofline_report)
+                   fig8_locality, fig9_rounds, fig9_skew,
+                   fig10_btree_rounds, fig10_ycsb_btree, fig11_tpcc,
+                   fig11_tpcc_rounds, fig12_2pc, fig_rounds,
+                   fig_rounds_data, roofline_report)
     figures = {
         "fig7": fig7_scalability.main,
         "fig7r": fig7_rounds.main,
         "fig8": fig8_locality.main,
         "fig9": fig9_skew.main,
+        "fig9r": fig9_rounds.main,
+        "rounds_skew": fig9_rounds.main,
         "fig10": fig10_ycsb_btree.main,
         "btree_rounds": fig10_btree_rounds.main,
         "fig11": fig11_tpcc.main,

@@ -199,9 +199,12 @@ class SELCCLayer:
 
         Passing ``mesh`` builds the MESH-SHARDED plane instead
         (core/rounds/sharded.py): the same state striped over
-        ``mesh[axis]`` with ``home = line % n_shards`` — the device
-        mirror of this layer's memory-node striping (``GAddr.flat`` /
-        ``home_of``) — driven by ``rounds.run_rounds_sharded`` (or
+        ``mesh[axis]`` with ``home = line % n_shards`` by default —
+        the device mirror of this layer's memory-node striping
+        (``GAddr.flat`` / ``home_of``); a home directory
+        (``rounds.make_sharded_state(..., home_directory=True)``)
+        makes the placement migratable — driven by
+        ``rounds.run_rounds_sharded`` (or
         wrap it with :meth:`as_plane` /
         ``DevicePlane.open(state, mesh)``).  ``n_lines`` is
         padded up to a shard multiple."""
@@ -228,7 +231,7 @@ class SELCCLayer:
         and exposes ``plane.ops`` / ``plane.rmw`` / ``plane.descent`` /
         ``plane.txn``.  This is the ONE bridge from the DES world to
         the device plane; prefer it over juggling raw states and the
-        deprecated ``run_*_to_completion`` dispatchers."""
+        ``run_*`` drivers directly."""
         from .rounds.plane import DevicePlane
         state = self.as_rounds_state(n_lines, write_back=write_back,
                                      payload_width=payload_width,

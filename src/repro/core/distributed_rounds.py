@@ -2,7 +2,8 @@
 
 `core/jax_protocol.py` runs the bulk-synchronous protocol against one
 latch-word array; THIS module shards that array across the mesh (lines
-striped by `home = line % n_shards`, exactly dsm/address.home_of) and
+striped by `home = line % n_shards` by default — dsm/address.home_of —
+or by a caller-supplied home-directory lookup, see `_bucket`) and
 routes each round's requests to their home shards with ONE all_to_all,
 applies them there with the `latch_ops` kernel (per-word serialization =
 the NIC atomic unit), and routes the old-word replies back with a second
@@ -15,7 +16,8 @@ bucket are deferred to the next round by the caller (spin semantics) —
 this module is one round of the LATCH plane only.  The full sharded MSI
 engine (upgrades, write-back, coalescing, in-loop overflow deferral)
 lives in :mod:`repro.core.rounds.sharded`, which reuses :func:`_bucket`
-for its request routing.
+for its request routing — passing home-directory lookups as the
+``home`` override when line placement is dynamic (``state["home"]``).
 """
 
 from __future__ import annotations
@@ -40,22 +42,26 @@ def make_sharded_words(n_lines: int, mesh, axis: str = "model"):
         words, jax.sharding.NamedSharding(mesh, P(axis, None)))
 
 
-def _bucket(requests, n_shards: int, cap: int, fields=FIELDS):
+def _bucket(requests, n_shards: int, cap: int, fields=FIELDS, home=None):
     """Sort each shard's local requests into per-home buckets [S, cap].
 
     ``fields`` selects which request leaves ride along (the latch plane
     routes the six kernel fields; the full sharded engine —
     rounds/sharded.py — routes (node, line, isw) plus, on payload-plane
     states, a [R, W] ``wdata`` lane — any field may carry trailing
-    dimensions and buckets to [S, cap, \\*rest]); ``requests["line"]``
-    always drives the ``home = line % n_shards`` placement.  Requests
-    past a bucket's capacity are NOT silently sent: they show up in the
+    dimensions and buckets to [S, cap, \\*rest]).  ``home`` is the
+    per-slot destination shard ([R] int32, ``n_shards`` = pad/no-send);
+    when omitted it defaults to the static stripe placement ``home =
+    line % n_shards`` derived from ``requests["line"]`` (the sharded MSI
+    engine passes home-directory lookups instead).  Requests past a
+    bucket's capacity are NOT silently sent: they show up in the
     returned ``keep`` mask (False in sorted order; ``keep[argsort(
     order)]`` is the per-original-slot sent mask) and the ``dropped``
     count, so callers either respin them (sharded engine, in-loop) or
     surface the count (this module's single-round API)."""
     line = requests["line"]
-    home = jnp.where(line >= 0, line % n_shards, n_shards)  # pad bucket
+    if home is None:
+        home = jnp.where(line >= 0, line % n_shards, n_shards)  # pad bucket
     order = jnp.argsort(home)                                # stable
     sorted_reqs = {k: requests[k][order] for k in fields}
     home_sorted = home[order]

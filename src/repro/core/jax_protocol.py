@@ -21,7 +21,7 @@ from .coherence import (I, M, S, WRITER_SHIFT_HI, bit_lanes as _bit_lanes,
                         writer_field_hi as _writer_field_hi,
                         writer_of_hi as _writer_of_hi)
 from .rounds import (check_invariants, coherence_round, evict_lines,
-                     make_state, run_ops_to_completion, run_rounds)
+                     make_state, run_rounds)
 
 warnings.warn(
     "repro.core.jax_protocol is a compatibility shim; the engine lives "
@@ -30,7 +30,6 @@ warnings.warn(
 
 __all__ = [
     "I", "S", "M", "WRITER_SHIFT_HI", "check_invariants",
-    "coherence_round", "evict_lines", "make_state",
-    "run_ops_to_completion", "run_rounds",
+    "coherence_round", "evict_lines", "make_state", "run_rounds",
     "_bit_lanes", "_writer_field_hi", "_writer_of_hi",
 ]

@@ -15,33 +15,37 @@ spin loop (:func:`run_rounds`) with zero host syncs per round.
 payloads and every served slot's read payload comes back in ``data`` —
 reads return bytes, not just versions.
 
-Mesh scale-out (rounds/sharded.py): the SAME engine striped across a
-shard_map mesh (home = line % n_shards), requests routed home and
-replies routed back by two all_to_alls per round (payload lanes ride
-the same collectives), still one fused loop:
+Mesh scale-out (rounds/sharded.py): the SAME engine across a shard_map
+mesh (home = the physical-slot directory, the ``line % n_shards``
+stripe by default), requests routed home and replies routed back by
+two all_to_alls per round (payload lanes ride the same collectives),
+still one fused loop — now also accumulating congestion telemetry in
+the loop carry:
 
     state  = make_sharded_state(n_nodes, n_lines, mesh[, write_back=..]
-                                [, payload_width=W])
-    state, versions, data, rounds, ok = run_rounds_sharded(
+                                [, payload_width=W]
+                                [, home_directory=True][, replicas=True])
+    state, versions, data, rounds, ok, tele = run_rounds_sharded(
         state, nodes, lines, is_wr[, wdata], mesh=mesh, n_nodes=n_nodes)
 
 Host-facing callers should use the :class:`DevicePlane` facade
 (rounds/plane.py) — ONE object owning state + mesh + n_nodes that
 exposes ``plane.ops`` / ``plane.rmw`` / ``plane.descent`` /
-``plane.txn`` and returns normalized :class:`PlaneResult`s.  The
-legacy ``run_*_to_completion`` dispatchers delegate to it and warn.
+``plane.txn`` (plus the placement verbs ``plane.rehome`` /
+``plane.replicate``, fed by :mod:`.placement` policies over the
+telemetry) and returns normalized :class:`PlaneResult`s.
 """
 
 from ..coherence import I, M, S
-from .descent import run_descent, run_descent_to_completion
-from .driver import (run_ops_to_completion, run_rmw,
-                     run_rmw_to_completion, run_rounds)
+from .descent import run_descent
+from .driver import run_rmw, run_rounds
 from .engine import TRACE_COUNTS, coherence_round, evict_lines
+from .placement import plan_rehome, plan_replication
 from .plane import DevicePlane, PlaneResult
 from .sharded import (coherence_round_sharded, evict_lines_sharded,
-                      make_sharded_state, pad_ops, run_descent_sharded,
-                      run_rmw_sharded, run_rounds_sharded, shard_state,
-                      unshard_state)
+                      make_sharded_state, pad_ops, rehome_exchange,
+                      run_descent_sharded, run_rmw_sharded,
+                      run_rounds_sharded, shard_state, unshard_state)
 from .state import (check_invariants, is_write_back, make_state,
                     payload_width, stripe_state, unstripe_state)
 from .txn import (TxnBatchResult, run_txn_batch,
@@ -52,9 +56,9 @@ __all__ = [
     "TxnBatchResult", "check_invariants", "coherence_round",
     "coherence_round_sharded", "evict_lines", "evict_lines_sharded",
     "is_write_back", "make_sharded_state", "make_state", "pad_ops",
-    "payload_width", "run_descent", "run_descent_sharded",
-    "run_descent_to_completion", "run_ops_to_completion", "run_rmw",
-    "run_rmw_sharded", "run_rmw_to_completion", "run_rounds",
+    "payload_width", "plan_rehome", "plan_replication",
+    "rehome_exchange", "run_descent", "run_descent_sharded", "run_rmw",
+    "run_rmw_sharded", "run_rounds",
     "run_rounds_sharded", "run_txn_batch", "run_txn_batch_host",
     "run_txn_rounds",
     "shard_state", "stripe_state", "unshard_state", "unstripe_state",

@@ -51,9 +51,6 @@ import jax.numpy as jnp
 from .engine import _note_trace, _round_impl
 from .state import payload_width
 
-_warned: set = set()
-
-
 @functools.partial(jax.jit,
                    static_argnames=("transition", "n_nodes", "max_steps",
                                     "backend", "path_cap"))
@@ -123,32 +120,3 @@ def run_descent(state, node_id, key, root, *, transition, n_nodes: int,
     return (state, cur, lanes, levels, hops, paths, plen, steps,
             jnp.all(done))
 
-
-def run_descent_to_completion(state, node_id, key, root, *, transition,
-                              n_nodes: int, max_steps: int = 64,
-                              backend: str = "ref", mesh=None,
-                              axis: str = "shards",
-                              bucket_cap: int | None = None,
-                              path_cap: int = 16):
-    """Deprecated: use ``DevicePlane.open(state, mesh).descent(...)``.
-
-    Thin delegating wrapper kept for compatibility; returns the legacy
-    ``(state, line, lanes, levels, hops, paths, path_len, steps)``
-    host tuple."""
-    if "run_descent_to_completion" not in _warned:
-        _warned.add("run_descent_to_completion")
-        import warnings
-        warnings.warn(
-            "run_descent_to_completion is deprecated; use "
-            "DevicePlane.descent "
-            "(repro.core.rounds.plane.DevicePlane) instead",
-            DeprecationWarning, stacklevel=2)
-    from .plane import DevicePlane
-    plane = DevicePlane.open(state, mesh, axis=axis, n_nodes=n_nodes,
-                             backend=backend, max_rounds=max_steps,
-                             bucket_cap=bucket_cap)
-    res = plane.descent(node_id, key, root, transition=transition,
-                        path_cap=path_cap)
-    s = res.stats
-    return (plane.state, s["line"], res.data, s["levels"], s["hops"],
-            s["paths"], s["path_len"], res.rounds)

@@ -130,59 +130,3 @@ def run_rmw(state, node_id, line, operands=(), *, modify, n_nodes: int,
         n_nodes=n_nodes, max_rounds=max_rounds, backend=backend)
     return (state, versions, data2, r1 + r2,
             jnp.logical_and(ok1, ok2))
-
-
-_warned: set = set()
-
-
-def _deprecate(old: str, new: str) -> None:
-    # Call-time warn-once (module-level set, so importlib.reload of this
-    # module re-warns — same contract as the latchword shim).
-    if old in _warned:
-        return
-    _warned.add(old)
-    import warnings
-    warnings.warn(
-        f"{old} is deprecated; use {new} "
-        f"(repro.core.rounds.plane.DevicePlane) instead",
-        DeprecationWarning, stacklevel=3)
-
-
-def run_rmw_to_completion(state, node_id, line, modify, operands=(), *,
-                          n_nodes, max_rounds: int = 64,
-                          backend: str = "ref", mesh=None,
-                          axis: str = "shards",
-                          bucket_cap: int | None = None):
-    """Deprecated: use ``DevicePlane.open(state, mesh).rmw(...)``.
-
-    Thin delegating wrapper kept for compatibility; returns the legacy
-    ``(state, versions, rounds, data)`` host tuple."""
-    _deprecate("run_rmw_to_completion", "DevicePlane.rmw")
-    from .plane import DevicePlane
-    plane = DevicePlane.open(state, mesh, axis=axis, n_nodes=n_nodes,
-                             backend=backend, max_rounds=max_rounds,
-                             bucket_cap=bucket_cap)
-    res = plane.rmw(node_id, line, modify=modify,
-                    operands=tuple(operands))
-    return plane.state, res.version, res.rounds, res.data
-
-
-def run_ops_to_completion(state, node_id, line, is_write, wdata=None, *,
-                          n_nodes, max_rounds: int = 64,
-                          backend: str = "ref", mesh=None,
-                          axis: str = "shards",
-                          bucket_cap: int | None = None):
-    """Deprecated: use ``DevicePlane.open(state, mesh).ops(...)``.
-
-    Thin delegating wrapper kept for compatibility; returns the legacy
-    ``(state, versions, rounds)`` host tuple, widened with ``data``
-    when ``wdata`` is passed."""
-    _deprecate("run_ops_to_completion", "DevicePlane.ops")
-    from .plane import DevicePlane
-    plane = DevicePlane.open(state, mesh, axis=axis, n_nodes=n_nodes,
-                             backend=backend, max_rounds=max_rounds,
-                             bucket_cap=bucket_cap)
-    res = plane.ops(node_id, line, is_write, wdata)
-    if wdata is not None:
-        return plane.state, res.version, res.rounds, res.data
-    return plane.state, res.version, res.rounds

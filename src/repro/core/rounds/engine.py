@@ -267,13 +267,30 @@ def _round_impl(state, node_id, line, is_write, wdata=None, *,
         data = jnp.where(served[:, None], gdata[first], 0)
     else:
         data = jnp.zeros((r, 0), jnp.int32)
-    new_state = {"words": words, "cache_state": cstate,
-                 "cache_version": cver, "mem_version": mver}
+    # unknown leaves (home directory, replica plane) carry through: the
+    # flat engine is placement-oblivious by design
+    new_state = dict(state)
+    new_state.update({"words": words, "cache_state": cstate,
+                      "cache_version": cver, "mem_version": mver})
     if write_back:
         new_state["dirty"] = dirty
     if width:
         new_state["mem_data"] = mdata
         new_state["cache_data"] = cdata
+    if "replica" in state and state["replica"].shape[0] == n_lines:
+        # refresh the read-replica image at the round boundary (the
+        # shape guard skips home-shard slabs inside the sharded router,
+        # which refreshes through a psum instead — see
+        # sharded._replica_refresh): a line with no exclusive holder
+        # has a current memory image, so snapshotting it is coherent
+        rep = state["replica"]
+        rok = jnp.logical_and(rep, ~jnp.any(cstate == M, axis=0))
+        new_state["replica_ok"] = rok
+        new_state["replica_version"] = jnp.where(
+            rok, mver, state["replica_version"])
+        if "replica_data" in state:
+            new_state["replica_data"] = jnp.where(
+                rok[:, None], mdata, state["replica_data"])
     return new_state, served, version, data
 
 
@@ -332,4 +349,13 @@ def evict_lines(state, node_id, line):
     write-back mode, flush a dirty exclusive copy to memory first (the
     DES `_maybe_evict` -> `_release_global_any` path).  line = -1 skips
     a slot.  Returns the new state."""
-    return _evict_impl(state, node_id, line)
+    new_state = _evict_impl(state, node_id, line)
+    if "replica" in state:
+        # an eviction flush can advance memory past the replica image:
+        # conservatively invalidate; the next round's boundary refresh
+        # republishes it
+        n_lines = state["replica"].shape[0]
+        line = jnp.asarray(line, jnp.int32)
+        new_state["replica_ok"] = new_state["replica_ok"].at[
+            jnp.where(line >= 0, line, n_lines)].set(False, mode="drop")
+    return new_state

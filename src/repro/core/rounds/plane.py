@@ -34,9 +34,14 @@ memorize.  Sharded planes route through the very same calls: the mesh
 dispatch, ``pad_ops`` slot padding and result re-slicing all live HERE,
 once.
 
-The legacy ``run_*_to_completion`` functions survive as thin delegating
-wrappers that emit a ``DeprecationWarning`` on first use (the
-``latchword`` / ``jax_protocol`` precedent).
+On sharded planes every verb also surfaces the congestion telemetry the
+fused loops accumulate in their carries (``PlaneResult.stats``:
+occupancy/deferred/served counters plus per-line hit counts), and two
+placement verbs act on it at op-quiescent boundaries:
+:meth:`DevicePlane.rehome` migrates lines between home shards through
+the coherent directory, :meth:`DevicePlane.replicate` marks read-mostly
+lines for replica serving.  ``core/rounds/placement.py`` turns the
+counters into migration/replication picks.
 """
 
 from __future__ import annotations
@@ -58,7 +63,14 @@ class PlaneResult:
     * ``rounds``  — coherence rounds (or descent steps) the fused loop
       spent, summed over phases;
     * ``stats``   — verb-specific extras (descent: ``line``, ``levels``,
-      ``hops``, ``paths``, ``path_len``).
+      ``hops``, ``paths``, ``path_len``).  On SHARDED planes every verb
+      adds the congestion-telemetry counters accumulated inside the
+      fused loop: ``occupancy``/``deferred`` [S, S] (row = source
+      shard, col = home: bucket entries sent / deferred on overflow),
+      ``served_per_home`` [S], ``replica_served`` [S] (per source
+      shard), and per-line ``line_hits``/``line_whits`` [L] (ops served
+      at each line's home slot; whits = write subset) — flat planes
+      report ``{}`` (nothing congests).
     """
 
     version: np.ndarray | None
@@ -134,6 +146,24 @@ class DevicePlane:
         from .state import check_invariants
         check_invariants(self.flat_state())
 
+    # --------------------------------------------------------- telemetry
+    def _tele_stats(self, tele) -> dict:
+        """Materialize a fused loop's telemetry dict and remap the
+        physical-slot hit counters to LINE ids through the directory."""
+        stats = {k: np.asarray(v) for k, v in tele.items()}
+        hits = stats.pop("slot_hits")
+        whits = stats.pop("slot_whits")
+        l, s = self.n_lines, self.n_shards
+        perm = (np.asarray(self.state["home"])
+                if "home" in self.state
+                else np.arange(l, dtype=np.int64))
+        # slot p lives at row (p % S) * (L // S) + p // S of the
+        # shard-major concatenation the counters come back in
+        pos = (perm % s) * (l // s) + perm // s
+        stats["line_hits"] = hits[pos]
+        stats["line_whits"] = whits[pos]
+        return stats
+
     # ------------------------------------------------------------- verbs
     def ops(self, node_id, line, is_write, wdata=None, *,
             max_rounds: int | None = None) -> PlaneResult:
@@ -149,22 +179,25 @@ class DevicePlane:
             else:
                 node_id, line, is_write, wdata = pad_ops(
                     node_id, line, is_write, self.n_shards, wdata)
-            state, versions, data, rounds, done = run_rounds_sharded(
-                self.state, node_id, line, is_write, wdata,
-                mesh=self.mesh, axis=self.axis, n_nodes=self.n_nodes,
-                max_rounds=mr, bucket_cap=self.bucket_cap,
-                backend=self.backend)
+            state, versions, data, rounds, done, tele = \
+                run_rounds_sharded(
+                    self.state, node_id, line, is_write, wdata,
+                    mesh=self.mesh, axis=self.axis,
+                    n_nodes=self.n_nodes, max_rounds=mr,
+                    bucket_cap=self.bucket_cap, backend=self.backend)
+            stats = self._tele_stats(tele)
         else:
             from .driver import run_rounds
             state, versions, data, rounds, done = run_rounds(
                 self.state, node_id, line, is_write, wdata,
                 n_nodes=self.n_nodes, max_rounds=mr,
                 backend=self.backend)
+            stats = {}
         if not bool(done):
             raise RuntimeError(f"ops not served after {mr} rounds")
         self.state = state
         return PlaneResult(np.asarray(versions)[:r],
-                           np.asarray(data)[:r], int(rounds))
+                           np.asarray(data)[:r], int(rounds), stats)
 
     def rmw(self, node_id, line, *, modify, operands=(),
             max_rounds: int | None = None) -> PlaneResult:
@@ -189,23 +222,25 @@ class DevicePlane:
                          np.zeros((pad,) + np.asarray(op).shape[1:],
                                   np.asarray(op).dtype)])
                     for op in operands)
-            state, versions, data, rounds, done = run_rmw_sharded(
+            state, versions, data, rounds, done, tele = run_rmw_sharded(
                 self.state, node_id, line, tuple(operands),
                 modify=modify, mesh=self.mesh, axis=self.axis,
                 n_nodes=self.n_nodes, max_rounds=mr,
                 bucket_cap=self.bucket_cap, backend=self.backend)
+            stats = self._tele_stats(tele)
         else:
             from .driver import run_rmw
             state, versions, data, rounds, done = run_rmw(
                 self.state, node_id, line, tuple(operands),
                 modify=modify, n_nodes=self.n_nodes, max_rounds=mr,
                 backend=self.backend)
+            stats = {}
         if not bool(done):
             raise RuntimeError(f"RMW ops not served after {mr} "
                                f"rounds per phase")
         self.state = state
         return PlaneResult(np.asarray(versions)[:r],
-                           np.asarray(data)[:r], int(rounds))
+                           np.asarray(data)[:r], int(rounds), stats)
 
     def descent(self, node_id, key, root, *, transition,
                 path_cap: int = 16,
@@ -220,13 +255,14 @@ class DevicePlane:
             from .sharded import pad_ops, run_descent_sharded
             node_id, root, key = pad_ops(node_id, root, key,
                                          self.n_shards)
-            state, line, lanes, levels, hops, paths, plen, steps, done \
-                = run_descent_sharded(
+            (state, line, lanes, levels, hops, paths, plen, steps,
+             done, tele) = run_descent_sharded(
                     self.state, node_id, key, root,
                     transition=transition, mesh=self.mesh,
                     axis=self.axis, n_nodes=self.n_nodes, max_steps=ms,
                     bucket_cap=self.bucket_cap, backend=self.backend,
                     path_cap=path_cap)
+            stats = self._tele_stats(tele)
         else:
             from .descent import run_descent
             state, line, lanes, levels, hops, paths, plen, steps, done \
@@ -235,17 +271,18 @@ class DevicePlane:
                     transition=transition, n_nodes=self.n_nodes,
                     max_steps=ms, backend=self.backend,
                     path_cap=path_cap)
+            stats = {}
         if not bool(done):
             raise RuntimeError(f"descent did not settle after {ms} "
                                f"steps (broken links?)")
         self.state = state
-        return PlaneResult(
-            None, np.asarray(lanes)[:r], int(steps),
-            stats={"line": np.asarray(line)[:r],
-                   "levels": np.asarray(levels)[:r],
-                   "hops": np.asarray(hops)[:r],
-                   "paths": np.asarray(paths)[:r],
-                   "path_len": np.asarray(plen)[:r]})
+        stats.update({"line": np.asarray(line)[:r],
+                      "levels": np.asarray(levels)[:r],
+                      "hops": np.asarray(hops)[:r],
+                      "paths": np.asarray(paths)[:r],
+                      "path_len": np.asarray(plen)[:r]})
+        return PlaneResult(None, np.asarray(lanes)[:r], int(steps),
+                           stats=stats)
 
     def txn(self, node_id, glines, rmask, wmask, ts, *, algo: str,
             max_iters: int | None = None,
@@ -271,6 +308,125 @@ class DevicePlane:
         else:
             from .engine import evict_lines
             self.state = evict_lines(self.state, node_id, line)
+
+    # -------------------------------------------------------- placement
+    def rehome(self, lines, new_homes, victims=None) -> int:
+        """Migrate ``lines[i]`` to home shard ``new_homes[i]`` through
+        the coherent directory — pairwise SLOT SWAPS with a victim line
+        currently homed on the target shard, executed as one bucketed
+        all_to_all slab-row exchange (:func:`sharded.rehome_exchange`).
+        Legal only at op-quiescent boundaries (between verbs — there is
+        no in-flight op to race).  ``victims[i]`` picks the swap partner
+        explicitly (``plan_rehome`` supplies one); otherwise the
+        highest-id line still homed on the target is chosen.  Lines
+        already on their target, or requested twice, are skipped.
+        Returns the number of migrations performed.  On a FLAT plane
+        the directory updates but no rows move (everything is local
+        anyway) — kept so flat/sharded differentials can replay the
+        same call sequence."""
+        if "home" not in self.state:
+            raise ValueError(
+                "rehome needs a home-directory state "
+                "(make_state(..., home_directory=True))")
+        lines = np.asarray(lines, np.int64).reshape(-1)
+        new_homes = np.asarray(new_homes, np.int64).reshape(-1)
+        if lines.shape != new_homes.shape:
+            raise ValueError("lines and new_homes must match in length")
+        if victims is not None:
+            victims = np.asarray(victims, np.int64).reshape(-1)
+            if victims.shape != lines.shape:
+                raise ValueError("victims must match lines in length")
+        l, s = self.n_lines, self.n_shards
+        if lines.size and (lines.min() < 0 or lines.max() >= l):
+            raise ValueError(f"line ids out of range [0, {l})")
+        if new_homes.size and (new_homes.min() < 0
+                               or new_homes.max() >= s):
+            raise ValueError(f"home shards out of range [0, {s})")
+        perm = np.asarray(self.state["home"]).astype(np.int64).copy()
+        taken: set = set()
+        src, dst = [], []
+        for i in range(lines.size):
+            a, h = int(lines[i]), int(new_homes[i])
+            if a in taken or perm[a] % s == h:
+                continue
+            if victims is not None:
+                b = int(victims[i])
+                if b in taken or b == a or perm[b] % s != h:
+                    continue
+            else:
+                cands = np.flatnonzero(perm % s == h)
+                cands = [c for c in cands[::-1] if int(c) not in taken]
+                if not cands:
+                    continue
+                b = int(cands[0])
+            taken.update((a, b))
+            src.extend((perm[a], perm[b]))
+            dst.extend((perm[b], perm[a]))
+            perm[a], perm[b] = perm[b], perm[a]
+        if not src:
+            return 0
+        if self.sharded:
+            from .sharded import rehome_exchange
+            # pad the move list to a power of two: one compiled
+            # exchange shape serves many migration sizes
+            m = 1
+            while m < len(src):
+                m *= 2
+            src = np.asarray(src + [-1] * (m - len(src)), np.int32)
+            dst = np.asarray(dst + [0] * (m - len(dst)), np.int32)
+            self.state = rehome_exchange(
+                self.state, src, dst, perm.astype(np.int32),
+                mesh=self.mesh, axis=self.axis)
+        else:
+            import jax.numpy as jnp
+            self.state = dict(self.state)
+            self.state["home"] = jnp.asarray(perm, jnp.int32)
+        return len(taken) // 2
+
+    def replicate(self, lines, *, enable: bool = True) -> None:
+        """Mark ``lines`` read-replicated (or drop the mark with
+        ``enable=False``): S-latch reads on a replicated line serve
+        from the requester's own shard's boundary-snapshot image
+        instead of routing to the home, and any granted write
+        invalidates the image through the normal MSI path.  Host-side
+        and boundary-only, like :meth:`rehome`: the replica images of
+        newly marked lines whose memory is current (no exclusive
+        holder) are seeded here; the rest seed at the next round
+        boundary."""
+        if "replica" not in self.state:
+            raise ValueError(
+                "replicate needs a replica-plane state "
+                "(make_state(..., replicas=True))")
+        import jax
+        import jax.numpy as jnp
+        from .. import coherence as co
+        lines = np.asarray(lines, np.int64).reshape(-1)
+        l = self.n_lines
+        if lines.size and (lines.min() < 0 or lines.max() >= l):
+            raise ValueError(f"line ids out of range [0, {l})")
+        flat = {k: np.asarray(v) for k, v in self.flat_state().items()}
+        rep = flat["replica"].copy()
+        rep[lines] = bool(enable)
+        no_m = ~(flat["cache_state"] == co.M).any(axis=0)
+        rok = rep & no_m
+        rver = np.where(rok, flat["mem_version"],
+                        flat["replica_version"])
+        leaves = {"replica": rep, "replica_ok": rok,
+                  "replica_version": rver.astype(np.int32)}
+        if "replica_data" in flat:
+            leaves["replica_data"] = np.where(
+                rok[:, None], flat["mem_data"],
+                flat["replica_data"]).astype(np.int32)
+        self.state = dict(self.state)
+        if self.sharded:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            for k, v in leaves.items():
+                self.state[k] = jax.device_put(
+                    jnp.asarray(v), NamedSharding(
+                        self.mesh, P(*([None] * v.ndim))))
+        else:
+            for k, v in leaves.items():
+                self.state[k] = jnp.asarray(v)
 
     def __repr__(self) -> str:
         geo = (f"sharded x{self.n_shards}" if self.sharded else "flat")

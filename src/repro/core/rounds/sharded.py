@@ -6,10 +6,17 @@ caller.  This module scales the complete PR-2 rounds engine — S->X
 upgrade via CAS, structural write-back with dirty-bit flush,
 per-(node, line) coalescing, eviction — across a ``shard_map`` mesh:
 
-* every line-indexed leaf of the round state lives in STRIPE layout
-  (global line ``l`` homes on shard ``l % n_shards`` — exactly
-  ``dsm/address.home_of`` — at local index ``l // n_shards``), sharded
-  over the line axis so each shard owns one contiguous slab;
+* every line-indexed leaf of the round state lives in PHYSICAL-SLOT
+  layout: line ``l`` occupies slot ``p`` — ``p = state["home"][l]``
+  when the state carries a home directory, else the identity — homing
+  on shard ``p % n_shards`` at local index ``p // n_shards``, sharded
+  over the line axis so each shard owns one contiguous slab.  Without a
+  directory this is exactly the static stripe ``home = line %
+  n_shards`` (``dsm/address.home_of``); WITH one, placement is dynamic:
+  ``DevicePlane.rehome`` migrates hot lines by swapping slab rows
+  across the mesh (:func:`rehome_exchange`) and installing the updated
+  permutation, and the router consults the directory for every bucket
+  and local-index computation;
 * each round, every shard buckets its pending op slots by home and the
   buckets cross the mesh in ONE ``all_to_all``; the home shard runs the
   complete round body (`engine._round_impl`) against its local slab —
@@ -33,7 +40,21 @@ per-(node, line) coalescing, eviction — across a ``shard_map`` mesh:
   models the NIC queue depth; the default ``cap = r`` can never
   overflow — is NOT dropped and NOT punted to the caller: it stays
   pending in the loop carry and re-presents next round, exactly like a
-  latch-contention miss (defer-and-respin inside the fused loop).
+  latch-contention miss (defer-and-respin inside the fused loop);
+* the loop carry also accumulates CONGESTION TELEMETRY — per-(source,
+  home) bucket occupancy and defer counts, per-home served ops,
+  per-slot hit counters, replica-served counts — surfaced as the last
+  element of every fused driver's return tuple and, host-side, through
+  ``PlaneResult.stats``.  The placement policy
+  (:mod:`repro.core.rounds.placement`) turns it into re-homing and
+  replication decisions;
+* a state with a read-replica plane (``make_state(...,
+  replicas=True)``) serves S-latch reads of replicated lines from the
+  requester's OWN shard when the replica image is valid
+  (``replica_ok``), skipping both collectives; each round boundary the
+  homes republish the image via a psum (valid only where no exclusive
+  holder exists), so a write to a replicated line invalidates its
+  replicas through the normal MSI path.
 
 Memory-side compute stays ZERO (the paper's scalability argument,
 Sec. 4 / Fig. 7): a home shard only applies one-sided latch atomics and
@@ -61,6 +82,10 @@ OP_FIELDS = ("node", "line", "isw")
 # --------------------------------------------------------------- state I/O
 
 def _line_spec(name: str, ndim: int, axis: str) -> P:
+    if name in st.GLOBAL_LEAVES:
+        # global-line-indexed maps (home directory, replica plane) are
+        # replicated across the mesh, never striped
+        return P(*([None] * ndim))
     la = st.LINE_AXIS[name]
     return P(*[axis if d == la else None for d in range(ndim)])
 
@@ -95,17 +120,23 @@ def unshard_state(state, mesh=None, axis: str = "shards", *,
 
 def make_sharded_state(n_nodes: int, n_lines: int, mesh,
                        axis: str = "shards", *, write_back: bool = False,
-                       payload_width: int = 0):
+                       payload_width: int = 0,
+                       home_directory: bool = False,
+                       replicas: bool = False):
     """Fresh sharded round state: ``make_state`` striped over the mesh.
     ``n_lines`` is rounded UP to a multiple of the shard count (the
     extra lines are ordinary cold lines no op needs to touch).
     ``payload_width=W`` stripes the GCL data plane (``mem_data`` /
-    ``cache_data``) alongside the latch words."""
+    ``cache_data``) alongside the latch words; ``home_directory`` /
+    ``replicas`` attach the (replicated) dynamic-placement and
+    read-replica leaves."""
     n_shards = mesh.shape[axis]
     n_lines = ((n_lines + n_shards - 1) // n_shards) * n_shards
     return shard_state(st.make_state(n_nodes, n_lines,
                                      write_back=write_back,
-                                     payload_width=payload_width),
+                                     payload_width=payload_width,
+                                     home_directory=home_directory,
+                                     replicas=replicas),
                        mesh, axis)
 
 
@@ -133,35 +164,119 @@ def pad_ops(node_id, line, is_write, n_shards: int, wdata=None):
 
 # ------------------------------------------------------------ one round
 
+def _zero_tele(n_shards: int, l_local: int):
+    """Zeroed telemetry accumulator — matches `_route_round`'s
+    per-round deltas: (occupancy[S], deferred[S], served_at_home,
+    replica_served, slot_hits[L_local], slot_whits[L_local])."""
+    z = jnp.zeros((n_shards,), jnp.int32)
+    zl = jnp.zeros((l_local,), jnp.int32)
+    return (z, z, jnp.int32(0), jnp.int32(0), zl, zl)
+
+
+def _add_tele(a, b):
+    return tuple(x + y for x, y in zip(a, b))
+
+
+def _replica_refresh(state_l, *, n_shards: int, axis: str):
+    """Republish the read-replica image at the round boundary: each home
+    contributes version/bytes for its OWNED replicated lines where no
+    exclusive holder exists (no M holder => the memory image is
+    current), and a psum broadcasts the contributions to every shard.
+    A write granted M at its home therefore drops ``replica_ok``
+    everywhere at the very next boundary — replica invalidation rides
+    the normal MSI write path, no extra protocol."""
+    rep = state_l["replica"]
+    l_total = rep.shape[0]
+    perm = state_l.get("home")
+    slot = (perm if perm is not None
+            else jnp.arange(l_total, dtype=jnp.int32))
+    my = jax.lax.axis_index(axis)
+    owned = (slot % n_shards) == my
+    loc = slot // n_shards
+    no_m = ~jnp.any(state_l["cache_state"] == co.M, axis=0)  # [L_local]
+    okc = jnp.logical_and(jnp.logical_and(rep, owned), no_m[loc])
+    ok = jax.lax.psum(okc.astype(jnp.int32), axis) > 0
+    ver = jax.lax.psum(
+        jnp.where(okc, state_l["mem_version"][loc], 0), axis)
+    out = dict(state_l)
+    out["replica_ok"] = ok
+    out["replica_version"] = jnp.where(ok, ver,
+                                       state_l["replica_version"])
+    if "replica_data" in state_l:
+        data = jax.lax.psum(
+            jnp.where(okc[:, None], state_l["mem_data"][loc], 0), axis)
+        out["replica_data"] = jnp.where(ok[:, None], data,
+                                        state_l["replica_data"])
+    return out
+
+
 def _route_round(state_l, node_l, pending_l, isw_l, wdata_l, *,
                  n_shards: int, axis: str, n_nodes: int, cap: int,
                  backend: str):
     """One sharded round, executing INSIDE shard_map on each shard's
-    local slab: bucket pending slots by home, all_to_all the buckets,
-    run the full round body at the homes, all_to_all the replies back.
-    On payload-plane states the bucket entries widen from (node, line,
+    local slab: serve replica reads locally, bucket the remaining
+    pending slots by home (through the home directory when present),
+    all_to_all the buckets, run the full round body at the homes,
+    all_to_all the replies back, then republish the replica image.  On
+    payload-plane states the bucket entries widen from (node, line,
     isw) to carry a [W] ``wdata`` lane, and the reply all_to_all routes
     each served slot's read payload back the same way.  Returns
-    (state_l', served[r] bool, version[r], data[r, W]) in local slot
-    order; a slot that overflowed its bucket simply comes back unserved
-    (its payload re-presents with it next round)."""
+    (state_l', served[r] bool, version[r], data[r, W], tele) in local
+    slot order — ``tele`` is this round's telemetry delta (see
+    :func:`_zero_tele`); a slot that overflowed its bucket simply comes
+    back unserved (its payload re-presents with it next round)."""
     width = wdata_l.shape[1]
+    l_local = state_l["words"].shape[0]
+    valid = pending_l >= 0
+    idx = jnp.maximum(pending_l, 0)
+    # replica serve: a pure read of a replicated line with a valid
+    # boundary-snapshot image never leaves its source shard
+    if "replica" in state_l:
+        rserve = jnp.logical_and(
+            jnp.logical_and(valid, isw_l == 0),
+            jnp.logical_and(state_l["replica"][idx],
+                            state_l["replica_ok"][idx]))
+        route = jnp.where(rserve, jnp.int32(-1), pending_l)
+        # serve from the PRE-round image: the local serve logically
+        # precedes this round's writes (a boundary-snapshot read)
+        rserve_ver = state_l["replica_version"][idx]
+        rserve_data = (state_l["replica_data"][idx]
+                       if "replica_data" in state_l else None)
+    else:
+        rserve = jnp.zeros_like(valid)
+        route = pending_l
+    # destination shard per slot: home directory when present, static
+    # stripe otherwise (pads/replica-served slots -> bucket S = dropped)
+    if "home" in state_l:
+        perm = state_l["home"]
+        home = jnp.where(route >= 0, perm[jnp.maximum(route, 0)]
+                         % n_shards, n_shards)
+    else:
+        home = jnp.where(route >= 0, route % n_shards, n_shards)
     fields = OP_FIELDS + ("wdata",) if width else OP_FIELDS
-    reqs = {"node": node_l, "line": pending_l, "isw": isw_l}
+    reqs = {"node": node_l, "line": route, "isw": isw_l}
     if width:
         reqs["wdata"] = wdata_l
     buckets, order, keep, (b_idx, s_idx), _ = _bucket(
-        reqs, n_shards, cap, fields=fields)
+        reqs, n_shards, cap, fields=fields, home=home)
     recv = {k: jax.lax.all_to_all(buckets[k], axis, 0, 0, tiled=False)
             for k in fields}
     flat = {k: v.reshape((n_shards * cap,) + v.shape[2:])
             for k, v in recv.items()}                           # [S*cap]
-    # global line -> local slab index (stripe layout: local = line // S)
-    loc = jnp.where(flat["line"] >= 0, flat["line"] // n_shards,
-                    -1).astype(jnp.int32)
+    # global line -> local slab index: directory slot // S when the
+    # placement is dynamic, stripe layout's line // S otherwise
+    if "home" in state_l:
+        loc = jnp.where(flat["line"] >= 0,
+                        perm[jnp.maximum(flat["line"], 0)] // n_shards,
+                        -1).astype(jnp.int32)
+    else:
+        loc = jnp.where(flat["line"] >= 0, flat["line"] // n_shards,
+                        -1).astype(jnp.int32)
     state_l, served_h, ver_h, data_h = _round_impl(
         state_l, flat["node"], loc, flat["isw"], flat.get("wdata"),
         n_nodes=n_nodes, backend=backend)
+    if "replica" in state_l:
+        state_l = _replica_refresh(state_l, n_shards=n_shards, axis=axis)
 
     def back(x):
         return jax.lax.all_to_all(
@@ -176,12 +291,35 @@ def _route_round(state_l, node_l, pending_l, isw_l, wdata_l, *,
         mask = keep.reshape((-1,) + (1,) * (gathered.ndim - 1))
         gathered = jnp.where(mask, gathered, 0)
         return gathered[inv]
+    served = jnp.logical_or(unbucket(r_served).astype(bool), rserve)
+    version = unbucket(r_ver)
     if width:
         r_data = unbucket(back(data_h))
     else:
         r_data = jnp.zeros((pending_l.shape[0], 0), jnp.int32)
-    return (state_l, unbucket(r_served).astype(bool), unbucket(r_ver),
-            r_data)
+    if "replica" in state_l:
+        version = jnp.where(rserve, rserve_ver, version)
+        if width and rserve_data is not None:
+            r_data = jnp.where(rserve[:, None], rserve_data, r_data)
+    # congestion telemetry (this round's delta, all source-local or
+    # home-local): bucket occupancy / defers per destination home, ops
+    # served at THIS home, replica-served reads, per-local-slot hits
+    sent = keep[inv]
+    occ = jnp.zeros((n_shards,), jnp.int32).at[
+        jnp.where(sent, home, n_shards)].add(1, mode="drop")
+    dfr = jnp.zeros((n_shards,), jnp.int32).at[
+        jnp.where(jnp.logical_and(route >= 0, ~sent), home,
+                  n_shards)].add(1, mode="drop")
+    served_at_home = jnp.sum(served_h.astype(jnp.int32))
+    hit_slot = jnp.where(served_h, loc, l_local)
+    hits = jnp.zeros((l_local,), jnp.int32).at[hit_slot].add(
+        1, mode="drop")
+    whits = jnp.zeros((l_local,), jnp.int32).at[
+        jnp.where(flat["isw"].astype(bool), hit_slot, l_local)].add(
+        1, mode="drop")
+    tele = (occ, dfr, served_at_home,
+            jnp.sum(rserve.astype(jnp.int32)), hits, whits)
+    return state_l, served, version, r_data, tele
 
 
 @functools.partial(
@@ -218,13 +356,15 @@ def coherence_round_sharded(state, node_id, line, is_write, wdata=None,
     write_back = "dirty" in state
     _note_trace(("sharded_round", n_shards, n_nodes,
                  state["words"].shape[0], r_total, cap, backend,
-                 write_back, width))
+                 write_back, width, "home" in state, "replica" in state))
     specs = _state_specs(state, axis)
 
     def spmd(state_l, node_l, line_l, isw_l, wdata_l):
-        return _route_round(state_l, node_l, line_l, isw_l, wdata_l,
-                            n_shards=n_shards, axis=axis, n_nodes=n_nodes,
-                            cap=cap, backend=backend)
+        state_l, served, ver, data, _ = _route_round(
+            state_l, node_l, line_l, isw_l, wdata_l,
+            n_shards=n_shards, axis=axis, n_nodes=n_nodes,
+            cap=cap, backend=backend)
+        return state_l, served, ver, data
 
     return shard_map(
         spmd, mesh=mesh,
@@ -249,13 +389,19 @@ def run_rounds_sharded(state, node_id, line, is_write, wdata=None, *,
 
     ``wdata`` [R, W] carries per-op write payloads on a payload-plane
     state; returns ``(state', versions[R], data[R, W], rounds_used,
-    all_served)``, all device values, where ``data`` holds each op's
-    read payload routed back through the reply all_to_all.  Unserved
-    slots (latch contention OR bucket overflow) re-present themselves —
-    bytes included — round after round inside the fused
-    ``lax.while_loop``; the done flag is a psum across shards, so the
-    loop runs lockstep until every shard's slots are served or
-    ``max_rounds`` is hit."""
+    all_served, telemetry)``, all device values, where ``data`` holds
+    each op's read payload routed back through the reply all_to_all and
+    ``telemetry`` is the congestion-counter dict accumulated in the
+    loop carry: ``occupancy``/``deferred`` [S, S] (row = source shard,
+    col = destination home: bucket entries sent / deferred-by-
+    overflow), ``served_per_home`` [S], ``replica_served`` [S] (per
+    SOURCE shard), and per-physical-slot ``slot_hits``/``slot_whits``
+    [L] in slab-concatenation order (``DevicePlane`` remaps them to
+    line ids through the directory).  Unserved slots (latch contention
+    OR bucket overflow) re-present themselves — bytes included — round
+    after round inside the fused ``lax.while_loop``; the done flag is a
+    psum across shards, so the loop runs lockstep until every shard's
+    slots are served or ``max_rounds`` is hit."""
     co.check_node_capacity(n_nodes)
     n_shards = mesh.shape[axis]
     node_id = jnp.asarray(node_id, jnp.int32)
@@ -274,8 +420,10 @@ def run_rounds_sharded(state, node_id, line, is_write, wdata=None, *,
         wdata = jnp.asarray(wdata, jnp.int32)
     write_back = "dirty" in state
     _note_trace(("sharded", n_shards, n_nodes, state["words"].shape[0],
-                 r_total, cap, max_rounds, backend, write_back, width))
+                 r_total, cap, max_rounds, backend, write_back, width,
+                 "home" in state, "replica" in state))
     specs = _state_specs(state, axis)
+    l_local = state["words"].shape[0] // n_shards
 
     def spmd(state_l, node_l, line_l, isw_l, wdata_l):
         def n_pending(pending):
@@ -283,33 +431,43 @@ def run_rounds_sharded(state, node_id, line, is_write, wdata=None, *,
                 jnp.sum((pending >= 0).astype(jnp.int32)), axis)
 
         def cond(carry):
-            _, pending, _, _, rounds, done = carry
+            _, pending, _, _, rounds, _, done = carry
             return jnp.logical_and(~done, rounds < max_rounds)
 
         def body(carry):
-            stt, pending, versions, data, rounds, _ = carry
-            stt, served, ver, rdata = _route_round(
+            stt, pending, versions, data, rounds, tele, _ = carry
+            stt, served, ver, rdata, dtele = _route_round(
                 stt, node_l, pending, isw_l, wdata_l, n_shards=n_shards,
                 axis=axis, n_nodes=n_nodes, cap=cap, backend=backend)
             versions = jnp.where(served, ver, versions)
             data = jnp.where(served[:, None], rdata, data)
             pending = jnp.where(served, jnp.int32(-1), pending)
             return (stt, pending, versions, data, rounds + 1,
-                    n_pending(pending) == 0)
+                    _add_tele(tele, dtele), n_pending(pending) == 0)
 
         init = (state_l, line_l, jnp.zeros_like(line_l),
                 jnp.zeros((line_l.shape[0], width), jnp.int32),
-                jnp.int32(0), n_pending(line_l) == 0)
-        state_l, pending, versions, data, rounds, done = \
+                jnp.int32(0), _zero_tele(n_shards, l_local),
+                n_pending(line_l) == 0)
+        state_l, pending, versions, data, rounds, tele, done = \
             jax.lax.while_loop(cond, body, init)
-        return state_l, versions, data, rounds, done
+        occ, dfr, srv, rsrv, hits, whits = tele
+        return (state_l, versions, data, rounds, done, occ[None, :],
+                dfr[None, :], srv[None], rsrv[None], hits, whits)
 
-    return shard_map(
+    tele_specs = (P(axis, None), P(axis, None), P(axis), P(axis),
+                  P(axis), P(axis))
+    (state, versions, data, rounds, done, occ, dfr, srv, rsrv, hits,
+     whits) = shard_map(
         spmd, mesh=mesh,
         in_specs=(specs, P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(specs, P(axis), P(axis), P(), P()),
+        out_specs=(specs, P(axis), P(axis), P(), P()) + tele_specs,
         check_vma=False,
     )(state, node_id, line, is_write, wdata)
+    tele = {"occupancy": occ, "deferred": dfr, "served_per_home": srv,
+            "replica_served": rsrv, "slot_hits": hits,
+            "slot_whits": whits}
+    return state, versions, data, rounds, done, tele
 
 
 @functools.partial(
@@ -325,24 +483,25 @@ def run_rmw_sharded(state, node_id, line, operands=(), *, modify, mesh,
     call, each crossing the mesh through the usual two all_to_alls per
     round.  ``modify(data, line, *operands)`` runs replicated between
     the phases on the gathered ``[R, W]`` reply bytes.  Same return
-    contract as :func:`run_rounds_sharded`, with the write phase's
-    versions/bytes."""
+    contract as :func:`run_rounds_sharded` (telemetry summed over both
+    phases), with the write phase's versions/bytes."""
     node_id = jnp.asarray(node_id, jnp.int32)
     line = jnp.asarray(line, jnp.int32)
     _note_trace(("rmw_sharded", modify, mesh.shape[axis], n_nodes,
                  state["words"].shape[0], line.shape[0], bucket_cap,
-                 backend, "dirty" in state, st.payload_width(state)))
-    state, _, data, r1, ok1 = run_rounds_sharded(
+                 backend, "dirty" in state, st.payload_width(state),
+                 "home" in state, "replica" in state))
+    state, _, data, r1, ok1, t1 = run_rounds_sharded(
         state, node_id, line, jnp.zeros_like(line), None, mesh=mesh,
         axis=axis, n_nodes=n_nodes, max_rounds=max_rounds,
         bucket_cap=bucket_cap, backend=backend)
     new_data = jnp.asarray(modify(data, line, *operands), jnp.int32)
-    state, versions, data2, r2, ok2 = run_rounds_sharded(
+    state, versions, data2, r2, ok2, t2 = run_rounds_sharded(
         state, node_id, line, jnp.ones_like(line), new_data, mesh=mesh,
         axis=axis, n_nodes=n_nodes, max_rounds=max_rounds,
         bucket_cap=bucket_cap, backend=backend)
     return (state, versions, data2, r1 + r2,
-            jnp.logical_and(ok1, ok2))
+            jnp.logical_and(ok1, ok2), {k: t1[k] + t2[k] for k in t1})
 
 
 @functools.partial(
@@ -365,7 +524,9 @@ def run_descent_sharded(state, node_id, key, root, *, transition, mesh,
     psum.  A slot whose read lost a latch race OR overflowed its
     routing bucket simply re-presents next iteration.  Same return
     contract as ``run_descent`` (slots in global order, ``steps`` and
-    ``all_done`` replicated)."""
+    ``all_done`` replicated) plus a trailing telemetry dict (the
+    :func:`run_rounds_sharded` congestion counters, accumulated over
+    every descent step)."""
     co.check_node_capacity(n_nodes)
     n_shards = mesh.shape[axis]
     node_id = jnp.asarray(node_id, jnp.int32)
@@ -384,8 +545,10 @@ def run_descent_sharded(state, node_id, key, root, *, transition, mesh,
     write_back = "dirty" in state
     _note_trace(("descent_sharded", transition, n_shards, n_nodes,
                  state["words"].shape[0], r_total, cap, max_steps,
-                 backend, write_back, width, path_cap))
+                 backend, write_back, width, path_cap,
+                 "home" in state, "replica" in state))
     specs = _state_specs(state, axis)
+    l_local = state["words"].shape[0] // n_shards
 
     def spmd(state_l, node_l, key_l, root_l):
         b = root_l.shape[0]
@@ -397,14 +560,14 @@ def run_descent_sharded(state, node_id, key, root, *, transition, mesh,
                                 axis)
 
         def cond(carry):
-            _, _, _, _, _, _, _, _, steps, gdone = carry
+            _, _, _, _, _, _, _, _, steps, _, gdone = carry
             return jnp.logical_and(~gdone, steps < max_steps)
 
         def body(carry):
-            stt, cur, done, lanes, levels, hops, paths, plen, steps, _ \
-                = carry
+            (stt, cur, done, lanes, levels, hops, paths, plen, steps,
+             tele, _) = carry
             line = jnp.where(done, jnp.int32(-1), cur)
-            stt, served, _, d = _route_round(
+            stt, served, _, d, dtele = _route_round(
                 stt, node_l, line, no_write, no_bytes,
                 n_shards=n_shards, axis=axis, n_nodes=n_nodes, cap=cap,
                 backend=backend)
@@ -425,7 +588,8 @@ def run_descent_sharded(state, node_id, key, root, *, transition, mesh,
             advance = jnp.logical_and(move, ~at_leaf)
             cur = jnp.where(advance, nxt, cur)
             return (stt, cur, done, lanes, levels, hops, paths, plen,
-                    steps + 1, n_undone(done) == 0)
+                    steps + 1, _add_tele(tele, dtele),
+                    n_undone(done) == 0)
 
         done0 = root_l < 0
         init = (state_l, root_l, done0,
@@ -433,19 +597,29 @@ def run_descent_sharded(state, node_id, key, root, *, transition, mesh,
                 jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32),
                 jnp.full((b, path_cap), -1, jnp.int32),
                 jnp.zeros((b,), jnp.int32), jnp.int32(0),
-                n_undone(done0) == 0)
+                _zero_tele(n_shards, l_local), n_undone(done0) == 0)
         (state_l, cur, _, lanes, levels, hops, paths, plen, steps,
-         gdone) = jax.lax.while_loop(cond, body, init)
+         tele, gdone) = jax.lax.while_loop(cond, body, init)
+        occ, dfr, srv, rsrv, hits, whits = tele
         return (state_l, cur, lanes, levels, hops, paths, plen, steps,
-                gdone)
+                gdone, occ[None, :], dfr[None, :], srv[None],
+                rsrv[None], hits, whits)
 
-    return shard_map(
+    tele_specs = (P(axis, None), P(axis, None), P(axis), P(axis),
+                  P(axis), P(axis))
+    (state, cur, lanes, levels, hops, paths, plen, steps, gdone, occ,
+     dfr, srv, rsrv, hits, whits) = shard_map(
         spmd, mesh=mesh,
         in_specs=(specs, P(axis), P(axis), P(axis)),
         out_specs=(specs, P(axis), P(axis), P(axis), P(axis), P(axis),
-                   P(axis), P(), P()),
+                   P(axis), P(), P()) + tele_specs,
         check_vma=False,
     )(state, node_id, key, root)
+    tele = {"occupancy": occ, "deferred": dfr, "served_per_home": srv,
+            "replica_served": rsrv, "slot_hits": hits,
+            "slot_whits": whits}
+    return (state, cur, lanes, levels, hops, paths, plen, steps, gdone,
+            tele)
 
 
 # --------------------------------------------------------------- eviction
@@ -477,21 +651,47 @@ def evict_lines_sharded(state, node_id, line, *, mesh,
         def body(i, carry):
             stt, pending = carry
             reqs = {"node": node_l, "line": pending}
+            if "home" in stt:
+                perm = stt["home"]
+                home = jnp.where(pending >= 0,
+                                 perm[jnp.maximum(pending, 0)]
+                                 % n_shards, n_shards)
+            else:
+                home = None
             buckets, order, keep, _, _ = _bucket(
-                reqs, n_shards, cap, fields=("node", "line"))
+                reqs, n_shards, cap, fields=("node", "line"),
+                home=home)
             recv = {k: jax.lax.all_to_all(buckets[k], axis, 0, 0,
                                           tiled=False)
                     for k in ("node", "line")}
             flat = {k: v.reshape(-1) for k, v in recv.items()}
-            loc = jnp.where(flat["line"] >= 0,
-                            flat["line"] // n_shards, -1) \
-                .astype(jnp.int32)
+            if "home" in stt:
+                loc = jnp.where(flat["line"] >= 0,
+                                perm[jnp.maximum(flat["line"], 0)]
+                                // n_shards, -1).astype(jnp.int32)
+            else:
+                loc = jnp.where(flat["line"] >= 0,
+                                flat["line"] // n_shards, -1) \
+                    .astype(jnp.int32)
             stt = _evict_impl(stt, flat["node"], loc)
             sent = keep[jnp.argsort(order)]        # per-original slot
             pending = jnp.where(sent, jnp.int32(-1), pending)
             return stt, pending
         state_l, _ = jax.lax.fori_loop(0, max_iters, body,
                                        (state_l, line_l))
+        if "replica" in state_l:
+            # eviction flushes can advance memory: invalidate the
+            # replica image of every evicted line mesh-wide (psum'd
+            # union of the per-shard request slots); the next round's
+            # boundary refresh republishes it
+            l_total = state_l["replica"].shape[0]
+            emask = jnp.zeros((l_total,), jnp.int32).at[
+                jnp.where(line_l >= 0, line_l, l_total)].add(
+                1, mode="drop")
+            emask = jax.lax.psum(emask, axis) > 0
+            state_l = dict(state_l)
+            state_l["replica_ok"] = jnp.logical_and(
+                state_l["replica_ok"], ~emask)
         return state_l
 
     return shard_map(
@@ -500,3 +700,82 @@ def evict_lines_sharded(state, node_id, line, *, mesh,
         out_specs=specs,
         check_vma=False,
     )(state, node_id, line)
+
+
+# ----------------------------------------------------------- re-homing
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "axis"))
+def rehome_exchange(state, src_slot, dst_slot, new_home, *, mesh,
+                    axis: str = "shards"):
+    """Migrate slab rows between physical slots and install a new home
+    directory — the device half of :meth:`DevicePlane.rehome`.
+
+    ``src_slot``/``dst_slot`` [M] int32 (replicated; -1 = empty slot)
+    describe row moves in PHYSICAL slot ids: the row currently at slot
+    ``src_slot[i]`` (shard ``src % S``, local index ``src // S``) moves
+    to slot ``dst_slot[i]``.  The move set must be a permutation of the
+    touched slots (every destination is also some move's source —
+    ``plane.rehome`` builds pairwise swaps), otherwise rows are lost;
+    ``new_home`` [L] int32 is the post-exchange directory, installed
+    replicated.  Legal only at op-quiescent boundaries: the exchange
+    moves EVERY line-indexed leaf (latch words, MSI states, versions,
+    payloads, dirty bits) as one bucketed all_to_all — the same
+    machinery as request routing, with the slab row riding as the
+    bucket payload — so in-flight ops would race the migration.
+    Global-line-indexed leaves (the replica plane) key by line id, not
+    slot, and pass through unchanged."""
+    if "home" not in state:
+        raise ValueError("rehome_exchange needs a home-directory state "
+                         "(make_state(..., home_directory=True))")
+    n_shards = mesh.shape[axis]
+    src_slot = jnp.asarray(src_slot, jnp.int32)
+    dst_slot = jnp.asarray(dst_slot, jnp.int32)
+    new_home = jnp.asarray(new_home, jnp.int32)
+    m = src_slot.shape[0]
+    l_total = state["words"].shape[0]
+    l_local = l_total // n_shards
+    moved = tuple(sorted(k for k in state
+                         if k not in st.GLOBAL_LEAVES))
+    _note_trace(("rehome", n_shards, l_total, m, moved,
+                 "replica" in state))
+    specs = _state_specs(state, axis)
+
+    def spmd(state_l, src, dst, perm_new):
+        my = jax.lax.axis_index(axis)
+        mine = jnp.logical_and(src >= 0, src % n_shards == my)
+        sloc = jnp.where(mine, src // n_shards, 0)
+        reqs = {"line": jnp.where(mine, dst, -1),
+                "dloc": jnp.where(mine, dst // n_shards, 0)}
+        rows = {}
+        for k in moved:
+            v = jnp.moveaxis(state_l[k], st.LINE_AXIS[k], 0)
+            rows["row_" + k] = v[sloc].astype(jnp.int32)
+        reqs.update(rows)
+        home = jnp.where(mine, dst % n_shards, n_shards)
+        # cap = m: at most m sends exist mesh-wide, so no bucket can
+        # overflow and one exchange always completes
+        buckets, _, _, _, _ = _bucket(
+            reqs, n_shards, m, fields=tuple(reqs), home=home)
+        recv = {k: jax.lax.all_to_all(buckets[k], axis, 0, 0,
+                                      tiled=False)
+                for k in reqs}
+        flat = {k: v.reshape((n_shards * m,) + v.shape[2:])
+                for k, v in recv.items()}
+        ok = flat["line"] >= 0
+        dloc = jnp.where(ok, flat["dloc"], l_local)  # OOB drop for pads
+        out = dict(state_l)
+        for k in moved:
+            v = jnp.moveaxis(state_l[k], st.LINE_AXIS[k], 0)
+            v = v.at[dloc].set(flat["row_" + k].astype(v.dtype),
+                               mode="drop")
+            out[k] = jnp.moveaxis(v, 0, st.LINE_AXIS[k])
+        out["home"] = perm_new
+        return out
+
+    return shard_map(
+        spmd, mesh=mesh,
+        in_specs=(specs, P(), P(), P()),
+        out_specs=specs,
+        check_vma=False,
+    )(state, src_slot, dst_slot, new_home)

@@ -16,6 +16,21 @@ friendly):
                                   copy of the payload; S copies mirror
                                   memory, a dirty M copy is the flush
                                   source of truth
+    home           [L]    int32   (home directory only) line -> physical
+                                  slot permutation: line ``l`` homes on
+                                  shard ``home[l] % n_shards`` at local
+                                  slab index ``home[l] // n_shards``.
+                                  Default identity = the static stripe
+                                  (``dsm/address.home_of``); rewritten
+                                  by ``DevicePlane.rehome``
+    replica        [L]    bool    (read replicas only) line is marked
+                                  read-mostly: S-latch reads may serve
+                                  from the replica image without routing
+    replica_ok     [L]    bool    the replica image is a faithful
+                                  boundary snapshot (no exclusive holder
+                                  existed when it was refreshed)
+    replica_version[L]    int32   version of the replica image
+    replica_data   [L, W] int32   (payload plane) replica payload lanes
 
 Write-through vs write-back is a *structural* property of the state
 (presence of the ``dirty`` leaf), so the engine needs no extra static
@@ -23,6 +38,11 @@ flag and a state can never be run under the wrong mode.  The payload
 plane is structural the same way: ``make_state(..., payload_width=W)``
 adds the ``mem_data``/``cache_data`` leaves and every read the engine
 serves returns the line's W int32 payload lanes, not just a version.
+The home directory (``home_directory=True``) and the read-replica plane
+(``replicas=True``) follow the same structural rule: their leaves are
+indexed by GLOBAL line id, replicated (never striped) on sharded
+planes, and their presence switches the sharded router from the static
+stripe to directory lookups / replica-serving.
 """
 
 from __future__ import annotations
@@ -33,11 +53,17 @@ from .. import coherence as co
 
 
 def make_state(n_nodes: int, n_lines: int, *, write_back: bool = False,
-               payload_width: int = 0):
+               payload_width: int = 0, home_directory: bool = False,
+               replicas: bool = False):
     """Fresh round state.  Raises ``ValueError`` for node counts the
     latch word cannot encode (pre-spec these silently aliased bits).
     ``payload_width=W`` > 0 attaches the GCL data plane: ``mem_data``
-    [L, W] int32 and per-node ``cache_data`` [N, L, W] copies."""
+    [L, W] int32 and per-node ``cache_data`` [N, L, W] copies.
+    ``home_directory=True`` attaches the dynamic placement directory
+    (``home``, identity = the static stripe); ``replicas=True`` attaches
+    the read-replica plane (``replica``/``replica_ok``/
+    ``replica_version`` and, with a payload plane, ``replica_data``) —
+    all lines start unreplicated (opt in via ``DevicePlane.replicate``)."""
     co.check_node_capacity(n_nodes)
     if payload_width < 0:
         raise ValueError(f"payload_width={payload_width} must be >= 0")
@@ -53,6 +79,15 @@ def make_state(n_nodes: int, n_lines: int, *, write_back: bool = False,
         state["mem_data"] = jnp.zeros((n_lines, payload_width), jnp.int32)
         state["cache_data"] = jnp.zeros((n_nodes, n_lines, payload_width),
                                         jnp.int32)
+    if home_directory:
+        state["home"] = jnp.arange(n_lines, dtype=jnp.int32)
+    if replicas:
+        state["replica"] = jnp.zeros((n_lines,), bool)
+        state["replica_ok"] = jnp.zeros((n_lines,), bool)
+        state["replica_version"] = jnp.zeros((n_lines,), jnp.int32)
+        if payload_width:
+            state["replica_data"] = jnp.zeros((n_lines, payload_width),
+                                              jnp.int32)
     return state
 
 
@@ -68,13 +103,37 @@ def payload_width(state) -> int:
 
 # ------------------------------------------------------------ stripe layout
 # The sharded plane (rounds/sharded.py) keeps every line-indexed leaf in
-# STRIPE layout: global line l lives on shard l % S (dsm/address.home_of)
-# at local index l // S, so each shard owns one contiguous slab.  Which
-# axis of a leaf indexes lines is a property of the STATE layout, so the
-# table and the permutation helpers live here.
+# PHYSICAL-SLOT layout: line l occupies slot p = home[l] (identity
+# without a directory), living on shard p % S at local index p // S, so
+# each shard owns one contiguous slab.  Which axis of a leaf indexes
+# lines is a property of the STATE layout, so the table and the
+# permutation helpers live here.  GLOBAL_LEAVES are indexed by global
+# line id and replicated across the mesh — they never stripe.
 
 LINE_AXIS = {"words": 0, "cache_state": 1, "cache_version": 1,
              "mem_version": 0, "dirty": 1, "mem_data": 0, "cache_data": 1}
+
+GLOBAL_LEAVES = ("home", "replica", "replica_ok", "replica_version",
+                 "replica_data")
+
+
+def has_home_directory(state) -> bool:
+    """Placement is structural: a ``home`` leaf switches the sharded
+    router from the static stripe to directory lookups."""
+    return "home" in state
+
+
+def has_replicas(state) -> bool:
+    return "replica" in state
+
+
+def slot_positions(perm, n_shards: int):
+    """Physical slot id -> row position in the shard-major (slab
+    concatenation) order: slot ``p`` is row ``(p % S) * (L // S) +
+    p // S``.  With the identity permutation this is exactly the
+    :func:`stripe_lines` row mapping."""
+    l = perm.shape[0]
+    return (perm % n_shards) * (l // n_shards) + perm // n_shards
 
 
 def stripe_lines(x, n_shards: int, axis: int = 0):
@@ -97,16 +156,41 @@ def unstripe_lines(x, n_shards: int, axis: int = 0):
 
 
 def stripe_state(state, n_shards: int):
-    """Flat (line-major) round state -> stripe-layout state.  All leaves
-    permute consistently, so :func:`check_invariants` (which is per-line
-    and permutation-invariant) works on either layout."""
-    return {k: stripe_lines(v, n_shards, LINE_AXIS[k])
-            for k, v in state.items()}
+    """Flat (line-major) round state -> physical-slot-layout state.  All
+    line-indexed leaves permute consistently (through the ``home``
+    directory when present, the plain stripe otherwise), so
+    :func:`check_invariants` (which is per-line and
+    permutation-invariant) works on either layout; GLOBAL_LEAVES pass
+    through untouched."""
+    perm = state.get("home")
+    if perm is not None:
+        pos = slot_positions(jnp.asarray(perm, jnp.int32), n_shards)
+        inv = jnp.zeros_like(pos).at[pos].set(
+            jnp.arange(pos.shape[0], dtype=pos.dtype))
+    out = {}
+    for k, v in state.items():
+        if k in GLOBAL_LEAVES:
+            out[k] = v
+        elif perm is None:
+            out[k] = stripe_lines(v, n_shards, LINE_AXIS[k])
+        else:
+            out[k] = jnp.take(v, inv, axis=LINE_AXIS[k])
+    return out
 
 
 def unstripe_state(state, n_shards: int):
-    return {k: unstripe_lines(v, n_shards, LINE_AXIS[k])
-            for k, v in state.items()}
+    perm = state.get("home")
+    if perm is not None:
+        pos = slot_positions(jnp.asarray(perm, jnp.int32), n_shards)
+    out = {}
+    for k, v in state.items():
+        if k in GLOBAL_LEAVES:
+            out[k] = v
+        elif perm is None:
+            out[k] = unstripe_lines(v, n_shards, LINE_AXIS[k])
+        else:
+            out[k] = jnp.take(v, pos, axis=LINE_AXIS[k])
+    return out
 
 
 def check_invariants(state) -> None:
@@ -161,3 +245,26 @@ def check_invariants(state) -> None:
                 cs == co.M, (cd != md[None, :, :]).any(axis=2))
             assert not m_mismatch.any(), \
                 "write-through holder's payload diverged from memory"
+    if "home" in state:
+        hm = np.asarray(state["home"])
+        assert hm.shape == mv.shape, "home directory shape mismatch"
+        assert (np.sort(hm) == np.arange(hm.shape[0])).all(), \
+            "home directory is not a permutation of the physical slots"
+    if "replica" in state:
+        rep = np.asarray(state["replica"])
+        rok = np.asarray(state["replica_ok"])
+        rv = np.asarray(state["replica_version"])
+        assert not np.logical_and(rok, ~rep).any(), \
+            "replica image valid on an unreplicated line"
+        # a valid replica is a faithful boundary snapshot: its version
+        # (and bytes) match memory and no exclusive holder can have run
+        # ahead of it
+        assert not np.logical_and(rok, excl).any(), \
+            "replica image valid under an exclusive holder"
+        assert (rv[rok] == mv[rok]).all(), \
+            "replica version diverged from memory"
+        if "replica_data" in state:
+            rd = np.asarray(state["replica_data"])
+            md = np.asarray(state["mem_data"])
+            assert (rd[rok] == md[rok]).all(), \
+                "replica payload diverged from memory"

@@ -67,7 +67,7 @@ distribution, so decisions match the flat plane exactly.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +78,7 @@ from ...compat import shard_map
 from .. import coherence as co
 from .driver import run_rounds
 from .engine import _note_trace
-from .sharded import _route_round, _state_specs
+from .sharded import _add_tele, _route_round, _state_specs, _zero_tele
 from .state import payload_width
 
 LOCK_LANE = 0
@@ -255,7 +255,10 @@ def run_txn_rounds_sharded(state, node_id, glines, rmask, wmask, ts, *,
     (B divisible by the shard count; pad with ``glines = -1`` rows),
     dedup goes through an ``all_gather`` of wanted lines in GLOBAL slot
     order, every spin is the two-all_to_alls ``_route_round`` loop, and
-    liveness is a psum — same return contract, bit-identical decisions."""
+    liveness is a psum — the flat return contract plus a trailing
+    congestion-telemetry dict (same keys as
+    :func:`run_rounds_sharded`, summed over all three spins of every
+    scheduler iteration); decisions stay bit-identical."""
     co.check_node_capacity(n_nodes)
     n_shards = mesh.shape[axis]
     node_id = jnp.asarray(node_id, jnp.int32)
@@ -271,9 +274,11 @@ def run_txn_rounds_sharded(state, node_id, glines, rmask, wmask, ts, *,
     bl = B // n_shards
     _note_trace(("txn_sharded", algo, n_shards, B, G, T, n_nodes,
                  max_rounds, max_iters, bucket_cap, backend,
-                 "dirty" in state, W))
+                 "dirty" in state, W, "home" in state,
+                 "replica" in state))
     apply_fn = _APPLY[algo]
     specs = _state_specs(state, axis)
+    l_local = state["words"].shape[0] // n_shards
     g_idx = jnp.arange(G, dtype=jnp.int32)[None, :]
 
     def spmd(state_l, node_l, glines_l, rmask_l, wmask_l, ts_l):
@@ -293,38 +298,39 @@ def run_txn_rounds_sharded(state, node_id, glines, rmask, wmask, ts, *,
                     jnp.sum((p >= 0).astype(jnp.int32)), axis)
 
             def s_cond(c):
-                _, _, _, r, done = c
+                _, _, _, r, _, done = c
                 return ~done & (r < max_rounds)
 
             def s_body(c):
-                stt, pending, data, r, _ = c
-                stt, served, _, rdata = _route_round(
+                stt, pending, data, r, tele, _ = c
+                stt, served, _, rdata, dtele = _route_round(
                     stt, nodes, pending, is_write, wdata,
                     n_shards=n_shards, axis=axis, n_nodes=n_nodes,
                     cap=cap, backend=backend)
                 data = jnp.where(served[:, None], rdata, data)
                 pending = jnp.where(served, jnp.int32(-1), pending)
                 return (stt, pending, data, r + 1,
-                        n_pending(pending) == 0)
+                        _add_tele(tele, dtele), n_pending(pending) == 0)
 
             init = (stt_l, lines,
                     jnp.zeros((lines.shape[0], W), jnp.int32),
-                    jnp.int32(0), n_pending(lines) == 0)
-            stt_l, pending, data, r, done = jax.lax.while_loop(
+                    jnp.int32(0), _zero_tele(n_shards, l_local),
+                    n_pending(lines) == 0)
+            stt_l, pending, data, r, tele, done = jax.lax.while_loop(
                 s_cond, s_body, init)
-            return stt_l, data, r, done
+            return stt_l, data, r, done, tele
 
         def n_live(done):
             return jax.lax.psum(
                 jnp.sum((~done).astype(jnp.int32)), axis)
 
         def cond(carry):
-            _, _, _, _, _, _, _, it, ok, _, alldone = carry
+            _, _, _, _, _, _, _, it, ok, _, _, alldone = carry
             return ~alldone & (it < max_iters) & ok
 
         def body(carry):
             (stt, k, done, dec, estep, retr, lanes, it, ok, rounds,
-             _) = carry
+             tele, _) = carry
             live = ~done
             kc = jnp.minimum(k, G - 1)
             has_next = live & (k < nv)
@@ -342,7 +348,7 @@ def run_txn_rounds_sharded(state, node_id, glines, rmask, wmask, ts, *,
             loser = jax.lax.dynamic_slice_in_dim(loser_g, ai * bl, bl)
             winner = has_next & ~loser
             lines_r = jnp.where(winner, want, -1)
-            stt, rdata, r1, ok1 = spin(
+            stt, rdata, r1, ok1, t1 = spin(
                 stt, node_l, lines_r, jnp.zeros_like(lines_r),
                 jnp.zeros((bl, W), jnp.int32))
             got = winner & (rdata[:, LOCK_LANE] == 0)
@@ -352,8 +358,8 @@ def run_txn_rounds_sharded(state, node_id, glines, rmask, wmask, ts, *,
                               lanes)
             wlock = rdata.at[:, LOCK_LANE].set(gslot + 1)
             lines_a = jnp.where(got, want, -1)
-            stt, _, r2, ok2 = spin(stt, node_l, lines_a,
-                                   jnp.ones_like(lines_a), wlock)
+            stt, _, r2, ok2, t2 = spin(stt, node_l, lines_a,
+                                       jnp.ones_like(lines_a), wlock)
             k2 = k + got.astype(jnp.int32)
             complete = live & (k2 >= nv)
             decision_new, new_lanes = apply_fn(lanes, glines_l,
@@ -364,33 +370,45 @@ def run_txn_rounds_sharded(state, node_id, glines, rmask, wmask, ts, *,
             fdata = fdata.at[:, :, LOCK_LANE].set(0)
             flines = jnp.where(fin_c | fin_f, glines_l,
                                -1).reshape(bl * G)
-            stt, _, r3, ok3 = spin(stt, node_rep, flines,
-                                   jnp.ones_like(flines),
-                                   fdata.reshape(bl * G, W))
+            stt, _, r3, ok3, t3 = spin(stt, node_rep, flines,
+                                       jnp.ones_like(flines),
+                                       fdata.reshape(bl * G, W))
             done2 = done | complete
             return (stt, jnp.where(failed, 0, k2), done2,
                     jnp.where(complete, decision_new, dec),
                     jnp.where(complete, it, estep),
                     retr + failed.astype(jnp.int32), lanes, it + 1,
                     ok & ok1 & ok2 & ok3, rounds + r1 + r2 + r3,
+                    _add_tele(_add_tele(tele, _add_tele(t1, t2)), t3),
                     n_live(done2) == 0)
 
         init = (state_l, jnp.zeros(bl, jnp.int32), nv < 0,
                 jnp.zeros(bl, bool), jnp.zeros(bl, jnp.int32),
                 jnp.zeros(bl, jnp.int32),
                 jnp.zeros((bl, G, W), jnp.int32), jnp.int32(0),
-                jnp.bool_(True), jnp.int32(0), n_live(nv < 0) == 0)
+                jnp.bool_(True), jnp.int32(0),
+                _zero_tele(n_shards, l_local), n_live(nv < 0) == 0)
         (state_l, _, done, dec, estep, retr, _, it, ok, rounds,
-         alldone) = jax.lax.while_loop(cond, body, init)
-        return state_l, dec, estep, retr, it, alldone, ok, rounds
+         tele, alldone) = jax.lax.while_loop(cond, body, init)
+        occ, dfr, srv, rsrv, hits, whits = tele
+        return (state_l, dec, estep, retr, it, alldone, ok, rounds,
+                occ[None, :], dfr[None, :], srv[None], rsrv[None],
+                hits, whits)
 
-    return shard_map(
+    tele_specs = (P(axis, None), P(axis, None), P(axis), P(axis),
+                  P(axis), P(axis))
+    (state, dec, estep, retr, it, alldone, ok, rounds, occ, dfr, srv,
+     rsrv, hits, whits) = shard_map(
         spmd, mesh=mesh,
         in_specs=(specs, P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(specs, P(axis), P(axis), P(axis), P(), P(), P(),
-                   P()),
+                   P()) + tele_specs,
         check_vma=False,
     )(state, node_id, glines, rmask, wmask, ts)
+    tele = {"occupancy": occ, "deferred": dfr, "served_per_home": srv,
+            "replica_served": rsrv, "slot_hits": hits,
+            "slot_whits": whits}
+    return (state, dec, estep, retr, it, alldone, ok, rounds, tele)
 
 
 # ------------------------------------------------------ host-facing API
@@ -403,13 +421,16 @@ class TxnBatchResult:
     scheduler iteration each txn completed at — its position in the
     serial order), ``retries`` int [B] (no-wait restarts), ``iters``
     total scheduler iterations, ``rounds`` total coherence rounds
-    across all spins."""
+    across all spins.  ``stats`` carries the congestion-telemetry
+    counters on sharded planes (same keys as ``PlaneResult.stats``,
+    summed over every spin of the batch); ``{}`` on flat planes."""
 
     decision: np.ndarray
     exec_step: np.ndarray
     retries: np.ndarray
     iters: int
     rounds: int
+    stats: dict = field(default_factory=dict)
 
 
 def run_txn_batch(plane, node_id, glines, rmask, wmask, ts, *,
@@ -455,18 +476,20 @@ def run_txn_batch(plane, node_id, glines, rmask, wmask, ts, *,
             wmask = np.concatenate(
                 [wmask, np.zeros((pad, G, T), np.int32)])
             ts = np.concatenate([ts, np.zeros(pad, np.int32)])
-        state, dec, estep, retr, it, alldone, ok, rounds = \
+        state, dec, estep, retr, it, alldone, ok, rounds, tele = \
             run_txn_rounds_sharded(
                 plane.state, node_id, glines, rmask, wmask, ts,
                 algo=algo, mesh=plane.mesh, axis=plane.axis,
                 n_nodes=plane.n_nodes, max_rounds=mr, max_iters=mi,
                 bucket_cap=plane.bucket_cap, backend=plane.backend)
+        stats = plane._tele_stats(tele)
     else:
         state, dec, estep, retr, it, alldone, ok, rounds = \
             run_txn_rounds(
                 plane.state, node_id, glines, rmask, wmask, ts,
                 algo=algo, n_nodes=plane.n_nodes, max_rounds=mr,
                 max_iters=mi, backend=plane.backend)
+        stats = {}
     if not bool(ok):
         raise RuntimeError(
             f"txn coherence spin hit max_rounds={mr}")
@@ -476,7 +499,8 @@ def run_txn_batch(plane, node_id, glines, rmask, wmask, ts, *,
             f"(livelock? raise max_iters)")
     plane.state = state
     return TxnBatchResult(np.asarray(dec)[:B], np.asarray(estep)[:B],
-                          np.asarray(retr)[:B], int(it), int(rounds))
+                          np.asarray(retr)[:B], int(it), int(rounds),
+                          stats)
 
 
 def _apply_host_one(algo, lanes, glines, rmask, wmask, ts):

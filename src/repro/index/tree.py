@@ -3,7 +3,8 @@
 The paper's flagship application (Sec. 8.1, Fig. 10) on our fastest
 plane: every tree node is one GCL line of a payload-plane round state
 (flat ``rounds.run_rounds`` or mesh-sharded ``run_rounds_sharded`` —
-nodes stripe ``line % n_shards`` like every other line), and every
+nodes home ``line % n_shards`` by default — re-homeable through the
+home directory — like every other line), and every
 structural rule of the host ``apps/btree.BLinkTree`` maps onto a
 coherence-plane op sequence:
 

@@ -4,13 +4,10 @@ The facade owns ``state + mesh + n_nodes + write_back`` and exposes the
 three verbs (``ops`` / ``rmw`` / ``descent``) with one keyword surface
 and ONE result type; these tests pin that contract — PlaneResult shape,
 in-place state ownership, flat/sharded uniformity, the
-``SELCCLayer.as_plane`` bridge, bound-hit errors — plus the one-release
-deprecation shims for the legacy ``run_*_to_completion`` dispatchers
-(call-time warn-once, reload re-warns: the latchword precedent).
+``SELCCLayer.as_plane`` bridge, bound-hit errors.  (The legacy
+``run_*_to_completion`` dispatchers served their one deprecation
+release and are gone — the facade is the only host-facing surface.)
 """
-
-import importlib
-import warnings
 
 import numpy as np
 import pytest
@@ -18,11 +15,9 @@ import pytest
 from repro.core import ClusterConfig, SELCCLayer
 
 jax = pytest.importorskip("jax")
-import jax.numpy as jnp  # noqa: E402
+import jax.numpy as jnp  # noqa: E402,F401
 
 from repro.core import rounds as rp                      # noqa: E402
-from repro.core.rounds import descent as descent_mod     # noqa: E402
-from repro.core.rounds import driver as driver_mod       # noqa: E402
 
 
 def _i32(*xs):
@@ -123,92 +118,3 @@ def test_bound_hit_raises_runtime_error():
     plane = rp.DevicePlane.open(rp.make_state(2, 4), max_rounds=1)
     with pytest.raises(RuntimeError, match="not served"):
         plane.ops(_i32(0, 1), _i32(1, 1), _i32(1, 1))
-
-
-# ------------------------------------------- deprecation shims
-
-def _drain_ops(drv, n=1):
-    state = rp.make_state(2, 4)
-    out = []
-    for _ in range(n):
-        out.append(drv.run_ops_to_completion(
-            state, _i32(0), _i32(1), _i32(1), n_nodes=2))
-        state = out[-1][0]
-    return out
-
-
-def test_ops_shim_warns_once_then_delegates():
-    drv = importlib.reload(driver_mod)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        (s1, v1, r1), (_, v2, _) = _drain_ops(drv, n=2)
-    dep = [w for w in caught
-           if issubclass(w.category, DeprecationWarning)
-           and "DevicePlane.ops" in str(w.message)]
-    assert len(dep) == 1, [str(w.message) for w in caught]
-    assert v1.tolist() == [1] and r1 >= 1       # legacy 3-tuple intact
-    assert v2.tolist() == [2]
-    # wdata widens to the legacy 4-tuple
-    state = rp.make_state(2, 4, payload_width=1)
-    out = drv.run_ops_to_completion(
-        state, _i32(0), _i32(0), _i32(1),
-        np.asarray([[9]], np.int32), n_nodes=2)
-    assert len(out) == 4 and out[3].shape == (1, 1)
-
-
-def test_rmw_shim_warns_once_then_delegates():
-    drv = importlib.reload(driver_mod)
-
-    def _store(data, line, val):
-        return jnp.where((line >= 0)[:, None], val, data)
-
-    state = rp.make_state(2, 4, payload_width=1)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        for _ in range(2):
-            state, vers, rounds, data = drv.run_rmw_to_completion(
-                state, _i32(0), _i32(2), _store,
-                (np.asarray([[5]], np.int32),), n_nodes=2)
-    dep = [w for w in caught
-           if issubclass(w.category, DeprecationWarning)
-           and "DevicePlane.rmw" in str(w.message)]
-    assert len(dep) == 1, [str(w.message) for w in caught]
-    assert data.shape == (1, 1) and rounds >= 1
-    assert np.asarray(state["mem_data"])[2].tolist() == [5]
-
-
-def test_descent_shim_warns_once_then_delegates():
-    dsc = importlib.reload(descent_mod)
-    state = rp.make_state(1, 2, payload_width=2)
-    state = dict(state, mem_data=jnp.asarray([[0, 1], [1, 0]],
-                                             jnp.int32))
-
-    def _chain(data, key):
-        at_leaf = data[:, 0] == 1
-        return at_leaf, jnp.zeros(data.shape[0], bool), data[:, 1]
-
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        for _ in range(2):
-            out = dsc.run_descent_to_completion(
-                state, _i32(0), _i32(0), _i32(0), transition=_chain,
-                n_nodes=1)
-            state = out[0]
-    dep = [w for w in caught
-           if issubclass(w.category, DeprecationWarning)
-           and "DevicePlane.descent" in str(w.message)]
-    assert len(dep) == 1, [str(w.message) for w in caught]
-    assert len(out) == 8                        # legacy 8-tuple intact
-    assert out[1].tolist() == [1] and out[2].tolist() == [[1, 0]]
-
-
-def test_shims_rewarn_after_reload():
-    """Forced reload resets the warn-once set, so the warning fires
-    again — once-per-release behaviour is real, not a filter accident."""
-    for _ in range(2):
-        drv = importlib.reload(driver_mod)
-        with warnings.catch_warnings(record=True) as caught:
-            warnings.simplefilter("always")
-            _drain_ops(drv)
-        assert sum(issubclass(w.category, DeprecationWarning)
-                   for w in caught) == 1

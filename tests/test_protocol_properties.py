@@ -11,6 +11,7 @@ from hypothesis_compat import given, settings, st
 from repro.core import (ClusterConfig, SELCCConfig, SELCCLayer,
                         check_sequential_consistency, merge_histories)
 from repro.core import jax_protocol as jp
+from repro.core.rounds import DevicePlane
 
 
 @settings(max_examples=15, deadline=None)
@@ -65,8 +66,10 @@ def test_jax_round_protocol_invariants(seed, hot_lines, write_pct):
         nid = np.array([pairs[i][0] for i in idx], np.int32)
         ln = np.array([pairs[i][1] for i in idx], np.int32)
         isw = (rng.integers(0, 100, r) < write_pct).astype(np.int32)
-        state, _, _ = jp.run_ops_to_completion(
-            state, nid, ln, isw, n_nodes=n_nodes, max_rounds=128)
+        plane = DevicePlane.open(state, n_nodes=n_nodes,
+                                 max_rounds=128)
+        plane.ops(nid, ln, isw)
+        state = plane.state
         jp.check_invariants(state)
 
 
@@ -78,8 +81,9 @@ def test_jax_round_versions_monotone_per_line():
         nid = rng.integers(0, 3, 8).astype(np.int32)
         ln = np.arange(8).astype(np.int32)
         isw = rng.integers(0, 2, 8).astype(np.int32)
-        state, vers, _ = jp.run_ops_to_completion(
-            state, nid, ln, isw, n_nodes=3)
+        plane = DevicePlane.open(state, n_nodes=3)
+        vers = plane.ops(nid, ln, isw).version
+        state = plane.state
         mv = np.asarray(state["mem_version"])
         assert (mv >= last).all()
         last = mv

@@ -358,7 +358,7 @@ def test_jax_protocol_shim_warns_exactly_once_and_reexports():
            and "rounds" in str(w.message)]
     assert len(dep) == 1, [str(w.message) for w in caught]
     for name in ("check_invariants", "coherence_round", "evict_lines",
-                 "make_state", "run_ops_to_completion", "run_rounds"):
+                 "make_state", "run_rounds"):
         assert getattr(shim, name) is getattr(rp, name), name
     for name in ("I", "S", "M", "WRITER_SHIFT_HI"):
         assert getattr(shim, name) is getattr(co, name), name

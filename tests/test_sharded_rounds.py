@@ -221,7 +221,8 @@ def test_sharded_loop_compiles_once_per_shape():
 
     state, _, rounds1 = _ops_tc(
         state, *batch(1), n_nodes=4, mesh=mesh)
-    key = ("sharded", 1, 4, 16, 8, 8, 64, "ref", False, 0)
+    key = ("sharded", 1, 4, 16, 8, 8, 64, "ref", False, 0,
+           False, False)
     baseline = dict(engine.TRACE_COUNTS)
     assert baseline.get(key, 0) == 1, \
         "sharded driver must trace once per shape"
@@ -381,7 +382,8 @@ def test_multi_shard_parity_subprocess():
         assert np.asarray(md)[0].tolist() == data_p[last].tolist()
 
         # trace-count proof at 4 shards: shapes repeat, no retrace
-        key = ("sharded", 4, 4, 8, 16, 1, 128, "ref", False, 0)
+        key = ("sharded", 4, 4, 8, 16, 1, 128, "ref", False, 0,
+               False, False)
         assert engine.TRACE_COUNTS.get(key, 0) == 1
         state2 = rp.make_sharded_state(4, 8, mesh)
         state2, _, _ = _ops_tc(
