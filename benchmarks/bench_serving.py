@@ -19,10 +19,19 @@ Both run the deterministic :class:`~repro.serve.model.ToyLM`, so the
 bench first asserts token-identical outputs (the differential test's
 invariant, re-checked on the benchmark trace) and then measures:
 steady-state requests/sec, emitted-token throughput, and per-request
-p50/p99 completion latency from submission.  The gated
+p50/p99 completion latency from submission — quantiles from the obs
+``StreamingHistogram`` sketch, not a sorted sample.  The gated
 ``engine_sync_speedup`` row (>= 1.5x, within-run and therefore
 machine-independent) is the acceptance bar; ``tok_mops`` rides the
-regular max-regress trajectory gate.  Writes ``BENCH_serving.json``.
+regular max-regress trajectory gate.
+
+Observability: the engine legs run with a ``FlightRecorder`` attached
+to the pool's plane, so the artifact carries the full flight record —
+``meta.telemetry`` embeds the recorder snapshot (spans/rounds/serve
+totals, hottest lines) plus the engine's queue-wait and time-per-
+output-token histogram snapshots, and the last measured run's span
+ring exports to ``BENCH_serving_trace.json`` (chrome://tracing /
+Perfetto — the artifact CI uploads next to ``BENCH_serving.json``).
 """
 
 from __future__ import annotations
@@ -61,7 +70,8 @@ def _pool():
 
 
 def _run_engine(work):
-    """-> (wall_s, sorted completion latencies, ServeStats, tokens)."""
+    """-> (wall_s, completion latencies, ServeStats, tokens, recorder)."""
+    from repro.obs import FlightRecorder
     from repro.serve import ServeLoop, ToyLM
     pool = _pool()
     loop_t0 = 0.0
@@ -70,9 +80,11 @@ def _run_engine(work):
     def _done(req, slot):
         lats.append(time.perf_counter() - loop_t0)
 
+    rec = FlightRecorder(capacity=4096)
     loop = ServeLoop(pool, ToyLM(pool.cfg), n_slots=N_SLOTS,
                      max_pages=MAX_PAGES, prefill_chunk=PREFILL_CHUNK,
-                     queue_capacity=len(work), on_complete=_done)
+                     queue_capacity=len(work), on_complete=_done,
+                     recorder=rec)
     loop_t0 = time.perf_counter()
     reqs = [loop.submit(p, m) for p, m in work]
     loop.start()
@@ -82,7 +94,8 @@ def _run_engine(work):
     wall = time.perf_counter() - loop_t0
     st = loop.stats()
     assert st.completed == len(work) and st.pages_in_use == 0
-    return wall, sorted(lats), st, [r.generated for r in reqs]
+    assert rec.total > 0, "recorder saw no plane dispatches"
+    return wall, lats, st, [r.generated for r in reqs], rec
 
 
 def _run_sync(work):
@@ -104,9 +117,12 @@ def _run_sync(work):
     return wall, sorted(lats), srv, [r.generated for r in reqs]
 
 
-def _pct(sorted_lats, p):
-    return sorted_lats[min(len(sorted_lats) - 1,
-                           int(p * len(sorted_lats)))]
+def _hist(lats):
+    from repro.obs import StreamingHistogram
+    h = StreamingHistogram()
+    for x in lats:
+        h.observe(x)
+    return h
 
 
 def main(quick: bool = False, smoke: bool = False) -> list:
@@ -117,7 +133,7 @@ def main(quick: bool = False, smoke: bool = False) -> list:
 
     # warmup run of each server traces every jit shape (fused append,
     # two-phase read/write, attend); fresh pools below reuse the traces
-    _, _, _, toks_e = _run_engine(work)
+    _, _, _, toks_e, _ = _run_engine(work)
     _, _, _, toks_s = _run_sync(work)
     assert toks_e == toks_s, \
         "engine and sync baseline diverged on the benchmark trace"
@@ -126,20 +142,21 @@ def main(quick: bool = False, smoke: bool = False) -> list:
     runs_s = [_run_sync(work) for _ in range(n_meas)]
     wall_e = sorted(r[0] for r in runs_e)[n_meas // 2]
     wall_s = sorted(r[0] for r in runs_s)[n_meas // 2]
-    lats_e = sorted(x for r in runs_e for x in r[1])
-    lats_s = sorted(x for r in runs_s for x in r[1])
+    hist_e = _hist(x for r in runs_e for x in r[1])
+    hist_s = _hist(x for r in runs_s for x in r[1])
     st = runs_e[-1][2]
     srv = runs_s[-1][2]
+    rec = runs_e[-1][4]
 
     rows: list = []
-    for series, wall, lats in (("engine", wall_e, lats_e),
-                               ("sync", wall_s, lats_s)):
+    for series, wall, hist in (("engine", wall_e, hist_e),
+                               ("sync", wall_s, hist_s)):
         emit("serving", series, N_SLOTS, "reqs_per_s", n_req / wall,
              rows=rows)
-        emit("serving", series, N_SLOTS, "p50_ms", _pct(lats, 0.50) * 1e3,
-             rows=rows)
-        emit("serving", series, N_SLOTS, "p99_ms", _pct(lats, 0.99) * 1e3,
-             rows=rows)
+        emit("serving", series, N_SLOTS, "p50_ms",
+             hist.quantile(0.50) * 1e3, rows=rows)
+        emit("serving", series, N_SLOTS, "p99_ms",
+             hist.quantile(0.99) * 1e3, rows=rows)
     # emitted-token throughput rides the cross-commit trajectory gate
     emit("serving", "engine", N_SLOTS, "tok_mops", tokens / wall_e / 1e6,
          rows=rows)
@@ -157,6 +174,22 @@ def main(quick: bool = False, smoke: bool = False) -> list:
     emit("serving", "sync", N_SLOTS, "plane_calls", srv.plane_calls,
          rows=rows)
     emit("serving", "sync", N_SLOTS, "steps", srv.steps, rows=rows)
+    # engine-only latency breakdown from the loop's own histograms
+    # (ungated diagnostics: scheduling quality, not raw speed)
+    if st.queue_wait is not None:
+        emit("serving", "engine", N_SLOTS, "queue_wait_p50_ms",
+             st.queue_wait["p50"] * 1e3, rows=rows)
+        emit("serving", "engine", N_SLOTS, "queue_wait_p99_ms",
+             st.queue_wait["p99"] * 1e3, rows=rows)
+    if st.tpot is not None:
+        emit("serving", "engine", N_SLOTS, "tpot_p50_ms",
+             st.tpot["p50"] * 1e3, rows=rows)
+        emit("serving", "engine", N_SLOTS, "tpot_p99_ms",
+             st.tpot["p99"] * 1e3, rows=rows)
+
+    # the last measured engine run's span ring, viewable in
+    # chrome://tracing / Perfetto; CI uploads it next to the JSON
+    rec.export_chrome_trace("BENCH_serving_trace.json")
 
     # gate_max_regress 0.6: a serve tick is a few SMALL dispatches
     # (fused append + attend) plus host-side bookkeeping, jittery under
@@ -170,7 +203,8 @@ def main(quick: bool = False, smoke: bool = False) -> list:
                            "prefill_chunk": PREFILL_CHUNK,
                            "gen_range": [GEN_MIN, GEN_MAX],
                            "tokens": tokens, "runs": n_meas,
-                           "smoke": smoke, "quick": quick})
+                           "smoke": smoke, "quick": quick,
+                           "telemetry": rec.snapshot()})
     return rows
 
 

@@ -169,6 +169,14 @@ def main(quick: bool = False, smoke: bool = False) -> list:
             total = stats.commits + stats.aborts - retries
             emit("fig11_tpcc_rounds", series, algo, "txn_commit_ratio",
                  stats.commits / max(1, total), rows=rows)
+            # per-txn latency quantiles straight from TxnStats' obs
+            # StreamingHistogram (device cells only — the hostloop and
+            # DES cells don't book per-txn wall time).  Ungated.
+            if key in ("flat", "sharded") and stats.latency.count:
+                emit("fig11_tpcc_rounds", series, algo, "txn_p50_us",
+                     stats.p50 * 1e6, rows=rows)
+                emit("fig11_tpcc_rounds", series, algo, "txn_p99_us",
+                     stats.p99 * 1e6, rows=rows)
         # The fused loop's structural case: the host-driven reference
         # pays ~3 dispatches + syncs per scheduler iteration; the fused
         # loop pays ONE for the whole batch.  Gated on 2PL, ungated

@@ -11,7 +11,7 @@ op stream on a 4-shard mesh:
 * ``static``  — the hard-wired ``line % n_shards`` stripe (no home
   directory): hot lines land where the address math says;
 * ``rehome``  — home-directory plane: a short probe phase collects
-  ``PlaneResult.stats["line_hits"]``, ``placement.plan_rehome`` turns
+  ``PlaneResult.telemetry.line_hits``, ``placement.plan_rehome`` turns
   them into greedy hottest-to-coldest slot swaps, and
   ``plane.rehome`` migrates the slab rows before the timed phase;
 * ``replica`` — re-homing plus ``plan_replication`` +
@@ -105,9 +105,8 @@ def _child(iters: int) -> dict:
         for node, line, isw in batches[:PROBE_BATCHES]:
             for name, p in planes.items():
                 res = p.ops(node, line, isw)
-                if res.stats:
-                    hits[name] += res.stats["line_hits"]
-                    whits[name] += res.stats["line_whits"]
+                hits[name] += res.telemetry.line_hits
+                whits[name] += res.telemetry.line_whits
         # --- placement: migrate hot lines, replicate read-mostly -----
         for name in ("rehome", "replica"):
             p = planes[name]
@@ -133,10 +132,9 @@ def _child(iters: int) -> dict:
                 times[name].append(time.perf_counter() - t0)
                 for key in ("served_per_home", "deferred",
                             "replica_served"):
-                    if key in res.stats:
-                        tele[name][key] = (
-                            tele[name].get(key, 0)
-                            + np.asarray(res.stats[key], np.int64))
+                    tele[name][key] = (
+                        tele[name].get(key, 0)
+                        + np.asarray(res.telemetry[key], np.int64))
 
         def med(name):
             ts = sorted(times[name])

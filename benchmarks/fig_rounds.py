@@ -77,7 +77,7 @@ def _bench_case(n_nodes: int, write_pct: int, write_back: bool,
     rounds_used = []
 
     def fused_step(node, line, is_w):
-        state[0], vers, _, rounds, ok = run_rounds(
+        state[0], vers, _, rounds, ok, _tele = run_rounds(
             state[0], node, line, is_w, n_nodes=n_nodes,
             max_rounds=MAX_ROUNDS)
         jax.block_until_ready(vers)

@@ -42,7 +42,7 @@ def _steps_flat(width: int):
     state = [make_state(N_NODES, N_LINES, payload_width=width)]
 
     def step(node, line, isw, wd):
-        state[0], vers, data, _, ok = run_rounds(
+        state[0], vers, data, _, ok, _tele = run_rounds(
             state[0], node, line, isw, wd[:, :width], n_nodes=N_NODES,
             max_rounds=MAX_ROUNDS)
         return vers, ok

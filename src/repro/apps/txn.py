@@ -23,6 +23,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from ..obs import StreamingHistogram
+
 GCLS_BINDING = "txn:gcls"
 TS_BINDING = "txn:ts"
 
@@ -42,14 +44,17 @@ class TxnStats:
     batch engine (``apps/txn_device.py``) so Fig. 11 host-vs-device
     benches compare like-for-like: abort REASONS ("nowait" — 2PL lock
     conflict, "ts" — TO timestamp check, "occ" — version validation),
-    and the full latency sample (DES time units host-side, wall seconds
-    device-side) for tail percentiles, not just the mean."""
+    and the latency distribution (DES time units host-side, wall
+    seconds device-side) as an ``obs.StreamingHistogram`` — bounded
+    memory at any txn count, tail percentiles within the sketch's
+    relative-error bound, not just the mean."""
 
     commits: int = 0
     aborts: int = 0
     latency_sum: float = 0.0
     abort_reasons: dict = field(default_factory=dict)
-    latencies: list = field(default_factory=list)
+    latency: StreamingHistogram = field(
+        default_factory=StreamingHistogram)
 
     def record(self, ok: bool, latency: float,
                reason: str | None = None) -> None:
@@ -61,21 +66,15 @@ class TxnStats:
                 self.abort_reasons[reason] = \
                     self.abort_reasons.get(reason, 0) + 1
         self.latency_sum += latency
-        self.latencies.append(latency)
-
-    def _pct(self, q: float) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        return xs[min(len(xs) - 1, int(q * len(xs)))]
+        self.latency.observe(latency)
 
     @property
     def p50(self) -> float:
-        return self._pct(0.50)
+        return self.latency.quantile(0.50)
 
     @property
     def p99(self) -> float:
-        return self._pct(0.99)
+        return self.latency.quantile(0.99)
 
 
 class TxnEngine:

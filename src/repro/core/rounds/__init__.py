@@ -8,7 +8,7 @@ spin loop (:func:`run_rounds`) with zero host syncs per round.
 
     state  = make_state(n_nodes, n_lines[, write_back=True]
                         [, payload_width=W])
-    state, versions, data, rounds, ok = run_rounds(
+    state, versions, data, rounds, ok, tele = run_rounds(
         state, nodes, lines, is_wr[, wdata], n_nodes=n_nodes)
 
 ``payload_width=W`` attaches the GCL data plane: ops carry [R, W] write
@@ -19,8 +19,10 @@ Mesh scale-out (rounds/sharded.py): the SAME engine across a shard_map
 mesh (home = the physical-slot directory, the ``line % n_shards``
 stripe by default), requests routed home and replies routed back by
 two all_to_alls per round (payload lanes ride the same collectives),
-still one fused loop — now also accumulating congestion telemetry in
-the loop carry:
+still one fused loop.  BOTH planes accumulate telemetry in the loop
+carry (the trailing ``tele`` counter dict — same keys flat and
+sharded, so the two geometries diff bit-for-bit); the facade types it
+as :class:`~repro.obs.PlaneTelemetry`:
 
     state  = make_sharded_state(n_nodes, n_lines, mesh[, write_back=..]
                                 [, payload_width=W]
@@ -33,9 +35,13 @@ Host-facing callers should use the :class:`DevicePlane` facade
 exposes ``plane.ops`` / ``plane.rmw`` / ``plane.descent`` /
 ``plane.txn`` (plus the placement verbs ``plane.rehome`` /
 ``plane.replicate``, fed by :mod:`.placement` policies over the
-telemetry) and returns normalized :class:`PlaneResult`s.
+telemetry) and returns normalized :class:`PlaneResult`s.  Attach an
+``obs.FlightRecorder`` (``DevicePlane.open(..., recorder=rec)``) to
+get per-dispatch spans, Prometheus metrics, Chrome-trace export and
+the EWMA line/home heat the placement policies consume online.
 """
 
+from ...obs import FlightRecorder, PlaneTelemetry
 from ..coherence import I, M, S
 from .descent import run_descent
 from .driver import run_rmw, run_rounds
@@ -52,7 +58,8 @@ from .txn import (TxnBatchResult, run_txn_batch,
                   run_txn_batch_host, run_txn_rounds)
 
 __all__ = [
-    "I", "S", "M", "DevicePlane", "PlaneResult", "TRACE_COUNTS",
+    "I", "S", "M", "DevicePlane", "FlightRecorder", "PlaneResult",
+    "PlaneTelemetry", "TRACE_COUNTS",
     "TxnBatchResult", "check_invariants", "coherence_round",
     "coherence_round_sharded", "evict_lines", "evict_lines_sharded",
     "is_write_back", "make_sharded_state", "make_state", "pad_ops",

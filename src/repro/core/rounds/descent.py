@@ -48,6 +48,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .driver import _tele_round, zero_flat_tele
 from .engine import _note_trace, _round_impl
 from .state import payload_width
 
@@ -63,16 +64,20 @@ def run_descent(state, node_id, key, root, *, transition, n_nodes: int,
     real node bytes).
 
     Returns ``(state', line[B], lanes[B, W], levels[B], hops[B],
-    paths[B, path_cap], path_len[B], steps_used, all_done)`` — all
-    device values: each slot's final line and its node lanes, how many
-    levels it descended and right links it hopped, the internal lines
-    it descended through, and whether every slot settled within
-    ``max_steps`` outer iterations (each costs one coherence round)."""
+    paths[B, path_cap], path_len[B], steps_used, all_done,
+    telemetry)`` — all device values: each slot's final line and its
+    node lanes, how many levels it descended and right links it hopped,
+    the internal lines it descended through, whether every slot settled
+    within ``max_steps`` outer iterations (each costs one coherence
+    round), and the flat telemetry counter dict accumulated in the
+    carry (``driver.zero_flat_tele`` keys; descents are pure reads, so
+    ``slot_whits`` stays zero)."""
     node_id = jnp.asarray(node_id, jnp.int32)
     key = jnp.asarray(key, jnp.int32)
     root = jnp.asarray(root, jnp.int32)
     b = root.shape[0]
     width = payload_width(state)
+    n_lines = state["words"].shape[0]
     write_back = "dirty" in state
     _note_trace(("descent", transition, n_nodes, b, max_steps, backend,
                  write_back, width, path_cap))
@@ -80,15 +85,17 @@ def run_descent(state, node_id, key, root, *, transition, n_nodes: int,
     no_bytes = jnp.zeros((b, width), jnp.int32)
 
     def cond(carry):
-        _, _, done, _, _, _, _, _, steps = carry
+        _, _, done, _, _, _, _, _, steps, _ = carry
         return jnp.logical_and(jnp.any(~done), steps < max_steps)
 
     def body(carry):
-        st, cur, done, lanes, levels, hops, paths, plen, steps = carry
+        st, cur, done, lanes, levels, hops, paths, plen, steps, tele \
+            = carry
         line = jnp.where(done, jnp.int32(-1), cur)
         st, served, _, d = _round_impl(st, node_id, line, no_write,
                                        no_bytes, n_nodes=n_nodes,
                                        backend=backend)
+        tele = _tele_round(tele, line, served, no_write, n_lines)
         at_leaf, hop, nxt = transition(d, key)
         move = jnp.logical_and(served, ~done)
         hop = jnp.logical_and(move, hop)
@@ -108,15 +115,17 @@ def run_descent(state, node_id, key, root, *, transition, n_nodes: int,
         done = jnp.logical_or(done, at_leaf)
         advance = jnp.logical_and(move, ~at_leaf)
         cur = jnp.where(advance, nxt, cur)
-        return st, cur, done, lanes, levels, hops, paths, plen, steps + 1
+        return (st, cur, done, lanes, levels, hops, paths, plen,
+                steps + 1, tele)
 
     init = (state, root, root < 0,
             jnp.zeros((b, width), jnp.int32),
             jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32),
             jnp.full((b, path_cap), -1, jnp.int32),
-            jnp.zeros((b,), jnp.int32), jnp.int32(0))
-    state, cur, done, lanes, levels, hops, paths, plen, steps = \
+            jnp.zeros((b,), jnp.int32), jnp.int32(0),
+            zero_flat_tele(n_lines))
+    state, cur, done, lanes, levels, hops, paths, plen, steps, tele = \
         jax.lax.while_loop(cond, body, init)
     return (state, cur, lanes, levels, hops, paths, plen, steps,
-            jnp.all(done))
+            jnp.all(done), tele)
 

@@ -22,6 +22,45 @@ from .engine import _note_trace, coherence_round
 from .state import payload_width
 
 
+def zero_flat_tele(n_lines: int) -> dict:
+    """Zeroed FLAT telemetry accumulator — the same counter keys the
+    sharded drivers return, shaped for S = 1 home (``occupancy`` /
+    ``deferred`` [1, 1], ``served_per_home`` / ``replica_served`` [1],
+    per-line ``slot_hits`` / ``slot_whits`` [L]; the flat engine is
+    line-major, so slot == line).  Rides the fused loops' carries —
+    accumulating costs two scatter-adds per round, zero host syncs."""
+    z1 = jnp.zeros((1,), jnp.int32)
+    return {"occupancy": jnp.zeros((1, 1), jnp.int32),
+            "deferred": jnp.zeros((1, 1), jnp.int32),
+            "served_per_home": z1, "replica_served": z1,
+            "slot_hits": jnp.zeros((n_lines,), jnp.int32),
+            "slot_whits": jnp.zeros((n_lines,), jnp.int32)}
+
+
+def add_tele(a: dict, b: dict) -> dict:
+    """Key-wise telemetry-dict sum (accumulation across phases/spins)."""
+    return {k: a[k] + b[k] for k in a}
+
+
+def _tele_round(tele: dict, pending, served, is_write,
+                n_lines: int) -> dict:
+    """Fold one round's serve results into a flat telemetry carry:
+    ``pending`` is the PRE-round line per slot (-1 = done/pad)."""
+    valid = pending >= 0
+    hit = jnp.logical_and(served, valid)
+    hit_line = jnp.where(hit, pending, n_lines)      # n_lines = dropped
+    occ = tele["occupancy"] + jnp.sum(valid.astype(jnp.int32))
+    srv = tele["served_per_home"] + jnp.sum(hit.astype(jnp.int32))
+    hits = tele["slot_hits"].at[hit_line].add(1, mode="drop")
+    whits = tele["slot_whits"].at[
+        jnp.where(is_write.astype(bool), hit_line, n_lines)].add(
+        1, mode="drop")
+    return {"occupancy": occ, "deferred": tele["deferred"],
+            "served_per_home": srv,
+            "replica_served": tele["replica_served"],
+            "slot_hits": hits, "slot_whits": whits}
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_nodes", "max_rounds", "backend"))
 def run_rounds(state, node_id, line, is_write, wdata=None, *,
@@ -32,16 +71,21 @@ def run_rounds(state, node_id, line, is_write, wdata=None, *,
     state (``None`` = zeros; ignored on version-only states).
 
     Returns ``(state', versions[R], data[R, W], rounds_used,
-    all_served)`` — all device values; the only sync is whatever the
-    CALLER materializes.  ``data`` holds each op's read payload (its
-    group's final bytes; W = 0 on version-only states), produced INSIDE
-    the fused loop — no extra host round trip buys the bytes.
-    ``max_rounds`` bounds the loop (static); ``all_served`` is False if
-    the bound was hit with ops still pending."""
+    all_served, telemetry)`` — all device values; the only sync is
+    whatever the CALLER materializes.  ``data`` holds each op's read
+    payload (its group's final bytes; W = 0 on version-only states),
+    produced INSIDE the fused loop — no extra host round trip buys the
+    bytes.  ``telemetry`` is the flat counter dict (same keys as the
+    sharded drivers', S = 1 — see :func:`zero_flat_tele`), accumulated
+    in the loop carry; its per-line hit counters are bit-identical to a
+    sharded plane's on the same op trace.  ``max_rounds`` bounds the
+    loop (static); ``all_served`` is False if the bound was hit with
+    ops still pending."""
     node_id = jnp.asarray(node_id, jnp.int32)
     line = jnp.asarray(line, jnp.int32)
     is_write = jnp.asarray(is_write, jnp.int32)
     width = payload_width(state)
+    n_lines = state["words"].shape[0]
     if wdata is None:
         wdata = jnp.zeros((line.shape[0], width), jnp.int32)
     else:
@@ -51,24 +95,26 @@ def run_rounds(state, node_id, line, is_write, wdata=None, *,
                  write_back, width))
 
     def cond(carry):
-        _, pending, _, _, rounds = carry
+        _, pending, _, _, rounds, _ = carry
         return jnp.logical_and(jnp.any(pending >= 0), rounds < max_rounds)
 
     def body(carry):
-        st, pending, versions, data, rounds = carry
+        st, pending, versions, data, rounds, tele = carry
         st, served, ver, rdata = coherence_round(
             st, node_id, pending, is_write, wdata, n_nodes=n_nodes,
             backend=backend)
+        tele = _tele_round(tele, pending, served, is_write, n_lines)
         versions = jnp.where(served, ver, versions)
         data = jnp.where(served[:, None], rdata, data)
         pending = jnp.where(served, jnp.int32(-1), pending)
-        return st, pending, versions, data, rounds + 1
+        return st, pending, versions, data, rounds + 1, tele
 
     init = (state, line, jnp.zeros_like(line),
-            jnp.zeros((line.shape[0], width), jnp.int32), jnp.int32(0))
-    state, pending, versions, data, rounds = jax.lax.while_loop(
+            jnp.zeros((line.shape[0], width), jnp.int32), jnp.int32(0),
+            zero_flat_tele(n_lines))
+    state, pending, versions, data, rounds, tele = jax.lax.while_loop(
         cond, body, init)
-    return state, versions, data, rounds, jnp.all(pending < 0)
+    return state, versions, data, rounds, jnp.all(pending < 0), tele
 
 
 @functools.partial(jax.jit,
@@ -113,20 +159,21 @@ def run_rmw(state, node_id, line, operands=(), *, modify, n_nodes: int,
     kvpool's token splice).
 
     Returns ``(state', versions[R], data[R, W], rounds_used,
-    all_served)`` where ``versions``/``data`` are the WRITE phase's
-    replies (the bytes the final versions name)."""
+    all_served, telemetry)`` where ``versions``/``data`` are the WRITE
+    phase's replies (the bytes the final versions name) and
+    ``telemetry`` sums both phases' flat counter dicts."""
     node_id = jnp.asarray(node_id, jnp.int32)
     line = jnp.asarray(line, jnp.int32)
     # modify is a static arg: a fresh callable per call retraces, so it
     # belongs in the trace key or the TRACE_COUNTS guard tests go blind
     _note_trace(("rmw", modify, n_nodes, line.shape[0], max_rounds,
                  backend, "dirty" in state, payload_width(state)))
-    state, _, data, r1, ok1 = run_rounds(
+    state, _, data, r1, ok1, t1 = run_rounds(
         state, node_id, line, jnp.zeros_like(line), None,
         n_nodes=n_nodes, max_rounds=max_rounds, backend=backend)
     new_data = jnp.asarray(modify(data, line, *operands), jnp.int32)
-    state, versions, data2, r2, ok2 = run_rounds(
+    state, versions, data2, r2, ok2, t2 = run_rounds(
         state, node_id, line, jnp.ones_like(line), new_data,
         n_nodes=n_nodes, max_rounds=max_rounds, backend=backend)
     return (state, versions, data2, r1 + r2,
-            jnp.logical_and(ok1, ok2))
+            jnp.logical_and(ok1, ok2), add_tele(t1, t2))

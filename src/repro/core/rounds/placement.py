@@ -1,9 +1,13 @@
 """Host-side placement policies over the fused loops' telemetry.
 
-The sharded engine reports per-line served-op counters
-(``PlaneResult.stats["line_hits"]`` / ``["line_whits"]``) and per-home
+Every plane verb reports per-line served-op counters
+(``PlaneResult.telemetry.line_hits`` / ``.line_whits``) and per-home
 congestion rows; this module turns them into placement decisions for
-the two :class:`DevicePlane` knobs:
+the two :class:`DevicePlane` knobs.  Both planners accept the raw
+signal three ways — a :class:`~repro.obs.PlaneTelemetry`, a
+``FlightRecorder``'s EWMA ``line_heat`` (float), or a plain count
+array — so an online loop can drive placement straight off its
+recorder with no stats plumbing:
 
 * :func:`plan_rehome` — greedy move-hottest-to-coldest: while the load
   gap between the hottest and coldest home shard is worth closing, swap
@@ -26,28 +30,37 @@ from __future__ import annotations
 import numpy as np
 
 
+def _heat_array(signal, attr: str = "line_hits") -> np.ndarray:
+    """Normalize a heat signal: PlaneTelemetry → its counter; anything
+    else → float64 array (EWMA heat or raw counts)."""
+    if hasattr(signal, attr):           # PlaneTelemetry (duck-typed)
+        signal = getattr(signal, attr)
+    return np.asarray(signal, np.float64)
+
+
 def plan_rehome(line_hits, perm, n_shards: int, *, max_moves: int = 8,
-                min_gain: int = 1):
+                min_gain: float = 1.0):
     """Greedy hottest-line-to-coldest-shard migration plan.
 
-    ``line_hits`` [L] per-line served-op counts (``stats["line_hits"]``
-    from a probe run), ``perm`` [L] the current home directory
-    (``plane.state["home"]``).  Returns ``(lines, new_homes, victims)``
-    int32 arrays, possibly empty: move ``lines[i]`` to shard
-    ``new_homes[i]``, swapping slots with ``victims[i]`` (the coldest
-    line currently homed there).  Each step moves the single hottest
-    line off the currently hottest shard; stops after ``max_moves``,
-    when the swap's load transfer drops below ``min_gain``, or when a
-    swap would overshoot (transfer >= the hot/cold load gap — moving it
-    would just flip which shard is hot)."""
-    hits = np.asarray(line_hits, np.int64)
+    ``line_hits`` [L] is the per-line serve signal — a
+    :class:`~repro.obs.PlaneTelemetry` from a probe run, a recorder's
+    EWMA ``line_heat``, or a plain count array; ``perm`` [L] the
+    current home directory (``plane.state["home"]``).  Returns
+    ``(lines, new_homes, victims)`` int32 arrays, possibly empty: move
+    ``lines[i]`` to shard ``new_homes[i]``, swapping slots with
+    ``victims[i]`` (the coldest line currently homed there).  Each step
+    moves the single hottest line off the currently hottest shard;
+    stops after ``max_moves``, when the swap's load transfer drops
+    below ``min_gain``, or when a swap would overshoot (transfer >= the
+    hot/cold load gap — moving it would just flip which shard is
+    hot)."""
+    hits = _heat_array(line_hits)
     perm = np.asarray(perm, np.int64)
     l = hits.shape[0]
     if perm.shape[0] != l:
         raise ValueError("line_hits and perm must match in length")
     home = perm % n_shards
-    loads = np.bincount(home, weights=hits,
-                        minlength=n_shards).astype(np.int64)
+    loads = np.bincount(home, weights=hits, minlength=n_shards)
     used = np.zeros(l, bool)
     lines, homes, victims = [], [], []
     for _ in range(max_moves):
@@ -55,7 +68,7 @@ def plan_rehome(line_hits, perm, n_shards: int, *, max_moves: int = 8,
         cold = int(np.argmin(loads))
         if hot == cold:
             break
-        gap = int(loads[hot] - loads[cold])
+        gap = float(loads[hot] - loads[cold])
         # hottest movable line on the hot shard
         cand = np.flatnonzero((home == hot) & ~used)
         vict = np.flatnonzero((home == cold) & ~used)
@@ -63,8 +76,8 @@ def plan_rehome(line_hits, perm, n_shards: int, *, max_moves: int = 8,
             break
         a = int(cand[np.argmax(hits[cand])])
         b = int(vict[np.argmin(hits[vict])])
-        transfer = int(hits[a] - hits[b])
-        if transfer < max(min_gain, 1) or transfer >= gap:
+        transfer = float(hits[a] - hits[b])
+        if transfer < min_gain or transfer >= gap:
             break
         used[a] = used[b] = True
         home[a], home[b] = cold, hot
@@ -77,19 +90,28 @@ def plan_rehome(line_hits, perm, n_shards: int, *, max_moves: int = 8,
             np.asarray(victims, np.int32))
 
 
-def plan_replication(line_hits, line_whits, *, top_k: int = 8,
-                     max_write_frac: float = 0.05, min_hits: int = 1):
+def plan_replication(line_hits, line_whits=None, *, top_k: int = 8,
+                     max_write_frac: float = 0.05,
+                     min_hits: float = 1.0):
     """Pick read-mostly lines worth replicating.
 
-    Eligible lines have at least ``min_hits`` served ops of which at
-    most ``max_write_frac`` were writes (every write costs an
-    invalidation plus a refresh, so hot WRITE lines must not
+    ``line_hits`` is a :class:`~repro.obs.PlaneTelemetry` (its
+    ``line_whits`` comes along for free and the second argument may be
+    omitted) or a plain hit/heat array with ``line_whits`` passed
+    alongside.  Eligible lines have at least ``min_hits`` served ops
+    of which at most ``max_write_frac`` were writes (every write costs
+    an invalidation plus a refresh, so hot WRITE lines must not
     replicate).  Returns up to ``top_k`` line ids, hottest first."""
-    hits = np.asarray(line_hits, np.int64)
-    whits = np.asarray(line_whits, np.int64)
+    if line_whits is None:
+        if not hasattr(line_hits, "line_whits"):
+            raise ValueError("line_whits required unless line_hits "
+                             "is a PlaneTelemetry")
+        line_whits = line_hits.line_whits
+    hits = _heat_array(line_hits)
+    whits = np.asarray(line_whits, np.float64)
     if whits.shape != hits.shape:
         raise ValueError("line_hits and line_whits must match in shape")
-    ok = (hits >= max(min_hits, 1)) & (whits <= max_write_frac * hits)
+    ok = (hits >= min_hits) & (whits <= max_write_frac * hits)
     cand = np.flatnonzero(ok)
     order = cand[np.argsort(hits[cand])[::-1]]
     return order[:top_k].astype(np.int32)

@@ -34,21 +34,31 @@ memorize.  Sharded planes route through the very same calls: the mesh
 dispatch, ``pad_ops`` slot padding and result re-slicing all live HERE,
 once.
 
-On sharded planes every verb also surfaces the congestion telemetry the
-fused loops accumulate in their carries (``PlaneResult.stats``:
-occupancy/deferred/served counters plus per-line hit counts), and two
-placement verbs act on it at op-quiescent boundaries:
-:meth:`DevicePlane.rehome` migrates lines between home shards through
-the coherent directory, :meth:`DevicePlane.replicate` marks read-mostly
-lines for replica serving.  ``core/rounds/placement.py`` turns the
-counters into migration/replication picks.
+Every verb — flat AND sharded — also surfaces the telemetry the fused
+loops accumulate in their carries as a typed
+:class:`~repro.obs.telemetry.PlaneTelemetry`
+(``PlaneResult.telemetry``: occupancy/deferred/served counters plus
+per-line hit counts, diff-able bit-for-bit between a flat plane and any
+shard count on the same op trace), and two placement verbs act on it at
+op-quiescent boundaries: :meth:`DevicePlane.rehome` migrates lines
+between home shards through the coherent directory,
+:meth:`DevicePlane.replicate` marks read-mostly lines for replica
+serving.  ``core/rounds/placement.py`` turns the counters (or the
+EWMA heat a :class:`~repro.obs.recorder.FlightRecorder` distills from
+them) into migration/replication picks.  Attach a recorder
+(``DevicePlane.open(..., recorder=rec)`` or ``attach_recorder``) and
+every verb dispatch appends one span — wall time, rounds, serve
+totals, jit-compile events — to its bounded ring, host-side only.
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from ...obs import PlaneTelemetry
 
 
 @dataclass(frozen=True)
@@ -63,20 +73,23 @@ class PlaneResult:
     * ``rounds``  — coherence rounds (or descent steps) the fused loop
       spent, summed over phases;
     * ``stats``   — verb-specific extras (descent: ``line``, ``levels``,
-      ``hops``, ``paths``, ``path_len``).  On SHARDED planes every verb
-      adds the congestion-telemetry counters accumulated inside the
-      fused loop: ``occupancy``/``deferred`` [S, S] (row = source
-      shard, col = home: bucket entries sent / deferred on overflow),
-      ``served_per_home`` [S], ``replica_served`` [S] (per source
-      shard), and per-line ``line_hits``/``line_whits`` [L] (ops served
-      at each line's home slot; whits = write subset) — flat planes
-      report ``{}`` (nothing congests).
+      ``hops``, ``paths``, ``path_len``; other verbs: ``{}``);
+    * ``telemetry`` — the :class:`~repro.obs.telemetry.PlaneTelemetry`
+      counters accumulated inside the fused loop, on EVERY plane
+      geometry: ``occupancy``/``deferred`` [S, S] (row = source shard,
+      col = home: bucket entries sent / deferred on overflow; S = 1
+      flat, where nothing defers), ``served_per_home`` [S],
+      ``replica_served`` [S] (per source shard), and per-line
+      ``line_hits``/``line_whits`` [L] (ops served per line id; whits =
+      write subset).  The per-line counters are bit-identical between a
+      flat plane and any shard count on the same op trace.
     """
 
     version: np.ndarray | None
     data: np.ndarray | None
     rounds: int
     stats: dict = field(default_factory=dict)
+    telemetry: PlaneTelemetry | None = None
 
 
 class DevicePlane:
@@ -91,7 +104,8 @@ class DevicePlane:
 
     def __init__(self, state, mesh=None, *, axis: str = "shards",
                  n_nodes: int | None = None, backend: str = "ref",
-                 max_rounds: int = 64, bucket_cap: int | None = None):
+                 max_rounds: int = 64, bucket_cap: int | None = None,
+                 recorder=None):
         self.state = state
         self.mesh = mesh
         self.axis = axis
@@ -100,16 +114,25 @@ class DevicePlane:
         self.backend = backend
         self.max_rounds = int(max_rounds)
         self.bucket_cap = bucket_cap
+        self.recorder = recorder
 
     @classmethod
     def open(cls, state, mesh=None, *, axis: str = "shards",
              n_nodes: int | None = None, backend: str = "ref",
-             max_rounds: int = 64, bucket_cap: int | None = None
-             ) -> "DevicePlane":
-        """The one constructor: wrap a round state (+ optional mesh)."""
+             max_rounds: int = 64, bucket_cap: int | None = None,
+             recorder=None) -> "DevicePlane":
+        """The one constructor: wrap a round state (+ optional mesh).
+        ``recorder`` optionally attaches an ``obs.FlightRecorder`` that
+        receives one span per verb dispatch."""
         return cls(state, mesh, axis=axis, n_nodes=n_nodes,
                    backend=backend, max_rounds=max_rounds,
-                   bucket_cap=bucket_cap)
+                   bucket_cap=bucket_cap, recorder=recorder)
+
+    def attach_recorder(self, recorder) -> None:
+        """Attach (or replace, or with ``None`` detach) the plane's
+        ``obs.FlightRecorder`` — spans start/stop appearing on the
+        next verb dispatch."""
+        self.recorder = recorder
 
     # ------------------------------------------------------------ geometry
     @property
@@ -147,22 +170,49 @@ class DevicePlane:
         check_invariants(self.flat_state())
 
     # --------------------------------------------------------- telemetry
-    def _tele_stats(self, tele) -> dict:
-        """Materialize a fused loop's telemetry dict and remap the
-        physical-slot hit counters to LINE ids through the directory."""
-        stats = {k: np.asarray(v) for k, v in tele.items()}
-        hits = stats.pop("slot_hits")
-        whits = stats.pop("slot_whits")
-        l, s = self.n_lines, self.n_shards
-        perm = (np.asarray(self.state["home"])
-                if "home" in self.state
-                else np.arange(l, dtype=np.int64))
-        # slot p lives at row (p % S) * (L // S) + p // S of the
-        # shard-major concatenation the counters come back in
-        pos = (perm % s) * (l // s) + perm // s
-        stats["line_hits"] = hits[pos]
-        stats["line_whits"] = whits[pos]
-        return stats
+    def _telemetry(self, tele) -> PlaneTelemetry:
+        """Materialize a fused loop's telemetry counter dict into a
+        typed :class:`PlaneTelemetry`, remapping the physical-slot hit
+        counters to LINE ids.  Sharded counters come back in the
+        shard-major slab concatenation and route through the home
+        directory; the flat engine presents ops BY line id, so its
+        counters are line-indexed already (identity — the home perm
+        does not reorder them)."""
+        c = {k: np.asarray(v) for k, v in tele.items()}
+        hits = c.pop("slot_hits")
+        whits = c.pop("slot_whits")
+        if self.sharded:
+            l, s = self.n_lines, self.n_shards
+            perm = (np.asarray(self.state["home"])
+                    if "home" in self.state
+                    else np.arange(l, dtype=np.int64))
+            # slot p lives at row (p % S) * (L // S) + p // S of the
+            # shard-major concatenation the counters come back in
+            pos = (perm % s) * (l // s) + perm // s
+            hits, whits = hits[pos], whits[pos]
+        c["line_hits"] = hits
+        c["line_whits"] = whits
+        return PlaneTelemetry.from_counters(c)
+
+    def _span_begin(self):
+        """Recorder bracket: (wall clock, TRACE_COUNTS sum) or None."""
+        if self.recorder is None:
+            return None
+        from .engine import TRACE_COUNTS
+        return (time.perf_counter(), sum(TRACE_COUNTS.values()))
+
+    def _span_end(self, verb: str, mark, *, batch=(), rounds: int = 0,
+                  telemetry=None, attrs=None) -> None:
+        """Close a bracket: append one span to the attached recorder
+        (compile events = the TRACE_COUNTS delta over the dispatch)."""
+        if mark is None or self.recorder is None:
+            return
+        from .engine import TRACE_COUNTS
+        t0, c0 = mark
+        self.recorder.record(
+            verb, duration=time.perf_counter() - t0, batch=batch,
+            rounds=rounds, telemetry=telemetry,
+            compiled=sum(TRACE_COUNTS.values()) - c0, attrs=attrs)
 
     # ------------------------------------------------------------- verbs
     def ops(self, node_id, line, is_write, wdata=None, *,
@@ -171,6 +221,7 @@ class DevicePlane:
         completion through the fused spin loop (flat or sharded)."""
         mr = self.max_rounds if max_rounds is None else max_rounds
         r = np.asarray(line).shape[0]
+        mark = self._span_begin()
         if self.sharded:
             from .sharded import pad_ops, run_rounds_sharded
             if wdata is None:
@@ -185,19 +236,21 @@ class DevicePlane:
                     mesh=self.mesh, axis=self.axis,
                     n_nodes=self.n_nodes, max_rounds=mr,
                     bucket_cap=self.bucket_cap, backend=self.backend)
-            stats = self._tele_stats(tele)
         else:
             from .driver import run_rounds
-            state, versions, data, rounds, done = run_rounds(
+            state, versions, data, rounds, done, tele = run_rounds(
                 self.state, node_id, line, is_write, wdata,
                 n_nodes=self.n_nodes, max_rounds=mr,
                 backend=self.backend)
-            stats = {}
         if not bool(done):
             raise RuntimeError(f"ops not served after {mr} rounds")
         self.state = state
+        telemetry = self._telemetry(tele)
+        self._span_end("ops", mark, batch=(r,), rounds=int(rounds),
+                       telemetry=telemetry)
         return PlaneResult(np.asarray(versions)[:r],
-                           np.asarray(data)[:r], int(rounds), stats)
+                           np.asarray(data)[:r], int(rounds), {},
+                           telemetry)
 
     def rmw(self, node_id, line, *, modify, operands=(),
             max_rounds: int | None = None) -> PlaneResult:
@@ -209,6 +262,7 @@ class DevicePlane:
         alongside the slots)."""
         mr = self.max_rounds if max_rounds is None else max_rounds
         r = np.asarray(line).shape[0]
+        mark = self._span_begin()
         if self.sharded:
             from .sharded import pad_ops, run_rmw_sharded
             node_id, line, _ = pad_ops(node_id, line,
@@ -227,20 +281,22 @@ class DevicePlane:
                 modify=modify, mesh=self.mesh, axis=self.axis,
                 n_nodes=self.n_nodes, max_rounds=mr,
                 bucket_cap=self.bucket_cap, backend=self.backend)
-            stats = self._tele_stats(tele)
         else:
             from .driver import run_rmw
-            state, versions, data, rounds, done = run_rmw(
+            state, versions, data, rounds, done, tele = run_rmw(
                 self.state, node_id, line, tuple(operands),
                 modify=modify, n_nodes=self.n_nodes, max_rounds=mr,
                 backend=self.backend)
-            stats = {}
         if not bool(done):
             raise RuntimeError(f"RMW ops not served after {mr} "
                                f"rounds per phase")
         self.state = state
+        telemetry = self._telemetry(tele)
+        self._span_end("rmw", mark, batch=(r,), rounds=int(rounds),
+                       telemetry=telemetry)
         return PlaneResult(np.asarray(versions)[:r],
-                           np.asarray(data)[:r], int(rounds), stats)
+                           np.asarray(data)[:r], int(rounds), {},
+                           telemetry)
 
     def descent(self, node_id, key, root, *, transition,
                 path_cap: int = 16,
@@ -251,6 +307,7 @@ class DevicePlane:
         ``levels``, ``hops``, ``paths``, ``path_len``."""
         ms = self.max_rounds if max_steps is None else max_steps
         r = np.asarray(root).shape[0]
+        mark = self._span_begin()
         if self.sharded:
             from .sharded import pad_ops, run_descent_sharded
             node_id, root, key = pad_ops(node_id, root, key,
@@ -262,27 +319,28 @@ class DevicePlane:
                     axis=self.axis, n_nodes=self.n_nodes, max_steps=ms,
                     bucket_cap=self.bucket_cap, backend=self.backend,
                     path_cap=path_cap)
-            stats = self._tele_stats(tele)
         else:
             from .descent import run_descent
-            state, line, lanes, levels, hops, paths, plen, steps, done \
-                = run_descent(
+            (state, line, lanes, levels, hops, paths, plen, steps,
+             done, tele) = run_descent(
                     self.state, node_id, key, root,
                     transition=transition, n_nodes=self.n_nodes,
                     max_steps=ms, backend=self.backend,
                     path_cap=path_cap)
-            stats = {}
         if not bool(done):
             raise RuntimeError(f"descent did not settle after {ms} "
                                f"steps (broken links?)")
         self.state = state
-        stats.update({"line": np.asarray(line)[:r],
-                      "levels": np.asarray(levels)[:r],
-                      "hops": np.asarray(hops)[:r],
-                      "paths": np.asarray(paths)[:r],
-                      "path_len": np.asarray(plen)[:r]})
+        stats = {"line": np.asarray(line)[:r],
+                 "levels": np.asarray(levels)[:r],
+                 "hops": np.asarray(hops)[:r],
+                 "paths": np.asarray(paths)[:r],
+                 "path_len": np.asarray(plen)[:r]}
+        telemetry = self._telemetry(tele)
+        self._span_end("descent", mark, batch=(r,), rounds=int(steps),
+                       telemetry=telemetry)
         return PlaneResult(None, np.asarray(lanes)[:r], int(steps),
-                           stats=stats)
+                           stats=stats, telemetry=telemetry)
 
     def txn(self, node_id, glines, rmask, wmask, ts, *, algo: str,
             max_iters: int | None = None,
@@ -290,13 +348,21 @@ class DevicePlane:
         """Run one transaction batch through the fused device CC loop
         (:mod:`repro.core.rounds.txn`); returns a ``TxnBatchResult``."""
         from .txn import run_txn_batch
-        return run_txn_batch(self, node_id, glines, rmask, wmask, ts,
-                             algo=algo, max_iters=max_iters,
-                             max_rounds=max_rounds)
+        mark = self._span_begin()
+        res = run_txn_batch(self, node_id, glines, rmask, wmask, ts,
+                            algo=algo, max_iters=max_iters,
+                            max_rounds=max_rounds)
+        self._span_end("txn", mark,
+                       batch=tuple(np.asarray(glines).shape),
+                       rounds=res.rounds, telemetry=res.telemetry,
+                       attrs={"algo": algo})
+        return res
 
     def evict(self, node_id, line) -> None:
         """Evict (node, line) pairs: release holder latches, flushing
         dirty write-back copies first."""
+        r = np.asarray(line).shape[0]
+        mark = self._span_begin()
         if self.sharded:
             from .sharded import evict_lines_sharded, pad_ops
             node_id, line, _ = pad_ops(
@@ -308,6 +374,7 @@ class DevicePlane:
         else:
             from .engine import evict_lines
             self.state = evict_lines(self.state, node_id, line)
+        self._span_end("evict", mark, batch=(r,))
 
     # -------------------------------------------------------- placement
     def rehome(self, lines, new_homes, victims=None) -> int:

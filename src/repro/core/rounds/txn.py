@@ -67,7 +67,7 @@ distribution, so decisions match the flat plane exactly.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +76,7 @@ from jax.sharding import PartitionSpec as P
 
 from ...compat import shard_map
 from .. import coherence as co
-from .driver import run_rounds
+from .driver import add_tele, run_rounds, zero_flat_tele
 from .engine import _note_trace
 from .sharded import _add_tele, _route_round, _state_specs, _zero_tele
 from .state import payload_width
@@ -150,11 +150,13 @@ def run_txn_rounds(state, node_id, glines, rmask, wmask, ts, *,
     """Run a whole transaction batch to completion in ONE jit call.
 
     Returns ``(state', decision[B], exec_step[B], retries[B], iters,
-    all_done, spins_ok, rounds)`` — all device values.  ``decision`` is
-    commit (True) / abort (False); ``exec_step`` the iteration a txn
-    completed at (its place in the serial order); ``retries`` its
-    no-wait restarts; ``spins_ok`` False means an inner coherence spin
-    hit ``max_rounds`` (results invalid — raise host-side)."""
+    all_done, spins_ok, rounds, telemetry)`` — all device values.
+    ``decision`` is commit (True) / abort (False); ``exec_step`` the
+    iteration a txn completed at (its place in the serial order);
+    ``retries`` its no-wait restarts; ``spins_ok`` False means an inner
+    coherence spin hit ``max_rounds`` (results invalid — raise
+    host-side); ``telemetry`` is the flat counter dict summed over
+    every spin of the batch (``driver.zero_flat_tele`` keys)."""
     co.check_node_capacity(n_nodes)
     node_id = jnp.asarray(node_id, jnp.int32)
     glines = jnp.asarray(glines, jnp.int32)
@@ -173,17 +175,18 @@ def run_txn_rounds(state, node_id, glines, rmask, wmask, ts, *,
     g_idx = jnp.arange(G, dtype=jnp.int32)[None, :]
 
     def spin(stt, nodes, lines, is_write, wdata):
-        stt, _, data, r, ok = run_rounds(
+        stt, _, data, r, ok, tl = run_rounds(
             stt, nodes, lines, is_write, wdata, n_nodes=n_nodes,
             max_rounds=max_rounds, backend=backend)
-        return stt, data, r, ok
+        return stt, data, r, ok, tl
 
     def cond(carry):
-        _, _, done, _, _, _, _, it, ok, _ = carry
+        _, _, done, _, _, _, _, it, ok, _, _ = carry
         return ~jnp.all(done) & (it < max_iters) & ok
 
     def body(carry):
-        stt, k, done, dec, estep, retr, lanes, it, ok, rounds = carry
+        (stt, k, done, dec, estep, retr, lanes, it, ok, rounds,
+         tele) = carry
         live = ~done
         kc = jnp.minimum(k, G - 1)
         has_next = live & (k < nv)
@@ -196,8 +199,8 @@ def run_txn_rounds(state, node_id, glines, rmask, wmask, ts, *,
         winner = has_next & ~loser
         # READ spin: lock word == 0 at read time means acquired
         lines_r = jnp.where(winner, want, -1)
-        stt, rdata, r1, ok1 = spin(stt, node_id, lines_r,
-                                   jnp.zeros_like(lines_r), None)
+        stt, rdata, r1, ok1, t1 = spin(stt, node_id, lines_r,
+                                       jnp.zeros_like(lines_r), None)
         got = winner & (rdata[:, LOCK_LANE] == 0)
         failed = has_next & ~got
         # carry the freshly-read lanes at position k (immutable while
@@ -207,8 +210,8 @@ def run_txn_rounds(state, node_id, glines, rmask, wmask, ts, *,
         # ACQUIRE spin: publish the lock word
         wlock = rdata.at[:, LOCK_LANE].set(slot + 1)
         lines_a = jnp.where(got, want, -1)
-        stt, _, r2, ok2 = spin(stt, node_id, lines_a,
-                               jnp.ones_like(lines_a), wlock)
+        stt, _, r2, ok2, t2 = spin(stt, node_id, lines_a,
+                                   jnp.ones_like(lines_a), wlock)
         k2 = k + got.astype(jnp.int32)
         complete = live & (k2 >= nv)
         decision_new, new_lanes = apply_fn(lanes, glines, rmask,
@@ -220,22 +223,25 @@ def run_txn_rounds(state, node_id, glines, rmask, wmask, ts, *,
         fdata = jnp.where(fin_c[:, :, None], new_lanes, lanes)
         fdata = fdata.at[:, :, LOCK_LANE].set(0)
         flines = jnp.where(fin_c | fin_f, glines, -1).reshape(B * G)
-        stt, _, r3, ok3 = spin(stt, node_rep, flines,
-                               jnp.ones_like(flines),
-                               fdata.reshape(B * G, W))
+        stt, _, r3, ok3, t3 = spin(stt, node_rep, flines,
+                                   jnp.ones_like(flines),
+                                   fdata.reshape(B * G, W))
         return (stt, jnp.where(failed, 0, k2), done | complete,
                 jnp.where(complete, decision_new, dec),
                 jnp.where(complete, it, estep),
                 retr + failed.astype(jnp.int32), lanes, it + 1,
-                ok & ok1 & ok2 & ok3, rounds + r1 + r2 + r3)
+                ok & ok1 & ok2 & ok3, rounds + r1 + r2 + r3,
+                add_tele(tele, add_tele(t1, add_tele(t2, t3))))
 
     init = (state, jnp.zeros(B, jnp.int32), nv < 0,
             jnp.zeros(B, bool), jnp.zeros(B, jnp.int32),
             jnp.zeros(B, jnp.int32), jnp.zeros((B, G, W), jnp.int32),
-            jnp.int32(0), jnp.bool_(True), jnp.int32(0))
-    state, _, done, dec, estep, retr, _, it, ok, rounds = \
+            jnp.int32(0), jnp.bool_(True), jnp.int32(0),
+            zero_flat_tele(state["words"].shape[0]))
+    state, _, done, dec, estep, retr, _, it, ok, rounds, tele = \
         jax.lax.while_loop(cond, body, init)
-    return (state, dec, estep, retr, it, jnp.all(done), ok, rounds)
+    return (state, dec, estep, retr, it, jnp.all(done), ok, rounds,
+            tele)
 
 
 # ---------------------------------------------------- the sharded driver
@@ -421,16 +427,18 @@ class TxnBatchResult:
     scheduler iteration each txn completed at — its position in the
     serial order), ``retries`` int [B] (no-wait restarts), ``iters``
     total scheduler iterations, ``rounds`` total coherence rounds
-    across all spins.  ``stats`` carries the congestion-telemetry
-    counters on sharded planes (same keys as ``PlaneResult.stats``,
-    summed over every spin of the batch); ``{}`` on flat planes."""
+    across all spins.  ``telemetry`` is the unified
+    :class:`~repro.obs.PlaneTelemetry` record summed over every spin
+    of the batch — populated on flat AND sharded planes (the host
+    reference :func:`run_txn_batch_host` leaves it None; its per-phase
+    ``plane.ops`` dispatches each carry their own)."""
 
     decision: np.ndarray
     exec_step: np.ndarray
     retries: np.ndarray
     iters: int
     rounds: int
-    stats: dict = field(default_factory=dict)
+    telemetry: "PlaneTelemetry | None" = None
 
 
 def run_txn_batch(plane, node_id, glines, rmask, wmask, ts, *,
@@ -482,14 +490,13 @@ def run_txn_batch(plane, node_id, glines, rmask, wmask, ts, *,
                 algo=algo, mesh=plane.mesh, axis=plane.axis,
                 n_nodes=plane.n_nodes, max_rounds=mr, max_iters=mi,
                 bucket_cap=plane.bucket_cap, backend=plane.backend)
-        stats = plane._tele_stats(tele)
     else:
-        state, dec, estep, retr, it, alldone, ok, rounds = \
+        state, dec, estep, retr, it, alldone, ok, rounds, tele = \
             run_txn_rounds(
                 plane.state, node_id, glines, rmask, wmask, ts,
                 algo=algo, n_nodes=plane.n_nodes, max_rounds=mr,
                 max_iters=mi, backend=plane.backend)
-        stats = {}
+    telemetry = plane._telemetry(tele)
     if not bool(ok):
         raise RuntimeError(
             f"txn coherence spin hit max_rounds={mr}")
@@ -500,7 +507,7 @@ def run_txn_batch(plane, node_id, glines, rmask, wmask, ts, *,
     plane.state = state
     return TxnBatchResult(np.asarray(dec)[:B], np.asarray(estep)[:B],
                           np.asarray(retr)[:B], int(it), int(rounds),
-                          stats)
+                          telemetry)
 
 
 def _apply_host_one(algo, lanes, glines, rmask, wmask, ts):

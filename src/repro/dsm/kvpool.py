@@ -415,7 +415,8 @@ class SELCCKVPool:
                                  write_back=write_back)
 
     # ----------------------------------------- rounds-backed serving plane
-    def open_rounds_plane(self, *, write_back: bool = False):
+    def open_rounds_plane(self, *, write_back: bool = False,
+                          recorder=None):
         """Switch this pool's read/append/attend paths onto the rounds
         engine's GCL payload plane: a coherence state whose lines are
         the pool's pages and whose ``mem_data`` payload lanes hold the
@@ -423,6 +424,8 @@ class SELCCKVPool:
         ``v_pages`` by bitcast).  On a mesh-backed pool the plane is
         the mesh-sharded engine (``home = page % n_shards``) and every
         read/append crosses it through the two per-round all_to_alls.
+        ``recorder`` optionally attaches an ``obs.FlightRecorder`` to
+        the plane (one span per fused append/read dispatch).
         Returns the state (also kept as ``self.rounds_state``)."""
         from ..core import rounds
         if self.rounds_state is not None:
@@ -443,7 +446,7 @@ class SELCCKVPool:
             state = rounds.shard_state(state, self.mesh, self.axis)
         self.rounds_plane = rounds.DevicePlane.open(
             state, self.mesh, axis=self.axis,
-            n_nodes=self.cfg.n_replicas)
+            n_nodes=self.cfg.n_replicas, recorder=recorder)
         return state
 
     def _plane_ops(self, node, line, isw, wdata):

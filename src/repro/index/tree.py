@@ -93,7 +93,8 @@ class DeviceBTree:
         self.root = -1
         self.height = 0
         self.stats = {"splits": 0, "link_hops": 0, "level_steps": 0,
-                      "rmw_steps": 0}
+                      "rmw_steps": 0, "descent_served": 0,
+                      "descent_deferred": 0}
 
     @property
     def state(self):
@@ -295,6 +296,10 @@ class DeviceBTree:
         self.stats["level_steps"] += \
             int((live_l + live_h).max(initial=-1) + 1)
         self.stats["link_hops"] += int(live_h.sum())
+        if res.telemetry is not None:
+            self.stats["descent_served"] += res.telemetry.served
+            self.stats["descent_deferred"] += \
+                res.telemetry.deferred_total
         if not record_path:
             return cur, lanes, []
         path_lists = [[int(x) for x in paths[i, :int(plen[i])]]

@@ -1,0 +1,34 @@
+"""repro.obs — the observability plane (flight recorder subsystem).
+
+SELCC's core claim is coherence with NO remote compute, so the compute
+side is the only place the system can be observed — and before this
+package that observation was fragmented: rich carry-accumulated
+counters on sharded verbs, ``{}`` on flat ones, and four incompatible
+ad-hoc stat dicts across the serving/txn/index layers.  ``repro.obs``
+unifies it:
+
+* :class:`PlaneTelemetry` — the typed per-dispatch counter record every
+  fused driver (flat AND sharded) now returns, diff-able bit-for-bit
+  between planes on the same op trace;
+* :class:`FlightRecorder` — a bounded span ring attached to
+  ``DevicePlane`` / ``ServeLoop``: one :class:`Span` per verb dispatch,
+  plus EWMA line/home heat for online placement;
+* :class:`MetricsRegistry` — counters / gauges /
+  :class:`StreamingHistogram` (log-bucketed p50/p99 without samples)
+  with Prometheus text exposition (``render_prom()``);
+* exporters — ``recorder.export_chrome_trace(path)`` (chrome://tracing
+  / Perfetto) and ``recorder.snapshot()`` (bench ``meta.telemetry``).
+
+The recorder is HOST-side only: it brackets dispatches, it never enters
+a trace, so ``engine.TRACE_COUNTS`` proves it adds zero compiled code.
+"""
+
+from .metrics import (Counter, EwmaHeat, Gauge, MetricsRegistry,
+                      StreamingHistogram)
+from .recorder import FlightRecorder, Span
+from .telemetry import PlaneTelemetry
+
+__all__ = [
+    "Counter", "EwmaHeat", "FlightRecorder", "Gauge",
+    "MetricsRegistry", "PlaneTelemetry", "Span", "StreamingHistogram",
+]

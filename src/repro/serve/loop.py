@@ -48,6 +48,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..obs import MetricsRegistry
 from .model import DecodeView
 from .request import QueueFull, RequestQueue, RequestState, ServeRequest
 from .slots import Phase, SlotManager
@@ -62,7 +63,11 @@ class ServeStats:
     Totals are cumulative since construction; ``appended_tokens`` counts
     real (non-padding) rows through the fused append, and
     ``last_rounds`` is the coherence-round count the tick's fused
-    ``run_rmw`` spun (0 on an idle tick)."""
+    ``run_rmw`` spun (0 on an idle tick).  ``queue_wait`` and ``tpot``
+    are streaming-histogram snapshots (count/sum/min/max/mean/p50/p90/
+    p99 dicts, None before any sample): submit→admit wall seconds per
+    request, and per-slot inter-token wall seconds (time per output
+    token, the serving-latency metric TTFT/TPOT dashboards plot)."""
     tick: int = 0
     queue_depth: int = 0
     active_slots: int = 0
@@ -78,6 +83,8 @@ class ServeStats:
     attend_calls: int = 0
     last_rounds: int = 0
     rounds_total: int = 0
+    queue_wait: dict | None = None
+    tpot: dict | None = None
 
 
 class ServeLoop:
@@ -87,7 +94,8 @@ class ServeLoop:
 
     def __init__(self, pool, model, *, n_slots: int = 8,
                  max_pages: int = 16, prefill_chunk: int = 8,
-                 queue_capacity: int = 64, on_complete=None):
+                 queue_capacity: int = 64, on_complete=None,
+                 recorder=None):
         if pool.rounds_plane is None:
             raise ValueError(
                 "ServeLoop serves the rounds plane: call "
@@ -106,6 +114,21 @@ class ServeLoop:
         self.queue = RequestQueue(queue_capacity)
         self.slots = SlotManager(pool, n_slots, max_pages)
         self.on_complete = on_complete
+        # observability: a recorder (optional) rides the pool's plane —
+        # every fused append/attend dispatch appends a span; the
+        # registry (always present) carries the serving histograms
+        self.recorder = recorder
+        if recorder is not None:
+            pool.rounds_plane.attach_recorder(recorder)
+        self.registry = (recorder.registry if recorder is not None
+                         else MetricsRegistry())
+        self._h_qwait = self.registry.histogram(
+            "serve_queue_wait_seconds",
+            "submit to admit wall time per request")
+        self._h_tpot = self.registry.histogram(
+            "serve_tpot_seconds",
+            "inter-token wall time per decoding slot")
+        self._last_emit: dict[int, float] = {}
         self._lock = threading.RLock()
         self._tick = 0
         self._admitted = self._completed = 0
@@ -164,6 +187,9 @@ class ServeLoop:
                     break                        # pool backpressure
                 self.slots.admit(self.queue.pop(), slot, t)
                 self._admitted += 1
+                if req.submit_time:
+                    self._h_qwait.observe(
+                        time.perf_counter() - req.submit_time)
 
             # ---- prefill rows (global per-tick token budget) ----------
             ps = self.pool.cfg.page_size
@@ -228,11 +254,16 @@ class ServeLoop:
                 self._appended += n_rows
 
             # ---- advance decode slots + emit tokens -------------------
+            emit_t = time.perf_counter()
             for slot, out in zip(dslots, outs):
                 slot.pos += 1
                 slot.pending = int(out.token)
                 slot.req.generated.append(int(out.token))
                 slot.stats_ticks += 1
+                prev = self._last_emit.get(slot.sid)
+                if prev is not None:
+                    self._h_tpot.observe(emit_t - prev)
+                self._last_emit[slot.sid] = emit_t
 
             # ---- ONE fused attend over the slot grid ------------------
             q_rows = [(s, o.q) for s, o in zip(dslots, outs)
@@ -258,6 +289,7 @@ class ServeLoop:
                     if self.on_complete is not None:
                         self.on_complete(slot.req, slot)
                     self.slots.release(slot, t)
+                    self._last_emit.pop(slot.sid, None)
                     self._completed += 1
 
             self._tick = t + 1
@@ -277,7 +309,17 @@ class ServeLoop:
                 appended_tokens=self._appended,
                 attend_calls=self._attends,
                 last_rounds=self._last_rounds,
-                rounds_total=self._rounds_total)
+                rounds_total=self._rounds_total,
+                queue_wait=(self._h_qwait.snapshot()
+                            if self._h_qwait.count else None),
+                tpot=(self._h_tpot.snapshot()
+                      if self._h_tpot.count else None))
+
+    def render_prom(self) -> str:
+        """Prometheus text exposition of the loop's registry (serving
+        histograms plus, with a recorder attached, the plane's
+        dispatch/round/compile metrics — they share one registry)."""
+        return self.registry.render_prom()
 
     # -------------------------------------------------- background loop
     def start(self) -> None:

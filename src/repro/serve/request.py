@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import enum
 import threading
+import time
 from dataclasses import dataclass, field
 
 
@@ -54,6 +55,7 @@ class ServeRequest:
     submit_tick: int = -1
     admit_tick: int = -1
     done_tick: int = -1
+    submit_time: float = 0.0         # perf_counter at submit (obs)
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -110,6 +112,7 @@ class RequestQueue:
             self._next_rid += 1
             req.state = RequestState.QUEUED
             req.submit_tick = tick
+            req.submit_time = time.perf_counter()
             self._q.append(req)
             return req
 

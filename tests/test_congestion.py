@@ -61,7 +61,7 @@ def test_hot_home_overflow_reports_telemetry():
                                 max_rounds=128)
     res = plane.ops(_i32(0, 1, 0, 1), _i32(0, 0, 1, 1),
                     _i32(1, 1, 1, 1))
-    s = res.stats
+    s = res.telemetry
     assert sorted(s) == ["deferred", "line_hits", "line_whits",
                          "occupancy", "replica_served",
                          "served_per_home"]
@@ -76,8 +76,8 @@ def test_hot_home_overflow_reports_telemetry():
     plane.check()
     # reads don't count as write hits
     res = plane.ops(_i32(0, 1), _i32(2, 3), _i32(0, 0))
-    assert res.stats["line_hits"].tolist() == [0, 0, 1, 1, 0, 0, 0, 0]
-    assert int(res.stats["line_whits"].sum()) == 0
+    assert res.telemetry["line_hits"].tolist() == [0, 0, 1, 1, 0, 0, 0, 0]
+    assert int(res.telemetry["line_whits"].sum()) == 0
 
 
 def test_txn_batch_carries_telemetry():
@@ -91,8 +91,8 @@ def test_txn_batch_carries_telemetry():
                     np.ones((2, 1, 1), np.int32), _i32(1, 2),
                     algo="2pl")
     assert out.decision.all()
-    assert int(out.stats["served_per_home"].sum()) > 0
-    assert out.stats["line_hits"].shape == (4,)
+    assert int(out.telemetry["served_per_home"].sum()) > 0
+    assert out.telemetry["line_hits"].shape == (4,)
 
 
 # ------------------------------------------------------- re-homing
@@ -189,11 +189,11 @@ def test_replicated_line_serves_locally_and_invalidates_on_write():
     plane.replicate([0])
     assert bool(np.asarray(plane.state["replica_ok"])[0])
     res = plane.ops(_i32(1, 2), _i32(0, 0), _i32(0, 0))
-    assert int(res.stats["replica_served"].sum()) == 2
+    assert int(res.telemetry["replica_served"].sum()) == 2
     assert res.version.tolist() == [1, 1]
     assert res.data[:, 0].tolist() == [7, 7]
     # replica-served reads never hit the home slot
-    assert int(res.stats["line_hits"].sum()) == 0
+    assert int(res.telemetry["line_hits"].sum()) == 0
     plane.check()
     # a granted write invalidates through the normal MSI path
     res = plane.ops(_i32(1), _i32(0), _i32(1), np.asarray([[8]],
@@ -207,18 +207,18 @@ def test_replicated_line_serves_locally_and_invalidates_on_write():
     res = plane.ops(_i32(2, 0), _i32(0, 0), _i32(0, 0))
     assert res.version.tolist() == [2, 2]
     assert res.data[:, 0].tolist() == [8, 8]
-    assert int(res.stats["replica_served"].sum()) == 0
+    assert int(res.telemetry["replica_served"].sum()) == 0
     assert bool(np.asarray(plane.state["replica_ok"])[0])
     res = plane.ops(_i32(2), _i32(0), _i32(0))
     assert res.version.tolist() == [2]
     assert res.data[:, 0].tolist() == [8]
-    assert int(res.stats["replica_served"].sum()) == 1
+    assert int(res.telemetry["replica_served"].sum()) == 1
     plane.check()
     # replicate(enable=False) drops the mark: reads route again
     plane.replicate([0], enable=False)
     res = plane.ops(_i32(1), _i32(0), _i32(0))
-    assert int(res.stats["replica_served"].sum()) == 0
-    assert int(res.stats["line_hits"].sum()) == 1
+    assert int(res.telemetry["replica_served"].sum()) == 0
+    assert int(res.telemetry["line_hits"].sum()) == 1
     plane.check()
 
 
@@ -281,7 +281,7 @@ def test_rehome_differential_subprocess():
                     write_back, b)
                 assert rf.data.tolist() == rs.data.tolist(), (
                     write_back, b)
-                hits += rs.stats["line_hits"].astype(np.int64)
+                hits += rs.telemetry["line_hits"].astype(np.int64)
                 shd.check()
                 if b == 2:
                     # migrate the observed-hottest lines mid-stream
@@ -315,7 +315,7 @@ def test_rehome_differential_subprocess():
         node = np.asarray([i % 4 for i in range(R)], np.int32)
         line = np.zeros(R, np.int32)       # all home shard 0
         res = plane.ops(node, line, np.ones(R, np.int32))
-        s = res.stats
+        s = res.telemetry
         assert s["deferred"].shape == (4, 4)
         assert int(s["deferred"][:, 0].sum()) > 0
         assert int(s["deferred"][:, 1:].sum()) == 0
@@ -339,7 +339,7 @@ def test_rehome_differential_subprocess():
                         np.zeros(3, np.int32), np.zeros(3, np.int32))
         assert res.version.tolist() == [1, 1, 1]
         assert res.data[:, 0].tolist() == [41, 41, 41]
-        assert int(res.stats["replica_served"].sum()) == 3
+        assert int(res.telemetry["replica_served"].sum()) == 3
         plane.check()
         res = plane.ops(np.asarray([2], np.int32),
                         np.asarray([0], np.int32),
@@ -360,7 +360,7 @@ def test_rehome_differential_subprocess():
         res = plane.ops(np.asarray([1], np.int32),
                         np.zeros(1, np.int32), np.zeros(1, np.int32))
         assert res.version.tolist() == [2]
-        assert int(res.stats["replica_served"].sum()) == 1
+        assert int(res.telemetry["replica_served"].sum()) == 1
         plane.check()
         print("CONGESTION_PARITY_OK")
     """)

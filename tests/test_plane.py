@@ -38,6 +38,12 @@ def test_ops_returns_plane_result_and_owns_state():
     assert res.version.shape == (2,)
     assert res.data.shape == (2, 0)      # version-only plane: W == 0
     assert res.rounds >= 1 and res.stats == {}
+    # flat verbs carry typed telemetry now (no sharded-only guard)
+    assert isinstance(res.telemetry, rp.PlaneTelemetry)
+    assert res.telemetry.n_shards == 1
+    assert res.telemetry.served == 2
+    assert res.telemetry.line_hits.tolist() == [1, 1, 0, 0]
+    assert res.telemetry.line_whits.tolist() == [1, 0, 0, 0]
     assert res.version.tolist() == [1, 0]
     plane.check()
     assert "flat" in repr(plane)

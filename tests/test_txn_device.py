@@ -130,7 +130,7 @@ def test_txn_stats_reasons_and_percentiles():
     assert s.commits == int(res.decision.sum())
     assert s.abort_reasons.get("ts", 0) == int((~res.decision).sum())
     assert s.abort_reasons.get("nowait", 0) == int(res.retries.sum())
-    assert len(s.latencies) == len(txns)
+    assert s.latency.count == len(txns)
     assert 0 < s.p50 <= s.p99
 
 
